@@ -1,0 +1,98 @@
+"""Shared harness for the paper-figure benchmarks (CPU-scale reruns of the
+paper's experiments on synthetic data — see DESIGN.md §6)."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.baselines import make_policy
+from repro.core.scheduler import constant_schedule, solve
+from repro.core.types import AnalysisConfig
+from repro.data.synthetic import make_image_dataset
+from repro.fl.partition import dirichlet_partition, iid_partition, stack_clients
+from repro.fl.server import run_federated
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "results")
+
+
+def save_result(name: str, payload: dict) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def cached_result(name: str) -> dict | None:
+    """Return a previously saved result unless REPRO_BENCH_FORCE is set.
+
+    The heavy CIFAR suites take ~1 h on this 1-core container; the final
+    ``benchmarks.run`` pass reuses the recorded JSONs (stdout marks them
+    [cached]) — set REPRO_BENCH_FORCE=1 to recompute everything.
+    """
+    if os.environ.get("REPRO_BENCH_FORCE"):
+        return None
+    path = os.path.join(OUT_DIR, f"{name}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        res = json.load(f)
+    print(f"[{name}] [cached] loaded {path} "
+          f"(REPRO_BENCH_FORCE=1 to recompute)")
+    return res
+
+
+def setup_fl(kind: str, model, *, U: int, R: int, T_max: float,
+             eta0: float = 0.5, eta_decay: float = 1.0,
+             alpha: float | None = 0.5,
+             n_train: int = 2000, n_test: int = 500, seed: int = 0,
+             depth_frac: float = 0.5):
+    """Build data + AnalysisConfig. ``depth_frac`` calibrates T_max/R so the
+    average backprop depth is that fraction of L (paper §IV-A/IV-B)."""
+    x_tr, y_tr, x_te, y_te = make_image_dataset(
+        kind, n_train=n_train, n_test=n_test, seed=seed, noise_std=1.0)
+    if alpha is None:
+        parts = iid_partition(len(y_tr), U, seed=seed)
+    else:
+        parts = dirichlet_partition(y_tr, U, alpha=alpha, seed=seed)
+    cx, cy, counts = stack_clients(x_tr, y_tr, parts)
+    cfg = AnalysisConfig.default(U=U, L=model.L, R=R, T_max=T_max,
+                                 eta0=eta0, eta_decay=eta_decay, seed=seed)
+    return cfg, (jnp.asarray(cx), jnp.asarray(cy), jnp.asarray(counts),
+                 jnp.asarray(x_te), jnp.asarray(y_te))
+
+
+def run_methods(model, cfg, data, methods, *, seed: int = 0,
+                local_iters: int = 1, l2: float = 0.0,
+                eta: np.ndarray | None = None, solver: str = "adam",
+                eval_every: int = 2, verbose: bool = False):
+    cx, cy, counts, x_te, y_te = data
+    out = {}
+    schedule = None
+    for method in methods:
+        t0 = time.time()
+        if method == "adel" and schedule is None:
+            schedule = solve(cfg, solver, **({"steps": 1200}
+                                             if solver == "adam" else {}))
+        policy = make_policy(method, cfg,
+                             schedule=schedule if method == "adel" else None)
+        _, hist = run_federated(model, policy, cfg, cx, cy, counts, x_te,
+                                y_te, key=jax.random.PRNGKey(seed),
+                                local_iters=local_iters, l2=l2, eta=eta,
+                                eval_every=eval_every, verbose=verbose)
+        d = hist.as_dict()
+        d["wall_s"] = time.time() - t0
+        if method == "adel":
+            d["schedule_T"] = schedule.T.tolist()
+            d["schedule_m"] = schedule.m
+        out[method] = d
+        print(f"  [{method:9s}] rounds={d['rounds'][-1] if d['rounds'] else 0}"
+              f"  final_acc={d['accuracy'][-1] if d['accuracy'] else 0:.4f}"
+              f"  wall={d['wall_s']:.1f}s")
+    return out

@@ -1,0 +1,35 @@
+"""Fig. 2 — MNIST-like MLP + CNN: adaptive deadline allocation (a, c) and
+convergence vs baselines (b), inverse-decay LR, avg depth ~50%."""
+from __future__ import annotations
+
+from benchmarks.common import (cached_result, run_methods, save_result,
+                               setup_fl)
+from repro.models.paper_models import make_cnn, make_mlp
+
+METHODS = ["adel", "salf", "drop", "wait", "heterofl"]
+
+
+def run(quick: bool = False) -> dict:
+    cached = cached_result("fig2_mnist")
+    if cached is not None:
+        return cached
+    R = 20 if quick else 40
+    U = 8 if quick else 10
+    result = {}
+    for arch, make, eta0 in [("mlp", make_mlp, 2.0), ("cnn", make_cnn, 0.3)]:
+        if quick and arch == "cnn":
+            continue
+        model = make()
+        # T_max/R tuned so T/m ~ L/2: avg backprop depth ~50% of layers
+        cfg, data = setup_fl("mnist", model, U=U, R=R,
+                             T_max=R * model.L * 0.5, alpha=0.5, eta0=eta0,
+                             n_train=1200 if quick else 2500,
+                             n_test=400 if quick else 800)
+        print(f"[fig2] {arch}: U={U} R={R} T_max={cfg.T_max}")
+        result[arch] = run_methods(model, cfg, data, METHODS)
+    save_result("fig2_mnist", result)
+    return result
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Fig. 3 — CIFAR-like VGG11/VGG13, Dirichlet(0.5) non-IID: deadline
+allocation + convergence. Widths reduced for the CPU container
+(DESIGN.md §6); avg depth ~85% of the model per round (paper §IV-B)."""
+from __future__ import annotations
+
+from benchmarks.common import (cached_result, run_methods, save_result,
+                               setup_fl)
+from repro.models.paper_models import make_vgg
+
+METHODS = ["adel", "salf", "drop", "wait"]
+
+
+def run(quick: bool = False) -> dict:
+    cached = cached_result("fig3_cifar")
+    if cached is not None:
+        return cached
+    # CPU-budget adaptation (EXPERIMENTS.md §Repro): width 0.125, ~100
+    # rounds with the slow inverse decay eta_t = 0.05/(1+0.02 t) — plain
+    # eta0/(1+t) cannot train an 11-layer conv net in <=30 rounds at any
+    # stable eta0 (the paper's A30 runs use far more rounds).
+    R = 40 if quick else 90
+    U = 8 if quick else 10
+    result = {}
+    depths = [11] if quick else [11, 13]
+    for depth in depths:
+        model = make_vgg(depth, width_scale=0.125)
+        # calibrate so T/m ~ 0.85 L (clients nearly complete a pass)
+        cfg, data = setup_fl("cifar", model, U=U, R=R,
+                             T_max=R * model.L * 0.85, alpha=0.5,
+                             eta0=0.05, eta_decay=0.02,
+                             n_train=800 if quick else 1200,
+                             n_test=300 if quick else 400)
+        print(f"[fig3] vgg{depth}: U={U} R={R} T_max={cfg.T_max}")
+        result[f"vgg{depth}"] = run_methods(model, cfg, data, METHODS,
+                                            eval_every=10)
+    save_result("fig3_cifar", result)
+    return result
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Fig. 4 — robustness to violated assumptions (CIFAR-like VGG11):
+(a) l2 regularization, (b) constant learning rate, (c) E=3, (d) E=5."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (cached_result, run_methods, save_result,
+                               setup_fl)
+from repro.models.paper_models import make_vgg
+
+METHODS = ["adel", "salf", "drop", "wait"]
+
+
+def run(quick: bool = False) -> dict:
+    cached = cached_result("fig4_robustness")
+    if cached is not None:
+        return cached
+    R = 30 if quick else 60
+    U = 8 if quick else 10
+    model = make_vgg(11, width_scale=0.125)
+    cfg, data = setup_fl("cifar", model, U=U, R=R, T_max=R * model.L * 0.85,
+                         alpha=0.5, eta0=0.05, eta_decay=0.02,
+                         n_train=800 if quick else 1000,
+                         n_test=300 if quick else 400)
+    variants = {
+        "l2_reg": dict(l2=1e-4),
+        "const_lr": dict(eta=np.full(R, 0.04, np.float32)),
+        "E3": dict(local_iters=3),
+        "E5": dict(local_iters=5),
+    }
+    if quick:
+        variants = {k: variants[k] for k in ["const_lr", "E3"]}
+    result = {}
+    for name, kw in variants.items():
+        print(f"[fig4] variant {name}")
+        result[name] = run_methods(model, cfg, data, METHODS,
+                                   eval_every=10, **kw)
+    save_result("fig4_robustness", result)
+    return result
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,124 @@
+"""Render EXPERIMENTS.md tables from experiments/*.json records.
+
+    PYTHONPATH=src python -m benchmarks.report [--section dryrun|roofline|repro]
+
+Prints GitHub-flavored markdown; EXPERIMENTS.md embeds the output.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import ARCHS
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "experiments")
+
+
+def _load_dryrun():
+    recs = []
+    for d in ("dryrun", "dryrun_multipod"):
+        for fn in sorted(glob.glob(os.path.join(RESULTS, d, "*.json"))):
+            with open(fn) as f:
+                recs.append(json.load(f))
+    return recs
+
+
+def _fmt_bytes(b):
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PiB"
+
+
+def section_dryrun() -> str:
+    rows = ["| arch | shape | mesh | step | compile_s | bytes/dev (args+tmp) | HLO flops/dev | coll bytes/dev |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in _load_dryrun():
+        if "error" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | {r.get('mesh','?')} "
+                        f"| SKIP | — | {r['error'][:60]} | | |")
+            continue
+        mem = r.get("memory", {})
+        args_b = mem.get("argument_size_in_bytes", 0)
+        tmp_b = mem.get("temp_size_in_bytes", 0)
+        coll = r.get("collective_bytes_per_device_total")
+        if coll is None:
+            coll = r["collective_bytes_per_device"]["total"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['step']} "
+            f"| {r['compile_s']} | {_fmt_bytes(args_b)}+{_fmt_bytes(tmp_b)} "
+            f"| {r['flops_per_device']:.3g} | {coll:.3g} |")
+    return "\n".join(rows)
+
+
+def section_roofline() -> str:
+    from benchmarks.roofline import table
+    rows = table()
+    out = ["| arch | shape | mesh | compute_s | memory_s | collective_s "
+           "| dominant | model TFLOPs | useful % | bound step_s |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["mesh"], r["arch"], r["shape"])):
+        if "error" in r:
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | {r['dominant'].removesuffix('_s')} "
+            f"| {r['model_flops'] / 1e12:.1f} | {100 * r['useful_ratio']:.1f} "
+            f"| {r['step_s_bound']:.3e} |")
+    return "\n".join(out)
+
+
+def section_repro() -> str:
+    out = []
+    for name in ("fig2_mnist", "fig3_cifar", "fig4_robustness",
+                 "table2_budgets"):
+        fn = os.path.join(RESULTS, "results", f"{name}.json")
+        if not os.path.exists(fn):
+            continue
+        with open(fn) as f:
+            res = json.load(f)
+        out.append(f"### {name}\n")
+        out.append("| setting | " + " | ".join(
+            ["adel", "salf", "drop", "wait", "heterofl"]) + " |")
+        out.append("|---|---|---|---|---|---|")
+        for setting, methods in res.items():
+            if not isinstance(methods, dict):
+                continue
+            cells = []
+            for m in ("adel", "salf", "drop", "wait", "heterofl"):
+                d = methods.get(m)
+                if isinstance(d, dict) and d.get("accuracy"):
+                    cells.append(f"{d['accuracy'][-1]:.3f}")
+                elif isinstance(d, dict) and "final_acc" in d:
+                    cells.append(f"{d['final_acc']:.3f}")
+                else:
+                    cells.append("—")
+            out.append(f"| {setting} | " + " | ".join(cells) + " |")
+        out.append("")
+    return "\n".join(out)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--section", default="all",
+                    choices=["all", "dryrun", "roofline", "repro"])
+    args = ap.parse_args(argv)
+    if args.section in ("all", "dryrun"):
+        print("## Dry-run records\n")
+        print(section_dryrun())
+        print()
+    if args.section in ("all", "roofline"):
+        print("## Roofline\n")
+        print(section_roofline())
+        print()
+    if args.section in ("all", "repro"):
+        print("## Reproduction results\n")
+        print(section_repro())
+
+
+if __name__ == "__main__":
+    main()

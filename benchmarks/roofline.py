@@ -1,0 +1,99 @@
+"""Roofline analysis: read the dry-run records (experiments/dryrun*/) and
+emit the per-(arch x shape x mesh) three-term roofline table, dominant
+bottleneck, MODEL_FLOPS = 6 N D (dense) / 6 N_active D (MoE), and the
+useful-compute ratio MODEL_FLOPS / HLO_FLOPS.
+
+HLO terms from ``compiled.cost_analysis()`` are PER-DEVICE after SPMD
+partitioning, so each term is directly a per-chip seconds estimate:
+
+    compute_s    = flops_per_device / 197e12      (bf16 peak)
+    memory_s     = bytes_per_device / 819e9       (HBM)
+    collective_s = coll_bytes_per_device / 50e9   (ICI per-link)
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import ARCHS, INPUT_SHAPES
+
+DRYRUN_DIRS = ["experiments/dryrun", "experiments/dryrun_multipod"]
+
+
+def model_flops(arch: str, shape_name: str, meta: dict, chips: int) -> float:
+    """Global useful model FLOPs for the lowered step."""
+    cfg = ARCHS[arch.removesuffix("-swa4096")] if arch not in ARCHS else ARCHS[arch]
+    n = cfg.active_param_count() - (cfg.padded_vocab * cfg.d_model *
+                                    (1 if cfg.tie_embeddings else 2))
+    shape = INPUT_SHAPES[shape_name]
+    if meta.get("step") == "train_step":
+        tokens = meta["U"] * meta["client_batch"] * meta["seq"]
+        return 6.0 * n * tokens
+    if meta.get("step") == "prefill_step":
+        tokens = meta["B"] * meta["seq"]
+        return 2.0 * n * tokens
+    # decode: one token per sequence + attention over the cache
+    tokens = meta["B"]
+    return 2.0 * n * tokens
+
+
+def load_records() -> list[dict]:
+    recs = []
+    for d in DRYRUN_DIRS:
+        for fn in sorted(glob.glob(os.path.join(d, "*.json"))):
+            with open(fn) as f:
+                recs.append(json.load(f))
+    return recs
+
+
+def table(recs: list[dict] | None = None) -> list[dict]:
+    recs = recs if recs is not None else load_records()
+    rows = []
+    for r in recs:
+        if "error" in r:
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mesh": r.get("mesh", "?"), "error": r["error"]})
+            continue
+        roof = r["roofline"]
+        mf = model_flops(r["arch"], r["shape"], r, r["chips"])
+        hlo_global = r["flops_per_device"] * r["chips"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "step": r.get("step", "?"),
+            "compute_s": roof["compute_s"], "memory_s": roof["memory_s"],
+            "collective_s": roof["collective_s"],
+            "dominant": roof["dominant"],
+            "model_flops": mf,
+            "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+            "step_s_bound": max(roof["compute_s"], roof["memory_s"],
+                                roof["collective_s"]),
+        })
+    return rows
+
+
+def run(quick: bool = False) -> dict:
+    rows = table()
+    if not rows:
+        print("[roofline] no dry-run records found — run "
+              "`python -m repro.launch.dryrun --all --out experiments/dryrun`")
+        return {"rows": []}
+    hdr = (f"{'arch':<22s} {'shape':<12s} {'mesh':<8s} {'compute_s':>10s} "
+           f"{'memory_s':>10s} {'collect_s':>10s} {'dominant':>12s} "
+           f"{'useful%':>8s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for row in sorted(rows, key=lambda r: (r["mesh"], r["arch"], r["shape"])):
+        if "error" in row:
+            print(f"{row['arch']:<22s} {row['shape']:<12s} "
+                  f"{row['mesh']:<8s} SKIP/FAIL: {row['error'][:60]}")
+            continue
+        print(f"{row['arch']:<22s} {row['shape']:<12s} {row['mesh']:<8s} "
+              f"{row['compute_s']:>10.3e} {row['memory_s']:>10.3e} "
+              f"{row['collective_s']:>10.3e} {row['dominant']:>12s} "
+              f"{100 * row['useful_ratio']:>7.1f}%")
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

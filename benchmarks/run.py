@@ -1,0 +1,82 @@
+"""Benchmark orchestrator — one entry per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig2_mnist]
+
+Prints a ``name,wall_s,derived`` CSV summary at the end.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced rounds/data for a fast pass")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    from benchmarks import (fig2_mnist, fig3_cifar, fig4_robustness,
+                            roofline, table2_budgets)
+    suites = {
+        "fig2_mnist": fig2_mnist.run,
+        "fig3_cifar": fig3_cifar.run,
+        "fig4_robustness": fig4_robustness.run,
+        "table2_budgets": table2_budgets.run,
+        "roofline": roofline.run,
+    }
+    if args.only:
+        suites = {args.only: suites[args.only]}
+
+    rows = []
+    for name, fn in suites.items():
+        print(f"\n===== {name} =====")
+        t0 = time.time()
+        result = fn(quick=args.quick)
+        wall = time.time() - t0
+        derived = _derive(name, result)
+        rows.append((name, wall, derived))
+
+    print("\nname,wall_s,derived")
+    for name, wall, derived in rows:
+        print(f"{name},{wall:.1f},{derived}")
+
+
+def _derive(name: str, result: dict) -> str:
+    try:
+        if name == "roofline":
+            rows = result["rows"]
+            ok = [r for r in rows if "error" not in r]
+            return f"{len(ok)}/{len(rows)} combos"
+        if name == "table2_budgets":
+            accs = []
+            for k, v in result.items():
+                if k.startswith("budget_") and "adel" in v:
+                    accs.append(f"{k.split('_')[1]}:"
+                                f"{v['adel']['final_acc']:.3f}")
+            return "adel " + " ".join(accs)
+        # figures: adel vs best baseline final accuracy
+        def final_acc(d):
+            if not isinstance(d, dict):
+                return None
+            if d.get("accuracy"):
+                return d["accuracy"][-1]
+            return d.get("final_acc")
+
+        pieces = []
+        for arch, methods in result.items():
+            if not isinstance(methods, dict) or "adel" not in methods:
+                continue
+            a = final_acc(methods["adel"])
+            bases = [final_acc(v) for k, v in methods.items() if k != "adel"]
+            bases = [b for b in bases if b is not None]
+            base = max(bases) if bases else float("nan")
+            pieces.append(f"{arch}:adel={a:.3f}/best_base={base:.3f}")
+        return " ".join(pieces)
+    except Exception as e:  # pragma: no cover
+        return f"derive_error:{e}"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Table II — final accuracy vs total training budget T_max (CIFAR-like
+VGG11, IID partition). The paper's budgets {1200..2400}s map to scaled
+per-round-depth-equivalent budgets on the synthetic task."""
+from __future__ import annotations
+
+from benchmarks.common import (cached_result, run_methods, save_result,
+                               setup_fl)
+from repro.models.paper_models import make_vgg
+
+METHODS = ["adel", "salf", "drop", "wait"]   # "wait" == FedAvg column
+
+
+def run(quick: bool = False) -> dict:
+    cached = cached_result("table2_budgets")
+    if cached is not None:
+        return cached
+    R = 30 if quick else 60
+    U = 8 if quick else 10
+    model = make_vgg(11, width_scale=0.125)
+    # paper budgets 1200/1600/2000/2400 s -> per-round depth ratios .5/.65/.8/1.
+    fracs = [0.5, 0.8] if quick else [0.5, 0.65, 0.8, 1.0]
+    result = {}
+    for frac in fracs:
+        T_max = R * model.L * frac
+        cfg, data = setup_fl("cifar", model, U=U, R=R, T_max=T_max,
+                             alpha=None, eta0=0.05, eta_decay=0.02,  # IID
+                             n_train=800 if quick else 1000,
+                             n_test=300 if quick else 400)
+        print(f"[table2] T_max={T_max:.0f} (depth frac {frac})")
+        rows = run_methods(model, cfg, data, METHODS, eval_every=10)
+        result[f"budget_{frac}"] = {
+            m: {"final_acc": (r["accuracy"][-1] if r["accuracy"] else 0.0)}
+            for m, r in rows.items()}
+        result[f"budget_{frac}"]["detail"] = rows
+    save_result("table2_budgets", result)
+    return result
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Explore the Problem-2 deadline/batch solution space (paper Fig. 2a/3a).
+
+Solves the ADEL-FL scheduling problem for several time budgets and
+heterogeneity spreads, and prints the resulting deadline profiles — showing
+the paper's headline qualitative result: deadlines DECREASE over rounds,
+tracking the decaying learning rate (early rounds buy straggler depth when
+updates matter most).
+
+Run:  PYTHONPATH=src python examples/schedule_explorer.py
+"""
+import numpy as np
+
+from repro.core.cost import b_term, c_term, theorem1_bound
+from repro.core.scheduler import solve
+from repro.core.types import AnalysisConfig
+
+
+def spark(values, width: int = 40) -> str:
+    blocks = " .:-=+*#%@"
+    v = np.asarray(values, float)
+    idx = np.linspace(0, len(v) - 1, width).astype(int)
+    v = v[idx]
+    t = (v - v.min()) / max(v.max() - v.min(), 1e-12)
+    return "".join(blocks[int(x * (len(blocks) - 1))] for x in t)
+
+
+def main():
+    R, U, L = 30, 12, 10
+    print(f"{'T_max':>7s} {'spread':>7s} {'m':>6s} "
+          f"{'T_1':>6s} {'T_R':>6s}  deadline profile (round 1..R)")
+    for t_max in (60.0, 120.0, 240.0):
+        for spread in (2.0, 8.0):
+            cfg = AnalysisConfig.default(U=U, L=L, R=R, T_max=t_max,
+                                         eta0=0.5, seed=0,
+                                         het_spread=spread)
+            sch = solve(cfg, "adam", steps=800)
+            print(f"{t_max:7.0f} {spread:7.1f} {sch.m:6.2f} "
+                  f"{sch.T[0]:6.2f} {sch.T[-1]:6.2f}  {spark(sch.T)}")
+
+    # decompose the Theorem-1 objective for one setting: B_t vs C_t trade-off
+    cfg = AnalysisConfig.default(U=U, L=L, R=R, T_max=120.0, eta0=0.5, seed=0)
+    sch = solve(cfg, "adam", steps=800)
+    import jax.numpy as jnp
+    T = jnp.asarray(sch.T)
+    print("\nTheorem-1 terms at the optimum (round 1, mid, R):")
+    bt = np.asarray(b_term(T, jnp.float32(sch.m), cfg))
+    ct = np.asarray(c_term(T, jnp.float32(sch.m), cfg))
+    for t in (0, R // 2, R - 1):
+        print(f"  t={t + 1:2d}: B_t={bt[t]:9.3f}  C_t={ct[t]:9.3f}")
+    print(f"objective (Theorem-1 bound) = "
+          f"{float(theorem1_bound(T, jnp.float32(sch.m), cfg)):.4f}")
+
+    print("\nm sensitivity (C_t explodes as m grows at fixed deadlines):")
+    for m_try in (0.5 * sch.m, sch.m, 2.0 * sch.m, 4.0 * sch.m):
+        val = float(theorem1_bound(T, jnp.float32(m_try), cfg))
+        print(f"  m={m_try:6.2f}: bound={val:10.4f}"
+              + ("   <- optimum" if abs(m_try - sch.m) < 1e-9 else ""))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Batched LLM serving with a KV/SSM cache (reduced arch on CPU).
+
+Prefills a batch of prompts and greedy-decodes new tokens through the same
+``serve_step`` that the decode_32k / long_500k dry-run shapes lower on the
+production mesh.
+
+Run:  PYTHONPATH=src python examples/serve_llm.py --arch mamba2-370m
+      (try an SSM/hybrid arch for O(1)-state decode, or a dense GQA arch)
+"""
+import argparse
+
+from repro.launch.serve import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-370m")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=48)
+    args = ap.parse_args()
+    out = serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
+                new_tokens=args.new_tokens)
+    print(f"[done] {out['arch']}: {out['tok_per_s']:.1f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

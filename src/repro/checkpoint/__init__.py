@@ -1,0 +1,60 @@
+"""Pytree checkpointing: a flat .npz of leaves + a JSON manifest holding the
+treedef and metadata (round index, simulated clock, schedule)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_checkpoint"]
+
+
+def save_checkpoint(path: str, params: PyTree, *, step: int = 0,
+                    meta: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    leaves, treedef = jax.tree.flatten(params)
+    arrays = {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}
+    np.savez(path + ".npz", **arrays)
+    manifest = {"treedef": str(treedef), "n_leaves": len(leaves),
+                "step": step, "meta": meta or {},
+                "dtypes": [str(np.asarray(l).dtype) for l in leaves],
+                "shapes": [list(np.asarray(l).shape) for l in leaves]}
+    with open(path + ".json", "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def load_checkpoint(path: str, like: PyTree) -> tuple[PyTree, dict]:
+    """Restore into the structure of ``like`` (shapes are validated)."""
+    with open(path + ".json") as f:
+        manifest = json.load(f)
+    data = np.load(path + ".npz")
+    leaves, treedef = jax.tree.flatten(like)
+    assert len(leaves) == manifest["n_leaves"], "structure mismatch"
+    new_leaves = []
+    for i, ref in enumerate(leaves):
+        arr = data[f"leaf_{i}"]
+        assert tuple(arr.shape) == tuple(np.asarray(ref).shape), \
+            f"leaf {i}: {arr.shape} != {np.asarray(ref).shape}"
+        new_leaves.append(arr.astype(np.asarray(ref).dtype))
+    return jax.tree.unflatten(treedef, new_leaves), manifest
+
+
+def latest_checkpoint(directory: str, prefix: str = "ckpt") -> str | None:
+    if not os.path.isdir(directory):
+        return None
+    best, best_step = None, -1
+    for fn in os.listdir(directory):
+        if fn.startswith(prefix) and fn.endswith(".json"):
+            try:
+                with open(os.path.join(directory, fn)) as f:
+                    step = json.load(f).get("step", 0)
+            except Exception:
+                continue
+            if step > best_step:
+                best, best_step = os.path.join(directory, fn[:-5]), step
+    return best

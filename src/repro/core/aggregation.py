@@ -1,0 +1,105 @@
+"""Layer-wise bias-corrected aggregation (Eq. 5 of the paper), in gradient form.
+
+For client updates w_u^l = w^l - eta * g_u^l, Eq. (5)
+
+    w~_{t+1}^l = w~_t^l                                  if |U_t^l| = 0
+               = ( mean_{u in U^l} w_u^l - p^l w~_t^l ) / (1 - p^l)   otherwise
+
+is algebraically equivalent to the *gradient-space* rule
+
+    g~^l = 0                                             if |U_t^l| = 0
+         = mean_{u in U^l} g_u^l / (1 - p^l)             otherwise
+
+followed by w~_{t+1} = w~_t - eta g~. We implement the gradient form: it is
+a masked weighted reduction over the client axis, which on the TPU mesh is a
+single (masked) all-reduce — the paper's server-side aggregation mapped onto
+jax.lax collectives.
+
+Parameter->layer mapping: models expose ``layer_ids(params)``, a pytree
+congruent with ``params`` whose leaves are int32 arrays of shape
+  * ()    — the whole tensor belongs to that layer, or
+  * (L,)  — the leading axis is the stacked-layer axis; entry i gives the
+            layer id of slice i (normally arange(L)).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "layer_coefficients",
+    "aggregate_grads",
+    "aggregate_grads_local",
+    "masked_mean_grads",
+]
+
+PyTree = Any
+
+
+def layer_coefficients(mask: jnp.ndarray, p: jnp.ndarray,
+                       *, bias_correct: bool = True,
+                       counts: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Per-(client, layer) aggregation coefficient c[u, l].
+
+    agg^l = sum_u c[u, l] g_u^l reproduces Eq. (5):
+      c[u, l] = mask[u, l] / count_l / (1 - p_l)   if count_l > 0 else 0.
+
+    ``counts`` may be supplied externally (global counts under shard_map).
+    """
+    if counts is None:
+        counts = mask.sum(0)                      # (L,)
+    denom = jnp.maximum(counts, 1.0)
+    scale = jnp.where(counts > 0, 1.0, 0.0)
+    if bias_correct:
+        scale = scale / jnp.maximum(1.0 - p, 1e-6)
+    return mask * (scale / denom)[None, :]        # (U, L)
+
+
+def _weight_leaf(g: jnp.ndarray, ids: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Reduce one grads leaf g of shape (U,)+param.shape with coeffs c (U, L)."""
+    ids = jnp.asarray(ids)
+    if ids.ndim == 0:
+        w = c[:, ids]                             # (U,)
+        return jnp.tensordot(w, g, axes=(0, 0))
+    # stacked: g is (U, L, ...); weight (U, L) broadcast over trailing dims
+    w = jnp.take(c, ids, axis=1)                  # (U, L)
+    return jnp.einsum("ul,ul...->l...", w, g)
+
+
+def aggregate_grads(grads: PyTree, layer_ids: PyTree, mask: jnp.ndarray,
+                    p: jnp.ndarray, *, bias_correct: bool = True) -> PyTree:
+    """ADEL-FL aggregation of stacked per-client grads.
+
+    grads: pytree with a leading client axis U on every leaf.
+    mask: (U, L) contribution mask; p: (L,) zero-contributor probabilities.
+    Returns the aggregated gradient pytree (no client axis).
+    """
+    c = layer_coefficients(mask, p, bias_correct=bias_correct)
+    return jax.tree.map(lambda g, ids: _weight_leaf(g, ids, c), grads, layer_ids)
+
+
+def aggregate_grads_local(local_grads: PyTree, layer_ids: PyTree,
+                          local_mask: jnp.ndarray, p: jnp.ndarray,
+                          axis_name: str | tuple[str, ...],
+                          *, bias_correct: bool = True) -> PyTree:
+    """shard_map/explicit-collective variant: each shard holds a slice of the
+    client axis; counts and weighted sums are combined with jax.lax.psum.
+
+    local_grads leaves: (U_local,) + param.shape; local_mask: (U_local, L).
+    """
+    counts = jax.lax.psum(local_mask.sum(0), axis_name)       # (L,) global
+    c = layer_coefficients(local_mask, p, bias_correct=bias_correct,
+                           counts=counts)
+    partial = jax.tree.map(lambda g, ids: _weight_leaf(g, ids, c),
+                           local_grads, layer_ids)
+    return jax.lax.psum(partial, axis_name)
+
+
+def masked_mean_grads(grads: PyTree, layer_ids: PyTree,
+                      mask: jnp.ndarray) -> PyTree:
+    """Plain masked mean without bias correction (Drop-Stragglers-style when
+    given an all-or-nothing mask; SALF-without-correction ablation)."""
+    p = jnp.zeros(mask.shape[1], mask.dtype)
+    return aggregate_grads(grads, layer_ids, mask, p, bias_correct=False)

@@ -1,0 +1,107 @@
+"""Regularized upper incomplete gamma function Q(s, x) for integer s, in JAX.
+
+The paper's Auxiliary Lemma (Appendix E) gives, for integer s >= 1,
+
+    Q(s, x) = sum_{k=0}^{s-1} x^k e^{-x} / k!   (= P[Poisson(x) <= s-1]).
+
+ADEL-FL evaluates Q(L+1-l, T_t/m) for every layer l in 1..L, i.e. Q(s, x)
+for all s in 1..L at a shared x. We therefore expose a vectorized
+``q_gamma_all(L, x)`` returning the whole ladder in one cumulative
+log-sum-exp pass (stable for large x, differentiable in x).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import gammaln
+
+__all__ = [
+    "q_gamma",
+    "q_gamma_all",
+    "log_q_gamma_all",
+    "poisson_cdf",
+    "layer_q",
+    "p_no_contributor",
+]
+
+
+def _log_poisson_pmf_terms(kmax: int, x: jnp.ndarray) -> jnp.ndarray:
+    """log of x^k e^{-x}/k! for k = 0..kmax-1; x may be any broadcastable shape.
+
+    Returns shape x.shape + (kmax,).
+    """
+    k = jnp.arange(kmax, dtype=jnp.float32)
+    x = jnp.asarray(x, dtype=jnp.float32)[..., None]
+    # k*log(x) with the k=0, x=0 corner handled (0*log 0 -> 0).
+    safe_log = jnp.where(x > 0, jnp.log(jnp.maximum(x, 1e-38)), -jnp.inf)
+    klogx = jnp.where(k == 0, 0.0, k * safe_log)
+    return klogx - x - gammaln(k + 1.0)
+
+
+def _cumlogsumexp(a: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Cumulative logsumexp along ``axis`` (stable, O(n) via associative scan)."""
+    return jax.lax.associative_scan(jnp.logaddexp, a, axis=axis)
+
+
+def log_q_gamma_all(smax: int, x: jnp.ndarray) -> jnp.ndarray:
+    """log Q(s, x) for s = 1..smax, vectorized.
+
+    Returns shape x.shape + (smax,), entry [..., s-1] = log Q(s, x).
+    """
+    terms = _log_poisson_pmf_terms(smax, x)
+    return jnp.minimum(_cumlogsumexp(terms, axis=-1), 0.0)
+
+
+def q_gamma_all(smax: int, x: jnp.ndarray) -> jnp.ndarray:
+    """Q(s, x) for s = 1..smax (shape x.shape + (smax,))."""
+    return jnp.exp(log_q_gamma_all(smax, x))
+
+
+def q_gamma(s: int, x) -> jnp.ndarray:
+    """Scalar-s Q(s, x) = P[Poisson(x) <= s-1]."""
+    return q_gamma_all(int(s), x)[..., -1]
+
+
+def poisson_cdf(k: int, lam) -> jnp.ndarray:
+    """P[Poisson(lam) <= k] = Q(k+1, lam); k >= 0 integer."""
+    return q_gamma(int(k) + 1, lam)
+
+
+def layer_q(L: int, x) -> jnp.ndarray:
+    """Per-layer Q ladder used throughout the paper.
+
+    Returns q[l-1] = Q(L+1-l, x) for l = 1..L; shape x.shape + (L,).
+
+    Backprop reaches layer L (output side) first: reaching layer l requires
+    z >= L+1-l completed layer-gradients, so the miss probability per user is
+    P[Poisson(x) <= L-l] = Q(L+1-l, x). Layer L gets Q(1, x) = e^{-x}
+    (smallest); layer 1 gets Q(L, x) (largest) — matching the paper's
+    "p_t^l is monotonically decreasing with the layer index l".
+    """
+    q = q_gamma_all(L, x)  # [..., s-1] = Q(s, x), s = 1..L
+    return jnp.flip(q, axis=-1)  # layer l at index l-1 -> Q(L+1-l, x)
+
+
+def p_no_contributor(L: int, x, U: int) -> jnp.ndarray:
+    """Lemma 1 bound: p_t^l <= Q(L+1-l, x)^U, for l = 1..L (x = T_t^d / m)."""
+    logq = jnp.flip(log_q_gamma_all(L, x), axis=-1)
+    return jnp.exp(U * logq)
+
+
+def q_inv(s: int, target: float, *, iters: int = 80) -> float:
+    """Solve Q(s, x) = target for x (Q monotone decreasing in x).
+
+    Used by the Problem-2 solver to turn the Lemma-3 validity constraint
+    p_t^1 = Q(L, T_t/m)^U < cap into a hard lower bound T_t >= m * x_min
+    with x_min = q_inv(L, cap**(1/U)).
+    """
+    import numpy as np
+    target = float(np.clip(target, 1e-30, 1.0 - 1e-12))
+    lo, hi = 0.0, float(s + 20.0 * np.sqrt(s) + 50.0)
+    for _ in range(iters):
+        mid = 0.5 * (lo + hi)
+        if float(q_gamma(s, jnp.float32(mid))) > target:
+            lo = mid
+        else:
+            hi = mid
+    return 0.5 * (lo + hi)

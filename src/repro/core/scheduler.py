@@ -1,0 +1,245 @@
+"""Problem-2 solver: jointly optimize per-round deadlines {T_t^d} and the
+global batch-scaling parameter m.
+
+Two solver paths:
+
+* ``solve_trust_region`` — scipy ``trust-constr`` exactly as the paper
+  (Section III-C, [48]), with JAX-supplied exact gradients, linear
+  constraints for the time budget + monotonicity, and a nonlinear
+  constraint for p_t^1 < 0.2.
+* ``solve_adam`` — a pure-JAX projected solver on an unconstrained
+  parameterization (nonincreasing-by-construction deadlines that use the
+  entire budget; penalties for the remaining constraints). Fast, jittable,
+  and used as the default inside the training loop.
+
+Both return a :class:`repro.core.types.Schedule`.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .cost import objective_and_penalty, p1_round, theorem1_bound
+from .gamma import q_inv
+from .types import AnalysisConfig, Schedule
+
+__all__ = ["solve_adam", "solve_trust_region", "solve", "solve_rounds",
+           "constant_schedule"]
+
+
+# ---------------------------------------------------------------------------
+# Parameterization: theta in R^{R+1} -> (T, m) FEASIBLE BY CONSTRUCTION:
+#   * T nonincreasing, sum T = T_max (uses the full budget)
+#   * p_t^1 = Q(L, T_t/m)^U <= p1_cap for every t, via the hard floor
+#     T_t >= m * x_min with x_min = q_inv(L, p1_cap^(1/U))  (Lemma 3 validity)
+#   * m in (m_min, m_cap], m_cap = T_max / (R * x_min) so the floor fits
+# ---------------------------------------------------------------------------
+
+def _x_min(cfg: AnalysisConfig, p1_cap: float = 0.2,
+           margin: float = 0.9) -> float:
+    return q_inv(cfg.L, (margin * p1_cap) ** (1.0 / cfg.U))
+
+
+def _theta_to_Tm(theta: jnp.ndarray, cfg: AnalysisConfig, m_min: float = 1.0,
+                 x_min: float = 0.0):
+    # m in (m_min, m_cap]: sigmoid-bounded so R * m * x_min <= T_max
+    m_cap = cfg.T_max / (cfg.R * max(x_min, 1e-9)) if x_min > 0 else np.inf
+    if np.isfinite(m_cap) and m_cap > m_min:
+        m = m_min + (m_cap - m_min) * jax.nn.sigmoid(theta[cfg.R])
+    else:  # budget too tight for the cap at m_min: pin m (degenerate corner)
+        m = jnp.float32(m_min)
+    # Per-round feasibility floor. If the instance is infeasible even at
+    # m_min (m * x_min > T_max / R), fall back to the uniform allocation —
+    # the schedule maximizing the binding last-round deadline.
+    floor = jnp.minimum(m * x_min, cfg.T_max / cfg.R)
+    e = jax.nn.softplus(theta[: cfg.R])              # (R,) >= 0 increments
+    b = jnp.cumsum(e[::-1])[::-1]                    # nonincreasing, positive
+    extra = cfg.T_max - cfg.R * floor                # budget above the floor
+    T = floor + extra * b / jnp.maximum(b.sum(), 1e-9)
+    return T, m
+
+
+def _init_theta(cfg: AnalysisConfig, m0: float, m_min: float = 1.0,
+                x_min: float = 0.0) -> jnp.ndarray:
+    # start from the naive uniform allocation T_t = T_max / R and m = m0
+    theta_T = jnp.full((cfg.R,), np.log(np.expm1(1.0)), jnp.float32)
+    m_cap = cfg.T_max / (cfg.R * max(x_min, 1e-9)) if x_min > 0 else np.inf
+    if np.isfinite(m_cap) and m_cap > m_min:
+        frac = np.clip((m0 - m_min) / (m_cap - m_min), 1e-4, 1 - 1e-4)
+        theta_m = np.asarray([np.log(frac / (1 - frac))], np.float32)
+    else:
+        theta_m = np.zeros((1,), np.float32)
+    return jnp.concatenate([theta_T, jnp.asarray(theta_m)])
+
+
+def _default_m0(cfg: AnalysisConfig) -> float:
+    """Heuristic initial m: aim the per-round Poisson rate T_t/m at ~L so the
+    average client completes the full depth (x = T/m ~= L keeps p_t^1 tiny)."""
+    return max(1.5, (cfg.T_max / cfg.R) / max(cfg.L, 1))
+
+
+def _default_m_min(cfg: AnalysisConfig) -> float:
+    """Smallest m keeping every batch size S_t^u = m P_u (1 - B_u/T) >= ~2
+    (so the B_t denominator m P_u frac - 1 stays positive, A2/B3)."""
+    return 2.0 / float(cfg.P.min())
+
+
+def solve_adam(cfg: AnalysisConfig, *, steps: int = 3000, lr: float = 3e-2,
+               m0: float | None = None, m_min: float | None = None,
+               seed: int = 0) -> Schedule:
+    m0 = _default_m0(cfg) if m0 is None else m0
+    m_min = _default_m_min(cfg) if m_min is None else m_min
+    x_min = _x_min(cfg)
+    theta = _init_theta(cfg, m0, m_min, x_min)
+
+    def loss_fn(th):
+        T, m = _theta_to_Tm(th, cfg, m_min, x_min)
+        val, (obj, p1) = objective_and_penalty(T, m, cfg)
+        return val, (obj, p1)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn, has_aux=True))
+
+    # Adam state
+    mu = jnp.zeros_like(theta)
+    nu = jnp.zeros_like(theta)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    @jax.jit
+    def step(i, theta, mu, nu):
+        (val, aux), g = grad_fn(theta)
+        mu2 = b1 * mu + (1 - b1) * g
+        nu2 = b2 * nu + (1 - b2) * g * g
+        mhat = mu2 / (1 - b1 ** (i + 1))
+        nhat = nu2 / (1 - b2 ** (i + 1))
+        theta2 = theta - lr * mhat / (jnp.sqrt(nhat) + eps)
+        return theta2, mu2, nu2, val, aux
+
+    best = (np.inf, theta)
+    for i in range(steps):
+        theta, mu, nu, val, aux = step(i, theta, mu, nu)
+        v = float(val)
+        if v < best[0]:
+            best = (v, theta)
+    theta = best[1]
+    T, m = _theta_to_Tm(theta, cfg, m_min, x_min)
+    T = np.asarray(T, np.float64)
+    m = float(m)
+    p1 = np.asarray(p1_round(jnp.asarray(T, jnp.float32), jnp.float32(m), cfg))
+    obj = float(theorem1_bound(jnp.asarray(T, jnp.float32), jnp.float32(m), cfg))
+    return Schedule(T=T, m=m, objective=obj, p1=p1, solver="adam")
+
+
+def solve_trust_region(cfg: AnalysisConfig, *, m0: float | None = None,
+                       m_min: float | None = None, maxiter: int = 300) -> Schedule:
+    """The paper's solver: scipy trust-constr on x = [T_1..T_R, m]."""
+    from scipy.optimize import LinearConstraint, NonlinearConstraint, minimize
+
+    m0 = _default_m0(cfg) if m0 is None else m0
+    m_min = _default_m_min(cfg) if m_min is None else m_min
+    R = cfg.R
+    Bmax = float(cfg.B.max())
+
+    def unpack(x):
+        return jnp.asarray(x[:R], jnp.float32), jnp.float32(x[R])
+
+    @jax.jit
+    def f_and_g(x):
+        def f(x):
+            T, m = x[:R], x[R]
+            val, _ = objective_and_penalty(T, m, cfg, penalty_weight=0.0)
+            return val
+        return jax.value_and_grad(f)(x)
+
+    def fun(x):
+        v, g = f_and_g(jnp.asarray(x, jnp.float32))
+        return float(v), np.asarray(g, np.float64)
+
+    @jax.jit
+    def p1_fn(x):
+        T, m = unpack(x)
+        return p1_round(T, m, cfg)
+
+    p1_jac = jax.jit(jax.jacobian(lambda x: p1_fn(x)))
+
+    # sum T <= T_max  and  T_{t+1} - T_t <= 0
+    A_sum = np.zeros((1, R + 1)); A_sum[0, :R] = 1.0
+    A_mono = np.zeros((R - 1, R + 1))
+    for t in range(R - 1):
+        A_mono[t, t + 1] = 1.0
+        A_mono[t, t] = -1.0
+    lc = [LinearConstraint(A_sum, -np.inf, cfg.T_max),
+          LinearConstraint(A_mono, -np.inf, 0.0)]
+    nc = NonlinearConstraint(
+        lambda x: np.asarray(p1_fn(jnp.asarray(x, jnp.float32)), np.float64),
+        -np.inf, 0.2 - 1e-3,
+        jac=lambda x: np.asarray(p1_jac(jnp.asarray(x, jnp.float32)), np.float64))
+
+    x0 = np.concatenate([np.full(R, cfg.T_max / R), [m0]])
+    lb = np.concatenate([np.full(R, Bmax * 1.05 + 1e-6), [m_min]])
+    ub = np.concatenate([np.full(R, cfg.T_max), [np.inf]])
+    import warnings
+    with warnings.catch_warnings():
+        warnings.filterwarnings("ignore", message="delta_grad == 0.0")
+        res = minimize(fun, x0, jac=True, method="trust-constr",
+                       constraints=lc + [nc], bounds=list(zip(lb, ub)),
+                       options={"maxiter": maxiter, "verbose": 0})
+    T = np.maximum.accumulate(res.x[:R][::-1])[::-1]  # snap tiny monotonicity violations
+    m = float(res.x[R])
+    p1 = np.asarray(p1_round(jnp.asarray(T, jnp.float32), jnp.float32(m), cfg))
+    obj = float(theorem1_bound(jnp.asarray(T, jnp.float32), jnp.float32(m), cfg))
+    return Schedule(T=T, m=m, objective=obj, p1=p1, solver="trust-constr")
+
+
+def constant_schedule(cfg: AnalysisConfig, *, m: float | None = None) -> Schedule:
+    """The naive baseline allocation: T_t = T_max/R with a feasible fixed m
+    (used by Drop-Stragglers / SALF baselines)."""
+    T = np.full((cfg.R,), cfg.T_max / cfg.R, np.float64)
+    if m is None:
+        m = _default_m0(cfg)
+    p1 = np.asarray(p1_round(jnp.asarray(T, jnp.float32), jnp.float32(m), cfg))
+    obj = float(theorem1_bound(jnp.asarray(T, jnp.float32), jnp.float32(m), cfg))
+    return Schedule(T=T, m=float(m), objective=obj, p1=p1, solver="constant")
+
+
+def solve_rounds(cfg: AnalysisConfig, method: str = "adam",
+                 r_grid: "Sequence[int] | None" = None,
+                 **kw) -> tuple[Schedule, AnalysisConfig]:
+    """Beyond-paper extension (paper §III-D): jointly optimize the NUMBER of
+    global rounds R alongside {T_t^d} and m.
+
+    The paper notes this mixed-integer extension "could be formulated ... or
+    tackled with adaptive scheduling heuristics". Since the inner problem is
+    cheap, we solve it exactly on a grid of R values (the outer integer
+    variable) and keep the R minimizing the Theorem-1 bound. The learning-
+    rate schedule is re-generated per R with the same eta_1 (inverse decay).
+
+    Returns (best schedule, the AnalysisConfig at the chosen R).
+    """
+    import dataclasses
+
+    if r_grid is None:
+        base = cfg.R
+        r_grid = sorted({max(2, r) for r in
+                         (base // 4, base // 2, (3 * base) // 4, base,
+                          (3 * base) // 2, 2 * base)})
+    eta1 = float(cfg.eta[0])
+    best = None
+    for r in r_grid:
+        t = np.arange(1, r + 1, dtype=np.float32)
+        eta = (eta1 * 2.0) / (1.0 + t)       # same inverse-decay family
+        cfg_r = dataclasses.replace(cfg, R=int(r), eta=eta)
+        sch = solve(cfg_r, method, **kw)
+        if best is None or sch.objective < best[0].objective:
+            best = (sch, cfg_r)
+    return best
+
+
+def solve(cfg: AnalysisConfig, method: str = "trust-constr", **kw) -> Schedule:
+    if method in ("trust-constr", "trust_region", "paper"):
+        return solve_trust_region(cfg, **kw)
+    if method == "adam":
+        return solve_adam(cfg, **kw)
+    if method == "constant":
+        return constant_schedule(cfg, **kw)
+    raise ValueError(f"unknown solver {method!r}")

@@ -1,0 +1,114 @@
+"""Straggler model of ADEL-FL (Model Formulations B1-B3, Appendix A).
+
+Per-layer backprop time of user u is Exp(S_t^u / P_u) (mean S/P), so the
+number of layer-gradients completed within the effective deadline
+T_t^d - B_u is z_t^u ~ Poisson(lambda_t^u) with
+
+    lambda_t^u = P_u / S_t^u * (T_t^d - B_u).
+
+Backprop runs from the output layer L toward the input layer 1: user u
+contributes layer l iff z_t^u >= L + 1 - l.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .gamma import log_q_gamma_all
+from .types import AnalysisConfig
+
+__all__ = [
+    "batch_sizes",
+    "poisson_rates",
+    "sample_depths",
+    "contribution_mask",
+    "exact_p_layers",
+    "sample_round",
+]
+
+
+def batch_sizes(T_d, m, P, B) -> jnp.ndarray:
+    """Model Formulation B3: S^u = floor(m P_u (T^d - B_u)/T^d), clipped >= 1."""
+    T_d = jnp.asarray(T_d, jnp.float32)
+    S = jnp.floor(m * P * jnp.maximum(T_d - B, 0.0) / jnp.maximum(T_d, 1e-9))
+    return jnp.maximum(S, 1.0)
+
+
+def poisson_rates(T_d, m, P, B) -> jnp.ndarray:
+    """lambda^u = P_u / S^u * (T^d - B_u), with S^u from B3 (Eq. A.2)."""
+    S = batch_sizes(T_d, m, P, B)
+    return P / S * jnp.maximum(jnp.asarray(T_d, jnp.float32) - B, 0.0)
+
+
+def sample_depths(key: jax.Array, lam: jnp.ndarray) -> jnp.ndarray:
+    """z^u ~ Poisson(lambda^u): number of layers completed (unbounded)."""
+    return jax.random.poisson(key, lam)
+
+
+def contribution_mask(z: jnp.ndarray, L: int) -> jnp.ndarray:
+    """mask[u, l-1] = 1 iff user u contributes layer l, i.e. z_u >= L + 1 - l.
+
+    Column index i = l-1 corresponds to threshold L - i.
+    """
+    thresh = L - jnp.arange(L)          # (L,) = L, L-1, ..., 1
+    return (z[:, None] >= thresh[None, :]).astype(jnp.float32)
+
+
+def exact_p_layers(lam: jnp.ndarray, L: int) -> jnp.ndarray:
+    """Exact p_t^l = prod_u P[z_u <= L - l] = prod_u Q(L+1-l, lambda_u).
+
+    Tighter than the Lemma-1 bound (which lower-bounds every lambda_u by
+    T_t/m); used by the server for the bias correction in Eq. (5).
+    Returns shape (L,), entry l-1 = p_t^l.
+    """
+    logq = log_q_gamma_all(L, lam)          # (U, L): [u, s-1] = log Q(s, lam_u)
+    logp = jnp.flip(logq.sum(0), axis=-1)   # layer l -> sum_u log Q(L+1-l, ·)
+    return jnp.exp(logp)
+
+
+def sample_round(key: jax.Array, T_d, m, cfg: AnalysisConfig):
+    """One round's straggler draw under B3 batch scaling (ADEL-FL):
+    (mask (U,L), p (L,), S (U,), z (U,))."""
+    P = jnp.asarray(cfg.P)
+    B = jnp.asarray(cfg.B)
+    lam = poisson_rates(T_d, m, P, B)
+    z = sample_depths(key, lam)
+    mask = contribution_mask(z, cfg.L)
+    p = exact_p_layers(lam, cfg.L)
+    return mask, p, batch_sizes(T_d, m, P, B), z
+
+
+def fixed_batch(T_d, m, cfg: AnalysisConfig) -> jnp.ndarray:
+    """The FIXED per-user batch size used by the baselines (SALF / Drop /
+    Wait / HeteroFL fix one batch size for everyone; B3's per-user scaling
+    is part of ADEL-FL's contribution)."""
+    P_mean = float(np.mean(cfg.P))
+    B_mean = float(np.mean(cfg.B))
+    S = np.floor(m * P_mean * max(T_d - B_mean, 0.0) / max(T_d, 1e-9))
+    return jnp.float32(max(S, 1.0))
+
+
+def sample_round_fixed(key: jax.Array, T_d, S, cfg: AnalysisConfig):
+    """Straggler draw with a uniform batch size S for every user: slow
+    devices get proportionally fewer layers done (the baselines' regime).
+    Returns (mask, p, lam)."""
+    P = jnp.asarray(cfg.P)
+    B = jnp.asarray(cfg.B)
+    lam = P / S * jnp.maximum(jnp.asarray(T_d, jnp.float32) - B, 0.0)
+    z = sample_depths(key, lam)
+    mask = contribution_mask(z, cfg.L)
+    p = exact_p_layers(lam, cfg.L)
+    return mask, p, lam
+
+
+def simulate_p_empirical(T_d: float, m: float, cfg: AnalysisConfig,
+                         n_trials: int = 2000, seed: int = 0) -> np.ndarray:
+    """Monte-Carlo estimate of p_t^l (for validating Lemma 1 in tests)."""
+    key = jax.random.PRNGKey(seed)
+    lam = poisson_rates(T_d, m, jnp.asarray(cfg.P), jnp.asarray(cfg.B))
+    keys = jax.random.split(key, n_trials)
+    z = jax.vmap(lambda k: sample_depths(k, lam))(keys)        # (n, U)
+    masks = jax.vmap(lambda zz: contribution_mask(zz, cfg.L))(z)  # (n, U, L)
+    none = (masks.sum(1) == 0).astype(jnp.float32)             # (n, L)
+    return np.asarray(none.mean(0))

@@ -1,0 +1,65 @@
+"""Pilot-round estimation of the Theorem-1 analysis constants.
+
+The paper (A2/A3) assumes the per-user gradient-variance bounds sigma_u^2
+and the gradient-norm bound G^2 are KNOWN to the server when it solves
+Problem 2. On a real system they are not — this module estimates them from
+a handful of per-sample gradients at the initial model, the natural pilot
+phase of Algorithm 1 (server-side, before round 1):
+
+  sigma_u^2 ~= E_i ||grad F_u(w_1; i) - grad F_u(w_1)||^2      (A2 at S=1)
+  G^2       ~= max_u E_i ||grad F_u(w_1; i_ref)||^2            (A3)
+
+where i_ref is a reference batch of size ``g_ref_batch`` (the bound that
+matters in Lemma 3 is at the operating batch size; per-sample gradients
+give the conservative S=1 value when ``g_ref_batch=1``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import AnalysisConfig
+
+__all__ = ["calibrate_constants"]
+
+
+def _flat_grad(loss_fn, params, x, y):
+    n = y.shape[0]
+    g = jax.grad(loss_fn)(params, x, y, jnp.full((n,), 1.0 / n, jnp.float32))
+    return jnp.concatenate([l.ravel() for l in jax.tree.leaves(g)])
+
+
+def calibrate_constants(cfg: AnalysisConfig, model, params, client_x,
+                        client_y, n_per_client, *, n_probe: int = 32,
+                        g_ref_batch: int = 8) -> AnalysisConfig:
+    """Return ``cfg`` with sigma2 / G2 replaced by pilot estimates."""
+    U = cfg.U
+    sig2 = np.zeros(U, np.float32)
+    g2 = np.zeros(U, np.float32)
+
+    @jax.jit
+    def stats(xs, ys):
+        full = _flat_grad(model.loss, params, xs, ys)
+
+        def one(x1, y1):
+            return _flat_grad(model.loss, params, x1[None], y1[None])
+
+        per = jax.vmap(one)(xs, ys)
+        var1 = jnp.mean(jnp.sum((per - full[None]) ** 2, -1))
+        # E||batch grad||^2 at the reference batch size: full^2 + var1/S_ref
+        gref = jnp.sum(full ** 2) + var1 / g_ref_batch
+        return var1, gref
+
+    for u in range(U):
+        n = min(int(n_per_client[u]), n_probe)
+        n = max(n, 2)
+        xs = jnp.asarray(client_x[u][:n])
+        ys = jnp.asarray(client_y[u][:n])
+        v, g = stats(xs, ys)
+        sig2[u] = float(v)
+        g2[u] = float(g)
+
+    return dataclasses.replace(cfg, sigma2=sig2, G2=float(g2.max()))

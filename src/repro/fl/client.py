@@ -1,0 +1,74 @@
+"""Client-side local training for ADEL-FL and baselines.
+
+A client receives the global model, runs E local SGD iterations on its
+minibatch (E=1 reproduces the paper's main setting, Eq. 2; E in {3,5} is the
+robustness study of Section IV-C), and returns its *model delta*
+delta_u = w_t - w_u. For E=1, delta_u = eta * grad, so layer-wise
+aggregation of deltas is exactly the gradient-space form of Eq. (5).
+
+Depth-limited backprop is simulated by masking deltas per layer at
+aggregation time (the layers a straggler never reached keep delta 0), which
+is mathematically identical to truncating the backward pass — the paper's
+own simulation does the same on a GPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def local_update(loss_fn: Callable, params: PyTree, x: jnp.ndarray,
+                 y: jnp.ndarray, sample_w: jnp.ndarray, eta: jnp.ndarray,
+                 *, local_iters: int = 1, l2: float = 0.0) -> PyTree:
+    """Run E local SGD iterations; return delta_u = w_t - w_u (pytree).
+
+    loss_fn(params, x, y, sample_w) -> scalar weighted empirical risk.
+    """
+
+    def step_loss(p):
+        base = loss_fn(p, x, y, sample_w)
+        if l2 > 0.0:
+            base = base + 0.5 * l2 * sum(
+                jnp.sum(leaf.astype(jnp.float32) ** 2) for leaf in jax.tree.leaves(p))
+        return base
+
+    def body(p, _):
+        g = jax.grad(step_loss)(p)
+        p = jax.tree.map(lambda w, gg: w - eta * gg, p, g)
+        return p, None
+
+    p_final, _ = jax.lax.scan(body, params, None, length=local_iters)
+    return jax.tree.map(lambda w0, w1: w0 - w1, params, p_final)
+
+
+def batched_client_deltas(loss_fn: Callable, params: PyTree, xb: jnp.ndarray,
+                          yb: jnp.ndarray, wb: jnp.ndarray, eta: jnp.ndarray,
+                          *, local_iters: int = 1, l2: float = 0.0) -> PyTree:
+    """vmap ``local_update`` over the leading client axis of (xb, yb, wb)."""
+    fn = functools.partial(local_update, loss_fn, local_iters=local_iters, l2=l2)
+    return jax.vmap(fn, in_axes=(None, 0, 0, 0, None))(params, xb, yb, wb, eta)
+
+
+def sample_client_batches(key: jax.Array, data_x: jnp.ndarray,
+                          data_y: jnp.ndarray, n_per_client: jnp.ndarray,
+                          batch_sizes: jnp.ndarray, s_max: int):
+    """Uniform with-replacement minibatch per client, padded to s_max.
+
+    data_x: (U, N, ...), data_y: (U, N); n_per_client: (U,) valid counts;
+    batch_sizes: (U,) this round's S_t^u. Returns (xb, yb, wb) where
+    wb[u, i] = 1/S_u for i < S_u else 0 (so a weighted sum is the batch mean).
+    """
+    U, N = data_y.shape
+    idx = jax.random.randint(key, (U, s_max), 0, 2 ** 30)
+    idx = idx % jnp.maximum(n_per_client[:, None], 1)
+    xb = jnp.take_along_axis(
+        data_x, idx.reshape(idx.shape + (1,) * (data_x.ndim - 2)), axis=1)
+    yb = jnp.take_along_axis(data_y, idx, axis=1)
+    S = jnp.clip(batch_sizes, 1, s_max).astype(jnp.float32)
+    wb = (jnp.arange(s_max)[None, :] < S[:, None]).astype(jnp.float32) / S[:, None]
+    return xb, yb, wb

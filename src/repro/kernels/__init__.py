@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the perf-critical compute hot-spots, each with a
+pure-jnp oracle in ref.py and a model-layout wrapper in ops.py:
+
+* flash_attention — GQA/causal/sliding-window online-softmax attention
+  (prefill/train hot-spot of the dense/moe/vlm/hybrid archs).
+* ssd_scan — Mamba2 SSD chunk scan with VMEM-carried state (ssm/hybrid).
+* adel_agg — the paper's layer-wise masked aggregation (server hot loop).
+
+Validated in interpret=True mode on CPU; compiled for TPU on real hardware.
+"""
+from repro.kernels.adel_agg import adel_agg
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd_scan import ssd_scan
+
+__all__ = ["adel_agg", "flash_attention", "ssd_scan"]

@@ -1,0 +1,54 @@
+"""Pallas TPU kernel for ADEL-FL's layer-wise masked aggregation (Eq. 5).
+
+The server-side hot loop of the paper: combine U clients' per-layer
+gradients with per-(client, layer) coefficients
+
+    out[l, f] = sum_u coeff[u, l] * grads[u, l, f]
+
+i.e. an (U)-contraction batched over layers, tiled over the flattened
+feature dim so each (layer, feature-block) tile is one VMEM-resident MXU
+matvec. On the real mesh this runs on each shard's local client slice,
+followed by a psum (see core.aggregation.aggregate_grads_local).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["adel_agg"]
+
+
+def _kernel(g_ref, c_ref, o_ref):
+    g = g_ref[:, 0, :].astype(jnp.float32)         # (U, bf)
+    c = c_ref[...].astype(jnp.float32)             # (U, 1)
+    o = jax.lax.dot_general(c, g, (((0,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (1, bf)
+    o_ref[0] = o[0].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_f", "interpret"))
+def adel_agg(grads: jnp.ndarray, coeff: jnp.ndarray, *, block_f: int = 512,
+             interpret: bool = False) -> jnp.ndarray:
+    """grads: (U, L, F); coeff: (U, L) -> (L, F)."""
+    U, L, F = grads.shape
+    bf = min(block_f, F)
+    assert F % bf == 0, (F, bf)
+    grid = (L, F // bf)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((U, 1, bf), lambda l, f: (0, l, f)),
+            pl.BlockSpec((U, 1), lambda l, f: (0, l)),
+        ],
+        out_specs=pl.BlockSpec((1, bf), lambda l, f: (l, f)),
+        out_shape=jax.ShapeDtypeStruct((L, F), grads.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(grads, coeff)

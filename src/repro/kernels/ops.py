@@ -1,0 +1,95 @@
+"""jit'd wrappers bridging model-layout tensors to the Pallas kernels.
+
+``interpret`` defaults to True on CPU (this container) and False on TPU;
+each wrapper reshapes from model layout to kernel layout and back, and is
+drop-in compatible with the pure-jnp path it accelerates.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.adel_agg import adel_agg
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd_scan import ssd_scan
+
+__all__ = ["gqa_flash", "ssd_chunked_pallas", "adel_aggregate_pallas",
+           "default_interpret"]
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def gqa_flash(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+              causal: bool = True, window: int = 0,
+              block_q: int = 128, block_k: int = 128,
+              interpret: bool | None = None) -> jnp.ndarray:
+    """Model layout (B, S, H, hd) / (B, S, KV, hd) -> (B, S, H, hd)."""
+    interpret = default_interpret() if interpret is None else interpret
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = flash_attention(qt, kt, vt, causal=causal, window=window,
+                          block_q=block_q, block_k=block_k,
+                          interpret=interpret)
+    return jnp.swapaxes(out, 1, 2)
+
+
+def ssd_chunked_pallas(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                       b: jnp.ndarray, c: jnp.ndarray, *, chunk: int = 64,
+                       interpret: bool | None = None) -> jnp.ndarray:
+    """Model layout: x (B,S,H,P); dt (B,S,H); A (H,); b,c (B,S,N) -> y."""
+    interpret = default_interpret() if interpret is None else interpret
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    xdt = (x.astype(jnp.float32) * dt[..., None]).transpose(0, 2, 1, 3)
+    xdt = xdt.reshape(B * H, S, P)
+    la = (-A[None, None, :] * dt).transpose(0, 2, 1).reshape(B * H, S)
+    bh = jnp.broadcast_to(b[:, None], (B, H, S, N)).reshape(B * H, S, N)
+    ch = jnp.broadcast_to(c[:, None], (B, H, S, N)).reshape(B * H, S, N)
+    y = ssd_scan(xdt.astype(jnp.float32), la.astype(jnp.float32),
+                 bh.astype(jnp.float32), ch.astype(jnp.float32),
+                 chunk=chunk, interpret=interpret)
+    return y.reshape(B, H, S, P).transpose(0, 2, 1, 3).astype(x.dtype)
+
+
+def adel_aggregate_pallas(grads, layer_ids_tree, mask, p, *,
+                          bias_correct: bool = True,
+                          interpret: bool | None = None):
+    """Pallas-backed equivalent of core.aggregation.aggregate_grads for
+    pytrees whose leaves carry a leading client axis U.
+
+    Stacked-layer leaves (ids of shape (L,)) go through the adel_agg kernel
+    on their flattened feature dim; scalar-id leaves use the (U,) matvec.
+    """
+    from repro.core.aggregation import layer_coefficients
+    interpret = default_interpret() if interpret is None else interpret
+    c = layer_coefficients(mask, p, bias_correct=bias_correct)  # (U, L)
+
+    def agg_leaf(g, ids):
+        ids = jnp.asarray(ids)
+        U = g.shape[0]
+        if ids.ndim == 0:
+            w = c[:, ids]                          # (U,)
+            return jnp.tensordot(w, g.astype(jnp.float32),
+                                 axes=(0, 0)).astype(g.dtype)
+        L = g.shape[1]
+        F = 1
+        for d in g.shape[2:]:
+            F *= d
+        flat = g.reshape(U, L, F)
+        cl = jnp.take(c, ids, axis=1)              # (U, L)
+        # pad F to a block multiple for the kernel
+        bf = 512 if F >= 512 else F
+        pad = (-F) % bf
+        if pad:
+            flat = jnp.pad(flat, ((0, 0), (0, 0), (0, pad)))
+        out = adel_agg(flat, cl, block_f=bf, interpret=interpret)
+        if pad:
+            out = out[:, :F]
+        return out.reshape(g.shape[1:]).astype(g.dtype)
+
+    return jax.tree.map(agg_leaf, grads, layer_ids_tree)

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention_ref", "ssd_scan_ref", "adel_agg_ref"]
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True, window: int = 0) -> jnp.ndarray:
+    """GQA attention oracle. q: (B, H, Sq, hd); k, v: (B, KV, Sk, hd)."""
+    B, H, Sq, hd = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    qr = q.reshape(B, KV, G, Sq, hd).astype(jnp.float32)
+    scores = jnp.einsum("bkgsd,bktd->bkgst", qr,
+                        k.astype(jnp.float32)) * hd ** -0.5
+    qpos = jnp.arange(Sq)
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", probs, v.astype(jnp.float32))
+    return out.reshape(B, H, Sq, hd).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A, b, c):
+    """Sequential SSD oracle (same semantics as models.ssm.ssd_reference).
+
+    x: (B, S, H, P); dt: (B, S, H); A: (H,); b, c: (B, S, N).
+    Returns y: (B, S, H, P).
+    """
+    from repro.models.ssm import ssd_reference
+    y, _ = ssd_reference(x, dt, A, b, c)
+    return y
+
+
+def adel_agg_ref(grads: jnp.ndarray, coeff: jnp.ndarray) -> jnp.ndarray:
+    """ADEL layer-wise masked aggregation oracle.
+
+    grads: (U, L, F) per-client per-layer flattened gradients;
+    coeff: (U, L) per-(client, layer) aggregation coefficients
+    (mask / count / (1 - p), see core.aggregation.layer_coefficients).
+    Returns (L, F) = sum_u coeff[u, l] * grads[u, l, :].
+    """
+    return jnp.einsum("ul,ulf->lf", coeff.astype(jnp.float32),
+                      grads.astype(jnp.float32)).astype(grads.dtype)

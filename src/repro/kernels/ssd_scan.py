@@ -1,0 +1,102 @@
+"""Pallas TPU Mamba2 SSD chunk-scan kernel.
+
+TPU adaptation of the SSD algorithm (arXiv:2405.21060 §6): the sequence is
+tiled into chunks of Q tokens held in VMEM; the within-chunk "dual" term is
+two MXU matmuls (C·Bᵀ masked by the decay kernel, then ·X), and the
+cross-chunk recurrence carries the (N x P) state in VMEM scratch across the
+innermost (arbitrary-semantics) chunk grid dimension — the TPU analogue of
+the paper's inter-chunk scan.
+
+Inputs are pre-scaled by the caller (ops.py): xdt = x * dt and
+la = -softplus(A_log) * dt, so the kernel is pure chunked linear algebra.
+
+Layout: xdt (BH, S, P); la (BH, S); b, c (BH, S, N) (already expanded per
+head-group). Grid: (BH, n_chunks).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_scan"]
+
+
+def _kernel(xdt_ref, la_ref, b_ref, c_ref, y_ref, state_ref, *, Q: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    xdt = xdt_ref[0].astype(jnp.float32)           # (Q, P)
+    la = la_ref[0].astype(jnp.float32)             # (Q,)
+    b = b_ref[0].astype(jnp.float32)               # (Q, N)
+    c = c_ref[0].astype(jnp.float32)               # (Q, N)
+
+    cum = jnp.cumsum(la)                           # (Q,)
+    tot = cum[-1]
+
+    # within-chunk dual term: (C Bᵀ ⊙ L) X
+    scores = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    decay = cum[:, None] - cum[None, :]            # (Q, Q)
+    i = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    j = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    Lmat = jnp.where(i >= j, jnp.exp(decay), 0.0)
+    y_intra = jax.lax.dot_general(scores * Lmat, xdt,
+                                  (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    # inter-chunk term from the carried state
+    state = state_ref[...]                         # (N, P)
+    y_inter = jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        c, state, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update: exp(tot) * state + Bᵀ diag(exp(tot - cum)) X
+    w = jnp.exp(tot - cum)[:, None]                # (Q, 1)
+    upd = jax.lax.dot_general(b * w, xdt, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    state_ref[...] = jnp.exp(tot) * state + upd
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(xdt: jnp.ndarray, la: jnp.ndarray, b: jnp.ndarray,
+             c: jnp.ndarray, *, chunk: int = 64,
+             interpret: bool = False) -> jnp.ndarray:
+    """xdt: (BH, S, P); la: (BH, S); b, c: (BH, S, N) -> y (BH, S, P)."""
+    BH, S, P = xdt.shape
+    N = b.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nC = S // Q
+    grid = (BH, nC)
+
+    def m3(h, ci):
+        return (h, ci, 0)
+
+    def m2(h, ci):
+        return (h, ci)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, Q=Q),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, P), m3),
+            pl.BlockSpec((1, Q), m2),
+            pl.BlockSpec((1, Q, N), m3),
+            pl.BlockSpec((1, Q, N), m3),
+        ],
+        out_specs=pl.BlockSpec((1, Q, P), m3),
+        out_shape=jax.ShapeDtypeStruct((BH, S, P), xdt.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(xdt, la, b, c)

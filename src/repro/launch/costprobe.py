@@ -1,0 +1,211 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Exact roofline-cost reconstruction for the dry-run records.
+
+XLA's HloCostAnalysis counts a while-loop body ONCE regardless of trip
+count, so the scan-form dry-run modules (lax.scan over L stacked blocks and,
+for train, over U clients) undercount FLOPs / bytes / collective bytes by
+~L (and ~U*L for train). Fully unrolling the production-depth module is
+exact but compiles for >10 min per combo on this container.
+
+Instead we lower REDUCED-DEPTH, FULLY-UNROLLED probes (no while loops at
+all, so HloCostAnalysis is exact) and reconstruct the production cost by
+linear extrapolation — exact for homogeneous stacked blocks:
+
+  prefill/decode:   C(l) = rest + l * per_layer
+      probes l in {2, 4};  slope = (C4 - C2) / 2
+      true = C4 + (L_total - 4) * slope
+
+  train (temporal): C(U, l) = rest + U * (c + l * per_layer)
+      probes (U, l) in {(2,2), (2,4), (4,4)}
+      per_layer = (C(2,4) - C(2,2)) / 4
+      c         = (C(4,4) - C(2,4)) / 2 - 4 * per_layer
+      rest      = C(2,2) - 2 * c - 4 * per_layer
+      true      = rest + U* . (c + L* . per_layer)
+
+Every probe keeps the production per-client batch, mesh, shardings, remat
+and dtype — only the number of stacked blocks (and scan trip counts) shrink.
+
+    PYTHONPATH=src python -m repro.launch.costprobe --records experiments/dryrun
+    PYTHONPATH=src python -m repro.launch.costprobe --records experiments/dryrun_multipod --multi-pod
+"""
+
+import argparse
+import dataclasses
+import glob
+import json
+import sys
+import time
+
+import jax
+
+from repro.configs import get_config, get_shape
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_dryrun, windowed_variant
+
+PROBE_LS = (2, 4)
+
+
+def _reduced_cfg(cfg, l: int):
+    """Depth-l unrolled variant: decoder (and proportionally encoder) blocks."""
+    enc = 0
+    if cfg.enc_layers:
+        enc = max(1, round(cfg.enc_layers * l / cfg.L))
+    return dataclasses.replace(cfg, L=l, enc_layers=enc, unroll_layers=True)
+
+
+def _cost_of(cfg, shape, mesh, *, mode, fsdp, remat):
+    from repro.launch.dryrun import collective_bytes
+    step, args, in_sh, out_sh, meta = build_dryrun(
+        cfg, shape, mesh, mode=mode, fsdp=fsdp, remat=remat, unroll=False)
+    # cfg already carries unroll_layers=True; build_dryrun(unroll=False)
+    # simply does not override it.
+    t0 = time.time()
+    compiled = jax.jit(step, in_shardings=in_sh,
+                       out_shardings=out_sh).lower(*args).compile()
+    dt = time.time() - t0
+    cost = compiled.cost_analysis() or {}
+    coll = collective_bytes(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": float(coll["total"]),
+            "compile_s": round(dt, 1),
+            "meta": {k: v for k, v in meta.items() if k != "step"}}
+
+
+def _lin2(c2, c4, l_target):
+    """Linear extrapolation from depth-2/4 probes to depth l_target."""
+    out = {}
+    for k in ("flops", "bytes", "coll"):
+        slope = (c4[k] - c2[k]) / 2.0
+        out[k] = c4[k] + (l_target - 4) * slope
+    return out
+
+
+def probe_combo(arch: str, shape_name: str, *, multi_pod: bool,
+                mode: str = "temporal", attn_window: int = 0,
+                fsdp: str | None = "data", remat: bool = True,
+                cfg_overrides: dict | None = None,
+                verbose: bool = True) -> dict:
+    """Return corrected per-device cost terms + raw probes for one combo."""
+    cfg = get_config(arch)
+    if attn_window:
+        cfg = windowed_variant(cfg, attn_window)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    probes = {}
+
+    if shape.kind == "train" and mode != "spatial":
+        # production U/b for this mesh (mirrors specs.build_dryrun temporal)
+        from repro.launch.mesh import batch_axes
+        n_shards = 1
+        for ax, sz in zip(mesh.axis_names, mesh.devices.shape):
+            if ax in batch_axes(mesh):
+                n_shards *= sz
+        U_star = max(shape.global_batch // n_shards, 1)
+        b_star = shape.global_batch // U_star
+        samples = {}
+        for (u, l) in ((2, 2), (2, 4), (4, 4)):
+            sh = dataclasses.replace(shape, global_batch=u * b_star)
+            c = _cost_of(_reduced_cfg(cfg, l), sh, mesh, mode=mode,
+                         fsdp=fsdp, remat=remat)
+            samples[f"U{u}_L{l}"] = c
+            if verbose:
+                print(f"  [probe] {arch} {shape_name} U={u} l={l}: "
+                      f"flops {c['flops']:.3g} compile {c['compile_s']}s",
+                      flush=True)
+        out = {}
+        for k in ("flops", "bytes", "coll"):
+            per_layer = (samples["U2_L4"][k] - samples["U2_L2"][k]) / 4.0
+            c_const = ((samples["U4_L4"][k] - samples["U2_L4"][k]) / 2.0
+                       - 4.0 * per_layer)
+            rest = samples["U2_L2"][k] - 2.0 * c_const - 4.0 * per_layer
+            out[k] = rest + U_star * (c_const + cfg.L * per_layer)
+        probes = {"kind": "train", "U_star": U_star, "L_star": cfg.L,
+                  "samples": samples}
+    else:
+        # prefill/decode — and spatial-mode train, where clients are a vmap
+        # batch dim (no U while-loop): depth probes alone reconstruct costs.
+        cs = {}
+        for l in PROBE_LS:
+            c = _cost_of(_reduced_cfg(cfg, l), shape, mesh, mode=mode,
+                         fsdp=fsdp, remat=remat)
+            cs[l] = c
+            if verbose:
+                print(f"  [probe] {arch} {shape_name} l={l}: "
+                      f"flops {c['flops']:.3g} compile {c['compile_s']}s",
+                      flush=True)
+        out = _lin2(cs[2], cs[4], cfg.L)
+        probes = {"kind": shape.kind, "mode": mode, "L_star": cfg.L,
+                  "samples": {f"L{l}": c for l, c in cs.items()}}
+
+    out = {k: max(v, 0.0) for k, v in out.items()}
+    return {"corrected": out, "probes": probes}
+
+
+def correct_records(records_dir: str, *, multi_pod: bool,
+                    only: str | None = None) -> int:
+    """Rewrite each dry-run JSON with probe-corrected roofline terms."""
+    from repro.launch.dryrun import HBM_BW, ICI_BW, PEAK_FLOPS
+    n_fail = 0
+    for fn in sorted(glob.glob(os.path.join(records_dir, "*.json"))):
+        with open(fn) as f:
+            rec = json.load(f)
+        if "error" in rec:
+            continue
+        if only and only not in fn:
+            continue
+        arch, shape_name = rec["arch"], rec["shape"]
+        attn_window = 0
+        if arch.endswith("-swa4096"):
+            arch, attn_window = arch[:-len("-swa4096")], 4096
+        try:
+            res = probe_combo(arch, shape_name, multi_pod=multi_pod,
+                              mode=rec.get("mode", "temporal"),
+                              attn_window=attn_window)
+        except Exception as e:  # pragma: no cover
+            print(f"[costprobe] FAIL {arch} x {shape_name}: {e}",
+                  file=sys.stderr, flush=True)
+            n_fail += 1
+            continue
+        corr = res["corrected"]
+        rec["roofline_raw"] = rec.get("roofline_raw", rec["roofline"])
+        rec["flops_per_device_raw"] = rec.get(
+            "flops_per_device_raw", rec["flops_per_device"])
+        rec["flops_per_device"] = corr["flops"]
+        rec["bytes_per_device"] = corr["bytes"]
+        rec["collective_bytes_per_device_total"] = corr["coll"]
+        roof = {"compute_s": corr["flops"] / PEAK_FLOPS,
+                "memory_s": corr["bytes"] / HBM_BW,
+                "collective_s": corr["coll"] / ICI_BW}
+        roof["dominant"] = max(("compute_s", "memory_s", "collective_s"),
+                               key=lambda k: roof[k])
+        rec["roofline"] = roof
+        rec["cost_probes"] = res["probes"]
+        with open(fn, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[costprobe] {arch} x {shape_name} x {rec['mesh']}: "
+              f"flops/dev {corr['flops']:.3g} bytes/dev {corr['bytes']:.3g} "
+              f"coll/dev {corr['coll']:.3g} dominant={roof['dominant']}",
+              flush=True)
+    return n_fail
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--records", required=True,
+                    help="directory of dry-run JSONs to correct in place")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on record filenames")
+    args = ap.parse_args(argv)
+    return 1 if correct_records(args.records, multi_pod=args.multi_pod,
+                                only=args.only) else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,241 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: prove every (architecture x input-shape x mesh)
+combination lowers + compiles on the production mesh, and extract the
+roofline terms from the compiled artifact.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k --multi-pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out experiments/dryrun
+
+The two XLA_FLAGS lines above MUST precede any jax import (device count is
+locked at first init). Smoke tests / benches never import this module, so
+they see the single real CPU device.
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+
+import jax
+
+from repro.configs import ARCHS, INPUT_SHAPES, get_config, get_shape
+from repro.launch.mesh import make_production_mesh, mesh_chips
+from repro.launch.specs import build_client_probe, build_dryrun, windowed_variant
+
+# TPU v5e hardware constants (DESIGN.md §6)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link per chip
+
+_COLL_RE = re.compile(
+    r"ROOT\s+\S+\s*=\s*|(\S+)\s*=\s*((?:\((?:[^()]|\([^()]*\))*\))|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|s32|u64|u32|s16|u16|s8|u8|pred)"
+                       r"\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+                "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-operand bytes of every collective op in (SPMD, per-device)
+    HLO. Returns {op_kind: bytes, ..., 'total': bytes, 'count': n}."""
+    out: dict = {}
+    count = 0
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(
+            r"(?:ROOT\s+)?\S+\s*=\s*((?:\((?:[^()]|\([^()]*\))*\))|\S+?)\s+"
+            r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+            r"collective-permute)(?:-start)?\(", line)
+        if not m:
+            continue
+        ty, kind = m.group(1), m.group(2)
+        by = _shape_bytes(ty)
+        out[kind] = out.get(kind, 0) + by
+        count += 1
+    out["total"] = sum(v for k, v in out.items() if k != "count")
+    out["count"] = count
+    return out
+
+
+def _compile_and_cost(step, args, in_sh, out_sh):
+    """jit -> lower -> compile; return (compiled, flops, bytes, coll, times)."""
+    t0 = time.time()
+    jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+    lowered = jitted.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    cost = compiled.cost_analysis() or {}
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(compiled.as_text())
+    return compiled, flops, bytes_acc, coll, (t_lower, t_compile)
+
+
+def run_combo(arch: str, shape_name: str, *, multi_pod: bool = False,
+              mode: str = "temporal", attn_window: int = 0,
+              fsdp: str | None = "data", remat: bool = True,
+              unroll: bool = False, verbose: bool = True) -> dict:
+    """Lower + compile one (arch x shape x mesh) combination.
+
+    ``unroll=True`` lowers the cost-analysis form: layers fully
+    unrolled so HloCostAnalysis sees every block (it counts while-loop bodies
+    once, undercounting the scan form by ~L). For train steps the remaining
+    U-client scan is corrected with a standalone scan-body probe:
+    true = module + (U-1) * client_body. ``unroll=False`` records the
+    production scan form (HLO size O(1) in depth) without correction.
+    """
+    cfg = get_config(arch)
+    if attn_window:
+        cfg = windowed_variant(cfg, attn_window)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_chips(mesh)
+    step, args, in_sh, out_sh, meta = build_dryrun(
+        cfg, shape, mesh, mode=mode, fsdp=fsdp, remat=remat, unroll=unroll)
+    compiled, flops, bytes_acc, coll, (t_lower, t_compile) = \
+        _compile_and_cost(step, args, in_sh, out_sh)
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {k: int(getattr(mem, k)) for k in
+                 ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes")
+                 if hasattr(mem, k)}
+    except Exception as e:  # pragma: no cover
+        mem_d = {"error": str(e)}
+
+    probe_d = None
+    if meta["step"] == "train_step" and mode == "temporal" and unroll:
+        # correct the U-client scan (counted once by HloCostAnalysis)
+        U, b = meta["U"], meta["client_batch"]
+        pstep, pargs, pin, pout = build_client_probe(
+            cfg, shape, mesh, U=U, b=b, remat=remat, fsdp=fsdp, unroll=True)
+        _, pf, pb, pc, (_, pt) = _compile_and_cost(pstep, pargs, pin, pout)
+        probe_d = {"flops": pf, "bytes": pb, "coll": pc["total"],
+                   "compile_s": round(pt, 1)}
+        flops += (U - 1) * pf
+        bytes_acc += (U - 1) * pb
+        coll = dict(coll)
+        coll["total"] += (U - 1) * pc["total"]
+
+    record = {
+        "arch": cfg.name, "shape": shape.name, "mesh": "2x16x16" if multi_pod
+        else "16x16", "chips": chips, "mode": mode, **meta,
+        "unroll": unroll,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        # cost_analysis / HLO text are per-device after SPMD partitioning
+        "flops_per_device": flops, "bytes_per_device": bytes_acc,
+        "collective_bytes_per_device": coll,
+        "client_probe": probe_d,
+        "memory": mem_d,
+        "roofline": {
+            "compute_s": flops / PEAK_FLOPS,
+            "memory_s": bytes_acc / HBM_BW,
+            "collective_s": coll["total"] / ICI_BW,
+        },
+    }
+    r = record["roofline"]
+    record["roofline"]["dominant"] = max(
+        ("compute_s", "memory_s", "collective_s"), key=lambda k: r[k])
+    if verbose:
+        print(f"[dryrun] {cfg.name} x {shape.name} x {record['mesh']} "
+              f"({meta['step']}, mode={mode}): compile {t_compile:.1f}s  "
+              f"flops/dev {flops:.3g}  bytes/dev {bytes_acc:.3g}  "
+              f"coll/dev {coll['total']:.3g}  dominant={r['dominant']}")
+    return record
+
+
+def iter_combos(include_swa: bool = False):
+    for arch, cfg in ARCHS.items():
+        for shape_name, shape in INPUT_SHAPES.items():
+            if (shape.kind == "decode" and shape.seq_len > 262_144
+                    and not cfg.sub_quadratic):
+                if include_swa:
+                    yield arch, shape_name, {"attn_window": 4096}
+                continue
+            yield arch, shape_name, {}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mode", default="temporal",
+                    choices=["temporal", "spatial"])
+    ap.add_argument("--attn-window", type=int, default=0)
+    ap.add_argument("--fsdp", default="data")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--unroll", action="store_true",
+                    help="lower with fully unrolled layers (exact cost "
+                         "analysis; SLOW for train steps — prefer "
+                         "repro.launch.costprobe for corrected costs)")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) for this mesh")
+    ap.add_argument("--out", default=None, help="JSON output path or dir")
+    args = ap.parse_args(argv)
+
+    fsdp = None if args.fsdp in ("none", "") else args.fsdp
+    records = []
+    if args.all:
+        for arch, shape_name, kw in iter_combos():
+            try:
+                rec = run_combo(arch, shape_name, multi_pod=args.multi_pod,
+                                mode=args.mode, fsdp=fsdp,
+                                remat=not args.no_remat,
+                                unroll=args.unroll, **kw)
+            except Exception as e:
+                rec = {"arch": arch, "shape": shape_name,
+                       "mesh": "2x16x16" if args.multi_pod else "16x16",
+                       "error": f"{type(e).__name__}: {e}"}
+                print(f"[dryrun] FAIL {arch} x {shape_name}: {e}",
+                      file=sys.stderr)
+            records.append(rec)
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        records.append(run_combo(
+            args.arch, args.shape, multi_pod=args.multi_pod, mode=args.mode,
+            attn_window=args.attn_window, fsdp=fsdp,
+            remat=not args.no_remat, unroll=args.unroll))
+
+    if args.out:
+        out = args.out
+        if os.path.isdir(out) or not out.endswith(".json"):
+            os.makedirs(out, exist_ok=True)
+            for rec in records:
+                fn = (f"{rec['arch']}__{rec['shape']}__"
+                      f"{rec['mesh'].replace('x', '_')}.json")
+                with open(os.path.join(out, fn), "w") as f:
+                    json.dump(rec, f, indent=1)
+        else:
+            with open(out, "w") as f:
+                json.dump(records, f, indent=1)
+    n_fail = sum(1 for r in records if "error" in r)
+    print(f"[dryrun] {len(records) - n_fail}/{len(records)} combos OK")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,29 @@
+"""Production mesh construction (TPU v5e target).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state; ``dryrun.py`` sets ``XLA_FLAGS=--xla_force_host_platform_device_count``
+BEFORE importing jax.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "batch_axes", "mesh_chips"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips, axes (data, model).
+    Multi-pod: 2x16x16 = 512 chips, axes (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def batch_axes(mesh) -> tuple:
+    """The axes the (client/batch) dimension shards over."""
+    names = mesh.axis_names
+    return ("pod", "data") if "pod" in names else ("data",)
+
+
+def mesh_chips(mesh) -> int:
+    return mesh.devices.size

@@ -1,0 +1,84 @@
+"""Batched serving driver: prefill a batch of prompts, then greedy-decode.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --batch 4 \
+        --prompt-len 32 --new-tokens 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.steps import make_serve_step
+from repro.models import transformer as tr
+
+
+def serve(arch: str, *, batch: int = 4, prompt_len: int = 32,
+          new_tokens: int = 32, seed: int = 0, reduced: bool = True,
+          verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    key = jax.random.PRNGKey(seed)
+    key, k_init, k_prompt = jax.random.split(key, 3)
+    params = tr.init_params(k_init, cfg)
+    prompts = jax.random.randint(k_prompt, (batch, prompt_len), 0, cfg.vocab)
+
+    max_seq = prompt_len + new_tokens
+    cache = tr.init_cache(cfg, batch, max_seq, dtype=jnp.float32)
+    if cfg.enc_layers:
+        frames = 0.02 * jax.random.normal(
+            key, (batch, cfg.n_frontend_tokens, cfg.d_model))
+        enc_out = tr._run_encoder(params, cfg, frames, jnp.dtype(cfg.dtype))
+        cache = cache._replace(cross=tr.build_cross_cache(params, cfg, enc_out))
+
+    step = jax.jit(make_serve_step(cfg))
+
+    # prefill by stepping the prompt through the decode path (cache fill);
+    # production prefill is the batched forward (see launch/specs.py)
+    t0 = time.time()
+    tok = prompts[:, 0]
+    for i in range(prompt_len - 1):
+        _, cache = step(params, cache, prompts[:, i], jnp.int32(i))
+    t_prefill = time.time() - t0
+
+    out = [prompts[:, -1]]
+    t0 = time.time()
+    pos = prompt_len - 1
+    tok = prompts[:, -1]
+    for j in range(new_tokens):
+        tok, cache = step(params, cache, tok, jnp.int32(pos + j))
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+    gen = np.stack([np.asarray(t) for t in out[1:]], axis=1)
+    tps = batch * new_tokens / max(t_decode, 1e-9)
+    if verbose:
+        print(f"[serve] {cfg.name}: prefill {prompt_len} toks in "
+              f"{t_prefill:.2f}s; decoded {new_tokens} x {batch} in "
+              f"{t_decode:.2f}s ({tps:.1f} tok/s)")
+        print(f"[serve] sample continuation: {gen[0, :16].tolist()}")
+    return {"arch": cfg.name, "tok_per_s": tps, "generated": gen.tolist()}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+    serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
+          new_tokens=args.new_tokens, seed=args.seed,
+          reduced=not args.full)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,196 @@
+"""Abstract input specs (ShapeDtypeStruct) + shardings for every
+(architecture x input shape x mesh) combination — the dry-run path.
+
+No device memory is ever allocated here: params/caches/batches are
+``jax.ShapeDtypeStruct`` stand-ins produced with ``jax.eval_shape``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.launch.mesh import batch_axes
+from repro.models import transformer as tr
+
+PyTree = Any
+
+__all__ = ["abstract_params", "default_clients", "build_dryrun",
+           "text_len"]
+
+
+def abstract_params(cfg: ArchConfig, dtype) -> PyTree:
+    fn = functools.partial(tr.init_params, cfg=cfg, dtype=dtype)
+    return jax.eval_shape(lambda k: fn(k), jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def default_clients(mesh) -> int:
+    """Simulated FL clients U = data-parallel group count (DESIGN §5)."""
+    names = dict(zip(mesh.axis_names, mesh.devices.shape))
+    U = names.get("data", 1) * names.get("pod", 1)
+    return U
+
+
+def text_len(cfg: ArchConfig, shape: InputShape) -> int:
+    """Text tokens through the decoder. VLM: shape.seq_len covers the image
+    patches + text; audio: the decoder length is shape.seq_len (frames are a
+    fixed encoder-side budget)."""
+    if cfg.frontend == "vision":
+        return max(shape.seq_len - cfg.n_frontend_tokens, 128)
+    return shape.seq_len
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _ns(mesh, spec):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_dryrun(cfg: ArchConfig, shape: InputShape, mesh, *,
+                 mode: str = "temporal", U: int | None = None,
+                 remat: bool = True, fsdp: str | None = "data",
+                 unroll: bool = False, spatial_batch_axes=None):
+    """Returns (step_fn, args, in_shardings, out_shardings, meta).
+
+    ``unroll=True`` lowers with fully unrolled layers (the cost-analysis
+    form — see ArchConfig.unroll_layers); False keeps the O(1)-HLO scan form.
+
+    Raises ValueError for (arch, shape) combinations that are skipped by
+    design (long_500k on full-attention archs; see DESIGN.md §4).
+    """
+    from repro.launch import steps as st
+
+    if unroll:
+        cfg = dataclasses.replace(cfg, unroll_layers=True)
+
+    batch = batch_axes(mesh)
+    bspec = batch if len(batch) > 1 else batch[0]
+    n_batch_shards = 1
+    for ax, sz in zip(mesh.axis_names, mesh.devices.shape):
+        if ax in batch:
+            n_batch_shards *= sz
+    if shape.global_batch % n_batch_shards != 0:
+        bspec = None               # e.g. long_500k B=1: replicate the batch dim
+    L_tot = cfg.n_blocks_total
+    fsdp_ax = fsdp
+    pspec = tr.param_specs(abstract_params(cfg, jnp.float32), cfg,
+                           fsdp=fsdp_ax, tp="model")
+
+    if shape.kind == "train":
+        if U is None:
+            if mode == "spatial":
+                U = n_batch_shards          # clients live on the batch axes
+            else:
+                # temporal: per-client batch exactly fills the batch shards
+                U = max(shape.global_batch // n_batch_shards, 1)
+        b = st.client_batch(cfg, shape, U)
+        if mode != "spatial" and b % n_batch_shards != 0:
+            raise ValueError(f"client batch {b} not divisible by "
+                             f"{n_batch_shards} batch shards")
+        S = text_len(cfg, shape)
+        params = abstract_params(cfg, jnp.float32)
+        tok = _sds((U, b, S), jnp.int32)
+        lab = _sds((U, b, S), jnp.int32)
+        mask = _sds((U, L_tot), jnp.float32)
+        p = _sds((L_tot,), jnp.float32)
+        eta = _sds((), jnp.float32)
+        if mode == "spatial":
+            dspec = P(bspec, None, None)
+        else:
+            dspec = P(None, bspec, None)
+        args = [params, tok, lab, mask, p, eta]
+        shard = [pspec, dspec, dspec, P(None, None), P(None), P()]
+        step = st.make_train_step(cfg, U=U, mode=mode, remat=remat)
+        if cfg.frontend != "none":
+            nf = cfg.n_frontend_tokens
+            args.append(_sds((U, b, nf, cfg.d_model), jnp.bfloat16))
+            shard.append(P(None, bspec, None, None) if mode != "spatial"
+                         else P(bspec, None, None, None))
+        out_shard = pspec
+        meta = {"step": "train_step", "U": U, "client_batch": b, "seq": S}
+
+    elif shape.kind == "prefill":
+        B = shape.global_batch
+        S = text_len(cfg, shape)
+        params = abstract_params(cfg, jnp.bfloat16)
+        step = st.make_prefill_step(cfg)
+        args = [params, _sds((B, S), jnp.int32)]
+        shard = [pspec, P(bspec, None)]
+        if cfg.frontend != "none":
+            args.append(_sds((B, cfg.n_frontend_tokens, cfg.d_model),
+                             jnp.bfloat16))
+            shard.append(P(bspec, None, None))
+        out_shard = P(bspec, "model")
+        meta = {"step": "prefill_step", "B": B, "seq": S}
+
+    else:  # decode
+        if not cfg.sub_quadratic and shape.seq_len > 262_144:
+            raise ValueError(
+                f"{cfg.name} is full-attention; long_500k is skipped per "
+                "DESIGN.md §4 (use --attn-window for the SWA variant)")
+        B = shape.global_batch
+        S = shape.seq_len
+        params = abstract_params(cfg, jnp.bfloat16)
+        cache = jax.eval_shape(
+            lambda: tr.init_cache(cfg, B, S, dtype=jnp.bfloat16))
+        if cfg.enc_layers:
+            enc = _sds((B, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16)
+            aparams = params
+            cross = jax.eval_shape(
+                lambda pp, ee: tr.build_cross_cache(pp, cfg, ee),
+                aparams, enc)
+            cache = cache._replace(cross=cross)
+        cspec = tr.cache_specs(cache, cfg, batch=bspec, tp="model")
+        step = st.make_serve_step(cfg)
+        args = [params, cache, _sds((B,), jnp.int32), _sds((), jnp.int32)]
+        shard = [pspec, cspec, P(bspec), P()]
+        out_shard = (P(bspec), cspec)
+        meta = {"step": "serve_step", "B": B, "cache_seq": S}
+
+    in_sh = tuple(_ns(mesh, s) for s in shard)
+    out_sh = _ns(mesh, out_shard)
+    return step, tuple(args), in_sh, out_sh, meta
+
+
+def build_client_probe(cfg: ArchConfig, shape: InputShape, mesh, *,
+                       U: int, b: int, remat: bool = True,
+                       fsdp: str | None = "data", unroll: bool = True):
+    """Standalone temporal-mode scan-body (one client's weighted gradient)
+    for the dry-run cost correction. Same shardings as the train module."""
+    from repro.launch import steps as st
+
+    if unroll:
+        cfg = dataclasses.replace(cfg, unroll_layers=True)
+    batch = batch_axes(mesh)
+    bspec = batch if len(batch) > 1 else batch[0]
+    L_tot = cfg.n_blocks_total
+    pspec = tr.param_specs(abstract_params(cfg, jnp.float32), cfg,
+                           fsdp=fsdp, tp="model")
+    S = text_len(cfg, shape)
+    params = abstract_params(cfg, jnp.float32)
+    args = [params, _sds((b, S), jnp.int32), _sds((b, S), jnp.int32),
+            _sds((L_tot,), jnp.float32)]
+    shard = [pspec, P(bspec, None), P(bspec, None), P(None)]
+    if cfg.frontend != "none":
+        args.append(_sds((b, cfg.n_frontend_tokens, cfg.d_model),
+                         jnp.bfloat16))
+        shard.append(P(bspec, None, None))
+    step = st.make_client_grad(cfg, remat=remat)
+    in_sh = tuple(_ns(mesh, s) for s in shard)
+    out_sh = _ns(mesh, pspec)
+    return step, tuple(args), in_sh, out_sh
+
+
+def windowed_variant(cfg: ArchConfig, window: int = 4096) -> ArchConfig:
+    """Beyond-paper sliding-window serve variant for dense archs (enables
+    long_500k dry-runs; recorded separately in EXPERIMENTS.md)."""
+    return dataclasses.replace(cfg, window=window,
+                               name=f"{cfg.name}-swa{window}")

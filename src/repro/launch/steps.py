@@ -1,0 +1,189 @@
+"""Step functions lowered onto the production mesh.
+
+``make_train_step`` is ONE FEDERATED ROUND of ADEL-FL for a big
+architecture: per-client gradients -> per-(client, layer) truncation mask
+from the straggler model -> bias-corrected layer-wise aggregation (Eq. 5,
+gradient form) -> server SGD update. The paper's server aggregation becomes
+jax.lax/GSPMD collectives on the mesh.
+
+Two client layouts:
+
+* ``temporal`` (default) — clients are grad-accumulation microbatches:
+  ``lax.scan`` over U, each client's batch data-parallel over the whole
+  mesh; the ADEL coefficient c[u, l] is folded into the accumulation, so
+  peak memory is ONE gradient pytree regardless of U. Required for the
+  480B-class architectures.
+* ``spatial`` — clients live on the data mesh axis (vmap over U); one
+  client's full gradient per data shard. Lower latency for models whose
+  gradient fits per-device; a §Perf lever.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.aggregation import aggregate_grads, layer_coefficients
+from repro.models import transformer as tr
+
+PyTree = Any
+
+__all__ = ["make_train_step", "make_prefill_step", "make_serve_step",
+           "make_client_grad", "client_batch"]
+
+
+def client_batch(cfg: ArchConfig, shape, U: int) -> int:
+    """Per-client batch b = global_batch / U."""
+    assert shape.global_batch % U == 0, (shape.global_batch, U)
+    return shape.global_batch // U
+
+
+def _weight_by_layer(g: jnp.ndarray, ids: jnp.ndarray,
+                     c_row: jnp.ndarray) -> jnp.ndarray:
+    """Scale one grad leaf by this client's per-layer coefficient."""
+    ids = jnp.asarray(ids)
+    if ids.ndim == 0:
+        return g * c_row[ids]
+    w = jnp.take(c_row, ids)                       # (L,)
+    return g * w.reshape((-1,) + (1,) * (g.ndim - 1))
+
+
+def make_train_step(cfg: ArchConfig, *, U: int, mode: str = "temporal",
+                    remat: bool = True, moe_aux_coef: float = 0.01):
+    """Returns train_step(params, tokens, labels, mask, p, eta[, frontend]).
+
+    tokens/labels: (U, b, S) int32; mask: (U, L_total) f32 straggler
+    contribution mask; p: (L_total,) zero-contributor probabilities;
+    eta: scalar f32. frontend: (U, b, n_front, D) for vlm/audio.
+    Returns updated params.
+    """
+    has_front = cfg.frontend != "none"
+
+    def client_loss(params, tok, lab, fr):
+        return tr.loss_fn(params, cfg, tok, lab, frontend=fr,
+                          moe_aux_coef=moe_aux_coef, remat=remat)
+
+    def train_step(params, tokens, labels, mask, p, eta, frontend):
+        ids = tr.layer_ids(params, cfg)
+        coeffs = layer_coefficients(mask, p)       # (U, L_total)
+        if mode == "spatial":
+            grads = jax.vmap(jax.grad(client_loss),
+                             in_axes=(None, 0, 0, 0))(
+                params, tokens, labels, frontend)
+            agg = aggregate_grads(grads, ids, mask, p)
+        else:
+            def body(acc, inp):
+                tok, lab, c_row, fr = inp
+                g = jax.grad(client_loss)(params, tok, lab, fr)
+                gw = jax.tree.map(
+                    lambda gl, idl: _weight_by_layer(
+                        gl.astype(jnp.float32), idl, c_row), g, ids)
+                return jax.tree.map(jnp.add, acc, gw), None
+
+            acc0 = jax.tree.map(
+                lambda w: jnp.zeros(w.shape, jnp.float32), params)
+            agg, _ = jax.lax.scan(body, acc0,
+                                  (tokens, labels, coeffs, frontend),
+                                  unroll=bool(cfg.unroll_layers))
+        new_params = jax.tree.map(
+            lambda w, g: (w.astype(jnp.float32)
+                          - eta * g.astype(jnp.float32)).astype(w.dtype),
+            params, agg)
+        return new_params
+
+    if not has_front:
+        # drop the frontend arg entirely so lowering signatures stay minimal
+        def train_step_nf(params, tokens, labels, mask, p, eta):
+            def client_loss_nf(params, tok, lab):
+                return tr.loss_fn(params, cfg, tok, lab,
+                                  moe_aux_coef=moe_aux_coef, remat=remat)
+
+            ids = tr.layer_ids(params, cfg)
+            coeffs = layer_coefficients(mask, p)
+            if mode == "spatial":
+                grads = jax.vmap(jax.grad(client_loss_nf),
+                                 in_axes=(None, 0, 0))(params, tokens, labels)
+                agg = aggregate_grads(grads, ids, mask, p)
+            else:
+                def body(acc, inp):
+                    tok, lab, c_row = inp
+                    g = jax.grad(client_loss_nf)(params, tok, lab)
+                    gw = jax.tree.map(
+                        lambda gl, idl: _weight_by_layer(
+                            gl.astype(jnp.float32), idl, c_row), g, ids)
+                    return jax.tree.map(jnp.add, acc, gw), None
+
+                acc0 = jax.tree.map(
+                    lambda w: jnp.zeros(w.shape, jnp.float32), params)
+                agg, _ = jax.lax.scan(body, acc0, (tokens, labels, coeffs),
+                                      unroll=bool(cfg.unroll_layers))
+            return jax.tree.map(
+                lambda w, g: (w.astype(jnp.float32)
+                              - eta * g.astype(jnp.float32)).astype(w.dtype),
+                params, agg)
+
+        return train_step_nf
+    return train_step
+
+
+def make_client_grad(cfg: ArchConfig, *, remat: bool = True,
+                     moe_aux_coef: float = 0.01):
+    """The temporal-mode U-scan body as a standalone step, used by the
+    dry-run to correct HloCostAnalysis's count-while-body-once behaviour:
+
+        true_train_cost = module_cost + (U - 1) * client_grad_cost
+
+    Signature: (params, tok (b,S), lab (b,S), c_row (L_tot,)[, frontend])
+    -> weighted f32 gradient pytree (congruent with params).
+    """
+    has_front = cfg.frontend != "none"
+
+    def _grad(params, tok, lab, fr):
+        def client_loss(p):
+            return tr.loss_fn(p, cfg, tok, lab, frontend=fr,
+                              moe_aux_coef=moe_aux_coef, remat=remat)
+        return jax.grad(client_loss)(params)
+
+    def _weight(params, g, c_row):
+        ids = tr.layer_ids(params, cfg)
+        return jax.tree.map(
+            lambda gl, idl: _weight_by_layer(gl.astype(jnp.float32), idl,
+                                             c_row), g, ids)
+
+    if has_front:
+        def client_grad(params, tok, lab, c_row, frontend):
+            return _weight(params, _grad(params, tok, lab, frontend), c_row)
+        return client_grad
+
+    def client_grad_nf(params, tok, lab, c_row):
+        return _weight(params, _grad(params, tok, lab, None), c_row)
+    return client_grad_nf
+
+
+def make_prefill_step(cfg: ArchConfig):
+    """prefill_step(params, tokens[, frontend]) -> last-position logits."""
+    if cfg.frontend == "none":
+        def prefill_step(params, tokens):
+            return tr.prefill(params, cfg, tokens)
+        return prefill_step
+
+    def prefill_step_f(params, tokens, frontend):
+        return tr.prefill(params, cfg, tokens, frontend=frontend)
+    return prefill_step_f
+
+
+def make_serve_step(cfg: ArchConfig, *, greedy: bool = True):
+    """serve_step(params, cache, token, pos) -> (next_token, new_cache).
+
+    ONE new token against a KV/SSM cache of the shape's seq_len.
+    """
+
+    def serve_step(params, cache, token, pos):
+        logits, cache = tr.decode_step(params, cfg, cache, token, pos)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return serve_step

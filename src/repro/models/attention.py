@@ -1,0 +1,167 @@
+"""Attention primitives: GQA (optionally sliding-window), RoPE (full / half
+"2d" ChatGLM-style), KV caches (full and rolling-window), and MLA
+(DeepSeek-V2 multi-head latent attention) with a compressed KV cache.
+
+All functions are pure jnp; the Pallas flash-attention kernel in
+``repro.kernels`` is an optional drop-in for the prefill path (see ops.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rope", "gqa_attention", "decode_attention", "mla_prefill",
+           "mla_decode"]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def _rope_angles(positions: jnp.ndarray, dim: int, theta: float) -> tuple:
+    """positions (...,) -> (cos, sin) of shape (..., dim//2), float32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, *, mode: str = "full",
+         theta: float = 10000.0) -> jnp.ndarray:
+    """Apply rotary embedding. x: (B, S, H, hd); positions: (B, S) or (S,).
+
+    mode: "full" rotates the whole head dim; "half" (ChatGLM 2d-RoPE style)
+    rotates only the first half and passes the rest through; "none" is id.
+    """
+    if mode == "none":
+        return x
+    hd = x.shape[-1]
+    rot = hd if mode == "full" else hd // 2
+    xr, xp = x[..., :rot], x[..., rot:]
+    cos, sin = _rope_angles(positions, rot, theta)          # (B, S, rot/2)
+    cos = cos[..., None, :].astype(x.dtype)                 # (B, S, 1, rot/2)
+    sin = sin[..., None, :].astype(x.dtype)
+    x1, x2 = jnp.split(xr, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out, xp], axis=-1) if rot < hd else out
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (training / prefill)
+# ---------------------------------------------------------------------------
+
+def gqa_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: int = 0,
+                  q_pos0: int | jnp.ndarray = 0) -> jnp.ndarray:
+    """q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd); H = KV * G. Returns (B, Sq, H, hd).
+
+    ``window`` > 0 restricts attention to the last ``window`` keys
+    (sliding-window attention). ``q_pos0`` is the absolute position of the
+    first query (for prefill continuation / decode).
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qr = q.reshape(B, Sq, KV, G, hd)
+    scale = hd ** -0.5
+    scores = jnp.einsum("bskgd,btkd->bkgst", qr.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale      # (B,KV,G,Sq,Sk)
+    qpos = q_pos0 + jnp.arange(Sq)
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     n_valid: jnp.ndarray, *, rolling: bool = False) -> jnp.ndarray:
+    """Single-token decode. q: (B, 1, H, hd); caches: (B, S, KV, hd).
+
+    ``n_valid``: number of valid cache entries (scalar). With ``rolling=True``
+    (sliding-window cache) every slot is valid once the window has filled;
+    validity is still bounded by ``n_valid`` for the warm-up phase.
+    """
+    B, _, H, hd = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    qr = q.reshape(B, KV, G, hd)
+    scale = hd ** -0.5
+    scores = jnp.einsum("bkgd,btkd->bkgt", qr.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale   # (B,KV,G,S)
+    slot = jnp.arange(k_cache.shape[1])
+    valid = slot < n_valid
+    scores = jnp.where(valid[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", probs.astype(v_cache.dtype), v_cache)
+    return out.reshape(B, 1, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, DeepSeek-V2) — compressed KV cache
+# ---------------------------------------------------------------------------
+
+def mla_prefill(x: jnp.ndarray, p: dict, cfg, positions: jnp.ndarray):
+    """Prefill/train MLA. x: (B, S, D). Returns (attn_out (B,S,D), (c_kv, k_pe)).
+
+    Params p: wq (D, H*(dn+dr)), w_dkv (D, c), w_uk (c, H*dn), w_uv (c, H*dv),
+    w_kr (D, dr), wo (H*dv, D).
+    """
+    B, S, D = x.shape
+    H, dn, dr, dv, c = cfg.n_heads, cfg.mla_nope_dim, cfg.mla_rope_dim, \
+        cfg.mla_v_dim, cfg.kv_lora
+    q = (x @ p["wq"]).reshape(B, S, H, dn + dr)
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+    q_pe = rope(q_pe, positions, mode="full", theta=cfg.rope_theta)
+    c_kv = x @ p["w_dkv"]                                   # (B, S, c)
+    k_pe = rope((x @ p["w_kr"])[:, :, None, :], positions,
+                mode="full", theta=cfg.rope_theta)[:, :, 0]  # (B, S, dr) shared
+    k_nope = (c_kv @ p["w_uk"]).reshape(B, S, H, dn)
+    v = (c_kv @ p["w_uv"]).reshape(B, S, H, dv)
+    scale = (dn + dr) ** -0.5
+    s_nope = jnp.einsum("bshd,bthd->bhst", q_nope.astype(jnp.float32),
+                        k_nope.astype(jnp.float32))
+    s_pe = jnp.einsum("bshd,btd->bhst", q_pe.astype(jnp.float32),
+                      k_pe.astype(jnp.float32))
+    scores = (s_nope + s_pe) * scale
+    qpos = jnp.arange(S)
+    mask = qpos[None, :] <= qpos[:, None]
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs.astype(v.dtype), v)
+    return out.reshape(B, S, H * dv) @ p["wo"], (c_kv, k_pe)
+
+
+def mla_decode(x: jnp.ndarray, p: dict, cfg, c_cache: jnp.ndarray,
+               kpe_cache: jnp.ndarray, pos: jnp.ndarray):
+    """Absorbed-matrix MLA decode: scores computed against the COMPRESSED
+    cache (c_kv, k_pe) without re-expanding K/V — the latent cache is the
+    whole point of MLA. x: (B, 1, D); c_cache: (B, S, c); kpe: (B, S, dr).
+    """
+    B, _, D = x.shape
+    H, dn, dr, dv, c = cfg.n_heads, cfg.mla_nope_dim, cfg.mla_rope_dim, \
+        cfg.mla_v_dim, cfg.kv_lora
+    q = (x @ p["wq"]).reshape(B, 1, H, dn + dr)
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+    q_pe = rope(q_pe, pos[None, None], mode="full", theta=cfg.rope_theta)
+    # absorb W_uk into the query: q_c (B, H, c)
+    w_uk = p["w_uk"].reshape(c, H, dn)
+    q_c = jnp.einsum("bhd,chd->bhc", q_nope[:, 0].astype(jnp.float32),
+                     w_uk.astype(jnp.float32))
+    s_c = jnp.einsum("bhc,btc->bht", q_c, c_cache.astype(jnp.float32))
+    s_pe = jnp.einsum("bhd,btd->bht", q_pe[:, 0].astype(jnp.float32),
+                      kpe_cache.astype(jnp.float32))
+    scores = (s_c + s_pe) * ((dn + dr) ** -0.5)
+    valid = jnp.arange(c_cache.shape[1]) < pos + 1
+    scores = jnp.where(valid[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)                  # (B, H, S)
+    # attend in latent space then expand through W_uv (absorbed output)
+    ctx_c = jnp.einsum("bht,btc->bhc", probs, c_cache.astype(jnp.float32))
+    w_uv = p["w_uv"].reshape(c, H, dv)
+    ctx = jnp.einsum("bhc,chd->bhd", ctx_c, w_uv.astype(jnp.float32))
+    out = ctx.reshape(B, 1, H * dv).astype(x.dtype)
+    return out @ p["wo"]

@@ -1,0 +1,77 @@
+"""Mixture-of-Experts FFN with token-choice top-k routing, fixed expert
+capacity, and a load-balance auxiliary loss (Switch/GShard style).
+
+Dispatch avoids the O(tokens x experts x capacity) one-hot tensors of the
+classic GShard einsum formulation (prohibitive at 128 experts): assignments
+are positioned with a cumulative-sum within each expert and scattered into a
+compact (E, C, D) buffer, matmul'd per expert, and combined back with the
+router weights. Experts are sharded on the "model" mesh axis (expert
+parallelism); tokens live on the data axes, so the scatter/gather pair is
+the all-to-all boundary of the layer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["moe_ffn", "router_topk"]
+
+
+def router_topk(x2d: jnp.ndarray, w_router: jnp.ndarray, top_k: int):
+    """Token-choice routing. x2d: (N, D) -> (weights (N,K), experts (N,K), aux).
+
+    aux is the Switch load-balance loss: E * sum_e f_e * p_e.
+    """
+    logits = x2d.astype(jnp.float32) @ w_router.astype(jnp.float32)  # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, top_k)                             # (N, K)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    E = w_router.shape[1]
+    f = jnp.zeros(E).at[idx.reshape(-1)].add(1.0) / (idx.size)
+    p = probs.mean(0)
+    aux = E * jnp.sum(f * p)
+    return w, idx, aux
+
+
+def moe_ffn(x2d: jnp.ndarray, p: dict, *, top_k: int,
+            capacity_factor: float = 1.25, activation=jax.nn.silu):
+    """x2d: (N, D). Params p: router (D, E), wg/wu (E, D, F), wd (E, F, D).
+
+    Returns (out (N, D), aux_loss scalar).
+    """
+    N, D = x2d.shape
+    E = p["router"].shape[1]
+    F = p["wg"].shape[-1]
+    K = top_k
+    C = max(int(N * K * capacity_factor / E), 1)
+
+    weights, experts, aux = router_topk(x2d, p["router"], K)         # (N,K)
+
+    flat_e = experts.reshape(-1)                                     # (N*K,)
+    flat_w = weights.reshape(-1)
+    token_of = jnp.repeat(jnp.arange(N), K)
+
+    # position of each assignment within its expert (order = flattened index)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)              # (N*K, E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - onehot
+    pos = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+    keep = pos < C                                                   # capacity drop
+    slot = flat_e * C + jnp.where(keep, pos, 0)
+
+    # dispatch: (E*C, D) buffer
+    buf = jnp.zeros((E * C, D), x2d.dtype)
+    src = jnp.where(keep[:, None], x2d[token_of], 0)
+    buf = buf.at[slot].add(jnp.where(keep[:, None], src, 0))
+    buf = buf.reshape(E, C, D)
+
+    # expert computation (SwiGLU)
+    g = jnp.einsum("ecd,edf->ecf", buf, p["wg"])
+    u = jnp.einsum("ecd,edf->ecf", buf, p["wu"])
+    h = activation(g) * u
+    y = jnp.einsum("ecf,efd->ecd", h, p["wd"]).reshape(E * C, D)
+
+    # combine: gather each assignment's expert output, weight, and sum per token
+    gathered = jnp.where(keep[:, None], y[slot], 0)                  # (N*K, D)
+    out = jnp.zeros((N, D), x2d.dtype)
+    out = out.at[token_of].add(gathered * flat_w[:, None].astype(x2d.dtype))
+    return out, aux

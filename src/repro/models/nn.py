@@ -1,0 +1,61 @@
+"""Tiny pure-JAX NN building blocks for the paper-scale models."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["dense_init", "conv_init", "conv2d", "maxpool2d", "group_norm",
+           "cross_entropy"]
+
+
+def dense_init(key, d_in: int, d_out: int, scale: float | None = None):
+    """He-normal by default; ``scale=0.0`` zero-inits (classifier heads,
+    giving exactly log(n_classes) initial CE loss)."""
+    scale = scale if scale is not None else float(np.sqrt(2.0 / d_in))
+    w = scale * jax.random.normal(key, (d_in, d_out), jnp.float32)
+    return {"w": w, "b": jnp.zeros((d_out,), jnp.float32)}
+
+
+def conv_init(key, k: int, c_in: int, c_out: int):
+    scale = float(np.sqrt(2.0 / (k * k * c_in)))
+    w = scale * jax.random.normal(key, (k, k, c_in, c_out), jnp.float32)
+    return {"w": w, "b": jnp.zeros((c_out,), jnp.float32)}
+
+
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+           stride: int = 1, padding: str = "SAME") -> jnp.ndarray:
+    """NHWC conv with HWIO weights."""
+    out = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return out + b
+
+
+def group_norm(x: jnp.ndarray, g: jnp.ndarray, o: jnp.ndarray,
+               groups: int = 8, eps: float = 1e-5) -> jnp.ndarray:
+    """GroupNorm over NHWC (the FL-standard replacement for BatchNorm,
+    whose batch statistics break under non-IID client data)."""
+    N, H, W, C = x.shape
+    gs = min(groups, C)
+    while C % gs:
+        gs -= 1
+    xg = x.reshape(N, H, W, gs, C // gs)
+    mu = xg.mean((1, 2, 4), keepdims=True)
+    var = xg.var((1, 2, 4), keepdims=True)
+    xn = ((xg - mu) * jax.lax.rsqrt(var + eps)).reshape(N, H, W, C)
+    return xn * g + o
+
+
+def maxpool2d(x: jnp.ndarray, k: int = 2) -> jnp.ndarray:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, k, k, 1), "VALID")
+
+
+def cross_entropy(logits: jnp.ndarray, y: jnp.ndarray,
+                  sample_w: jnp.ndarray | None = None) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits, -1)
+    nll = -jnp.take_along_axis(logp, y[..., None], -1)[..., 0]
+    if sample_w is None:
+        return nll.mean()
+    return (nll * sample_w).sum()

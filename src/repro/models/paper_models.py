@@ -1,0 +1,199 @@
+"""The paper's own experimental models (Section IV), as ModelAPIs.
+
+* MLP  — two hidden layers (32, 16) + softmax output; L = 3      (MNIST)
+* CNN  — two 5x5 convs (pool+ReLU) + two dense layers; L = 4     (MNIST)
+* VGG11 / VGG13 — 8/10 convs + 3 dense; L = 11 / 13              (CIFAR-10)
+
+Params are lists of per-layer dicts, so ``layer_ids`` maps each layer's
+leaves to its index. ``width_scale`` shrinks channel counts for the CPU-only
+container (DESIGN.md §6); HeteroFL width masks are provided for all models.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.server import ModelAPI
+from .nn import (conv2d, conv_init, cross_entropy, dense_init, group_norm,
+                 maxpool2d)
+
+__all__ = ["make_mlp", "make_cnn", "make_vgg"]
+
+
+def _layer_ids(params):
+    return [jax.tree.map(lambda _: jnp.int32(i), layer)
+            for i, layer in enumerate(params)]
+
+
+def _hidden_width_masks(params, ratios: np.ndarray):
+    """HeteroFL: client u updates the first ceil(r_u * width) output units of
+    every hidden layer (and the matching input slices of the next layer).
+    Output layer's units are never width-masked (all clients share the head's
+    output dim); its input dim follows the previous layer's kept units.
+    """
+    U = len(ratios)
+    L = len(params)
+
+    def mask_for(r):
+        masks = []
+        prev_keep = None  # fraction kept of the previous layer's outputs
+        for i, layer in enumerate(params):
+            w = layer["w"]
+            out_dim = w.shape[-1]
+            keep_out = out_dim if i == L - 1 else max(1, int(np.ceil(r * out_dim)))
+            m_w = np.zeros(w.shape, np.float32)
+            if w.ndim == 2:  # dense (d_in, d_out)
+                in_dim = w.shape[0]
+                keep_in = in_dim if prev_keep is None else max(1, int(np.ceil(prev_keep * in_dim)))
+                m_w[:keep_in, :keep_out] = 1.0
+            else:            # conv (k, k, c_in, c_out)
+                c_in = w.shape[2]
+                keep_in = c_in if prev_keep is None else max(1, int(np.ceil(prev_keep * c_in)))
+                m_w[:, :, :keep_in, :keep_out] = 1.0
+            layer_mask = {"w": jnp.asarray(m_w)}
+            for key, leaf in layer.items():
+                if key == "w":
+                    continue
+                # 1-D per-output-unit params (bias, norm scale/offset)
+                m = np.zeros(leaf.shape, np.float32)
+                m[:keep_out] = 1.0
+                layer_mask[key] = jnp.asarray(m)
+            masks.append(layer_mask)
+            prev_keep = None if i == L - 1 else r
+        return masks
+
+    per_client = [mask_for(float(r)) for r in ratios]
+    return jax.tree.map(lambda *ms: jnp.stack(ms), *per_client)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def make_mlp(input_dim: int = 784, hidden: Sequence[int] = (32, 16),
+             n_classes: int = 10) -> ModelAPI:
+    dims = [input_dim, *hidden, n_classes]
+    L = len(dims) - 1
+
+    def init(key):
+        keys = jax.random.split(key, L)
+        return [dense_init(k, dims[i], dims[i + 1],
+                           scale=0.0 if i == L - 1 else None)
+                for i, k in enumerate(keys)]
+
+    def forward(params, x):
+        h = x.reshape(x.shape[0], -1)
+        for i, layer in enumerate(params):
+            h = h @ layer["w"] + layer["b"]
+            if i < L - 1:
+                h = jax.nn.relu(h)
+        return h
+
+    def loss(params, x, y, w):
+        return cross_entropy(forward(params, x), y, w)
+
+    return ModelAPI(init=init, loss=loss, predict=forward,
+                    layer_ids=_layer_ids, L=L, name="mlp",
+                    width_masks=_hidden_width_masks)
+
+
+# ---------------------------------------------------------------------------
+# CNN (two 5x5 convs + two dense)
+# ---------------------------------------------------------------------------
+
+def make_cnn(in_hw: int = 28, in_c: int = 1, n_classes: int = 10,
+             c1: int = 8, c2: int = 16, fc: int = 64) -> ModelAPI:
+    L = 4
+    flat_hw = in_hw // 4
+
+    def init(key):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        return [conv_init(k1, 5, in_c, c1),
+                conv_init(k2, 5, c1, c2),
+                dense_init(k3, flat_hw * flat_hw * c2, fc),
+                dense_init(k4, fc, n_classes, scale=0.0)]
+
+    def forward(params, x):
+        h = jax.nn.relu(maxpool2d(conv2d(x, params[0]["w"], params[0]["b"])))
+        h = jax.nn.relu(maxpool2d(conv2d(h, params[1]["w"], params[1]["b"])))
+        h = h.reshape(h.shape[0], -1)
+        h = jax.nn.relu(h @ params[2]["w"] + params[2]["b"])
+        return h @ params[3]["w"] + params[3]["b"]
+
+    def loss(params, x, y, w):
+        return cross_entropy(forward(params, x), y, w)
+
+    return ModelAPI(init=init, loss=loss, predict=forward,
+                    layer_ids=_layer_ids, L=L, name="cnn",
+                    width_masks=_hidden_width_masks)
+
+
+# ---------------------------------------------------------------------------
+# VGG-11 / VGG-13 (Simonyan & Zisserman), width-scalable
+# ---------------------------------------------------------------------------
+
+_VGG_PLANS = {
+    11: [64, "M", 128, "M", 256, 256, "M", 512, 512, "M", 512, 512, "M"],
+    13: [64, 64, "M", 128, 128, "M", 256, 256, "M", 512, 512, "M", 512, 512, "M"],
+}
+
+
+def make_vgg(depth: int = 11, in_hw: int = 32, in_c: int = 3,
+             n_classes: int = 10, width_scale: float = 1.0,
+             fc_dim: int = 512) -> ModelAPI:
+    plan = _VGG_PLANS[depth]
+    convs = [(max(4, int(c * width_scale)) if c != "M" else "M") for c in plan]
+    n_conv = sum(1 for c in convs if c != "M")
+    fc_dim = max(8, int(fc_dim * width_scale))
+    L = n_conv + 3
+    n_pool = sum(1 for c in convs if c == "M")
+    final_hw = in_hw // (2 ** n_pool)
+    last_c = [c for c in convs if c != "M"][-1]
+    flat = final_hw * final_hw * last_c
+
+    def init(key):
+        keys = jax.random.split(key, L)
+        params = []
+        c_prev, ki = in_c, 0
+        for c in convs:
+            if c == "M":
+                continue
+            layer = conv_init(keys[ki], 3, c_prev, c)
+            # GroupNorm affine params (FL-standard BatchNorm replacement;
+            # BN batch statistics break under non-IID clients) — same
+            # per-layer dict, so ADEL's layer masks cover them.
+            layer["g"] = jnp.ones((c,), jnp.float32)
+            layer["o"] = jnp.zeros((c,), jnp.float32)
+            params.append(layer)
+            c_prev, ki = c, ki + 1
+        params.append(dense_init(keys[ki], flat, fc_dim)); ki += 1
+        params.append(dense_init(keys[ki], fc_dim, fc_dim)); ki += 1
+        params.append(dense_init(keys[ki], fc_dim, n_classes, scale=0.0))
+        return params
+
+    def forward(params, x):
+        h = x
+        pi = 0
+        for c in convs:
+            if c == "M":
+                h = maxpool2d(h)
+            else:
+                p = params[pi]
+                h = conv2d(h, p["w"], p["b"])
+                h = jax.nn.relu(group_norm(h, p["g"], p["o"]))
+                pi += 1
+        h = h.reshape(h.shape[0], -1)
+        h = jax.nn.relu(h @ params[pi]["w"] + params[pi]["b"]); pi += 1
+        h = jax.nn.relu(h @ params[pi]["w"] + params[pi]["b"]); pi += 1
+        return h @ params[pi]["w"] + params[pi]["b"]
+
+    def loss(params, x, y, w):
+        return cross_entropy(forward(params, x), y, w)
+
+    return ModelAPI(init=init, loss=loss, predict=forward,
+                    layer_ids=_layer_ids, L=L, name=f"vgg{depth}",
+                    width_masks=_hidden_width_masks)

@@ -1,0 +1,131 @@
+"""Mamba2 SSD (state-space duality) blocks: chunked parallel scan for
+train/prefill and O(1)-state single-token decode.
+
+SSD recurrence (per head, head dim P, state dim N):
+
+    h_t = a_t * h_{t-1} + b_t x_t^T        h in R^{N x P}
+    y_t = c_t^T h_t                        (+ D x_t skip)
+
+with a_t = exp(-softplus(A_log) * dt_t) scalar per head, b_t, c_t in R^N
+(shared across heads in the Mamba2 "multi-value" layout), x_t in R^P.
+
+The chunked algorithm (arXiv:2405.21060 §6) splits the sequence into chunks
+of length Q: within-chunk terms are a masked matmul (the "duality" — it is
+exactly causal linear attention), and the cross-chunk term is a short
+sequential scan over chunk states. Both are MXU-friendly; the Pallas kernel
+in ``repro.kernels.ssd_scan`` implements the same algorithm with explicit
+VMEM tiling and is validated against :func:`ssd_reference` here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ssd_reference", "ssd_chunked", "ssd_decode_step"]
+
+
+def ssd_reference(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                  b: jnp.ndarray, c: jnp.ndarray,
+                  h0: jnp.ndarray | None = None):
+    """Sequential-scan oracle. Shapes:
+
+    x: (B, S, H, P)   inputs per head
+    dt: (B, S, H)     positive step sizes (post-softplus)
+    A: (H,)           positive decay rates (post-softplus of A_log)
+    b, c: (B, S, N)   input/output projections (shared across heads)
+    h0: (B, H, N, P)  optional initial state.
+
+    Returns (y (B,S,H,P), h_final (B,H,N,P)).
+    """
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    a = jnp.exp(-A[None, None, :] * dt)                       # (B, S, H)
+    if h0 is None:
+        h0 = jnp.zeros((B, H, N, P), jnp.float32)
+
+    def step(h, inputs):
+        a_t, x_t, b_t, c_t, dt_t = inputs
+        # h: (B, H, N, P)
+        upd = jnp.einsum("bn,bhp->bhnp", b_t, x_t * dt_t[..., None])
+        h = a_t[..., None, None] * h + upd
+        y = jnp.einsum("bn,bhnp->bhp", c_t, h)
+        return h, y
+
+    xs = (jnp.moveaxis(a, 1, 0), jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(b.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(c.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt, 1, 0))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h_final
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                b: jnp.ndarray, c: jnp.ndarray, *, chunk: int = 64,
+                h0: jnp.ndarray | None = None):
+    """Chunked SSD (the duality form). Same signature as :func:`ssd_reference`.
+
+    S must be a multiple of ``chunk``.
+    """
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nC = S // chunk
+    f32 = jnp.float32
+
+    # log-decay per step, cumulative within chunk
+    la = (-A[None, None, :] * dt).astype(f32)                 # (B, S, H)
+    la = la.reshape(B, nC, chunk, H)
+    cum = jnp.cumsum(la, axis=2)                              # (B,nC,Q,H) log prod_{<=i}
+    tot = cum[:, :, -1]                                       # (B,nC,H) chunk total
+
+    xc = (x.astype(f32) * dt[..., None]).reshape(B, nC, chunk, H, P)
+    bc = b.astype(f32).reshape(B, nC, chunk, N)
+    cc = c.astype(f32).reshape(B, nC, chunk, N)
+
+    # ---- within-chunk (dual / linear-attention) term -----------------------
+    # L[i, j] = exp(cum_i - cum_j) for i >= j  (decay from j+1..i)
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]     # (B,nC,Q,Q,H)
+    iq = jnp.arange(chunk)
+    causal = (iq[:, None] >= iq[None, :])[None, None, :, :, None]
+    Lmat = jnp.where(causal, jnp.exp(decay), 0.0)             # (B,nC,Q,Q,H)
+    scores = jnp.einsum("bcin,bcjn->bcij", cc, bc)            # (B,nC,Q,Q)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", scores, Lmat, xc)
+
+    # ---- chunk states ------------------------------------------------------
+    # state contribution of chunk k: sum_j exp(tot - cum_j) b_j x_j^T
+    w = jnp.exp(tot[:, :, None, :] - cum)                     # (B,nC,Q,H)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", bc, w, xc)  # (B,nC,H,N,P)
+
+    # ---- cross-chunk sequential scan over nC chunk states ------------------
+    if h0 is None:
+        h0 = jnp.zeros((B, H, N, P), f32)
+
+    def chunk_step(h, inp):
+        st, lt = inp                                          # (B,H,N,P), (B,H)
+        h_in = h                                              # state entering chunk
+        h = jnp.exp(lt)[..., None, None] * h + st
+        return h, h_in
+
+    h_final, h_ins = jax.lax.scan(
+        chunk_step, h0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(tot, 1, 0)))
+    h_ins = jnp.moveaxis(h_ins, 0, 1)                         # (B,nC,H,N,P)
+
+    # ---- inter-chunk output term -------------------------------------------
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp", cc, jnp.exp(cum), h_ins)
+
+    y = (y_intra + y_inter).reshape(B, S, H, P).astype(x.dtype)
+    return y, h_final
+
+
+def ssd_decode_step(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                    b: jnp.ndarray, c: jnp.ndarray, h: jnp.ndarray):
+    """One-token decode. x: (B,H,P); dt: (B,H); b,c: (B,N); h: (B,H,N,P).
+
+    Returns (y (B,H,P), h_next).
+    """
+    a = jnp.exp(-A[None, :] * dt)                             # (B,H)
+    upd = jnp.einsum("bn,bhp->bhnp", b.astype(jnp.float32),
+                     x.astype(jnp.float32) * dt[..., None])
+    h = a[..., None, None] * h + upd
+    y = jnp.einsum("bn,bhnp->bhp", c.astype(jnp.float32), h)
+    return y.astype(x.dtype), h

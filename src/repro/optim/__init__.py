@@ -1,0 +1,75 @@
+"""Optimizers + learning-rate schedules for the FL runtime.
+
+The paper trains with plain SGD at the clients (Eq. 2) and the server applies
+the aggregated update directly (FedAvg is SGD with the aggregated gradient).
+``sgd``/``momentum`` cover the server-side update of the big-arch federated
+step; schedules reproduce the paper's inverse-decay and constant profiles.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+__all__ = ["sgd", "momentum", "inverse_decay", "constant_lr", "Optimizer",
+           "clip_by_global_norm"]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree, jnp.ndarray], tuple]
+    name: str
+
+
+def sgd() -> Optimizer:
+    """w <- w - eta * g (stateless)."""
+
+    def init(params):
+        return ()
+
+    def update(grads, state, params, eta):
+        new = jax.tree.map(
+            lambda w, g: (w.astype(jnp.float32)
+                          - eta * g.astype(jnp.float32)).astype(w.dtype),
+            params, grads)
+        return new, state
+
+    return Optimizer(init, update, "sgd")
+
+
+def momentum(beta: float = 0.9) -> Optimizer:
+    """Polyak momentum: v <- beta v + g; w <- w - eta v."""
+
+    def init(params):
+        return jax.tree.map(lambda w: jnp.zeros(w.shape, jnp.float32), params)
+
+    def update(grads, state, params, eta):
+        v = jax.tree.map(lambda s, g: beta * s + g.astype(jnp.float32),
+                         state, grads)
+        new = jax.tree.map(
+            lambda w, vv: (w.astype(jnp.float32) - eta * vv).astype(w.dtype),
+            params, v)
+        return new, v
+
+    return Optimizer(init, update, f"momentum{beta}")
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    sq = sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+
+def inverse_decay(eta0: float, R: int) -> np.ndarray:
+    """eta_t = eta0 / (1 + t), the paper's schedule (satisfies eta_t <= 2 eta_{t+1})."""
+    t = np.arange(1, R + 1, dtype=np.float32)
+    return (eta0 / (1.0 + t)).astype(np.float32)
+
+
+def constant_lr(eta0: float, R: int) -> np.ndarray:
+    return np.full((R,), eta0, np.float32)

@@ -1,0 +1,63 @@
+"""Beyond-paper extensions: R-optimization (paper §III-D) and pilot-round
+constant calibration."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.gamma import q_gamma, q_inv
+from repro.core.scheduler import solve, solve_rounds
+from repro.core.types import AnalysisConfig
+
+
+def test_q_inv_inverts_q():
+    for s in (3, 10, 40):
+        for target in (0.9, 0.5, 0.1):
+            x = q_inv(s, target)
+            assert abs(float(q_gamma(s, jnp.float32(x))) - target) < 1e-3
+
+
+def test_solver_feasible_by_construction():
+    """Every solved schedule satisfies the Problem-2 constraints."""
+    for seed in (0, 1):
+        cfg = AnalysisConfig.default(U=8, L=12, R=20, T_max=150.0,
+                                     eta0=0.5, seed=seed)
+        sch = solve(cfg, "adam", steps=500)
+        assert np.all(np.diff(sch.T) <= 1e-5)              # nonincreasing
+        assert sch.T.sum() <= cfg.T_max * (1 + 1e-5)       # budget
+        assert np.all(sch.p1 < 0.2), sch.p1.max()          # Lemma-3 validity
+        assert np.all(sch.batch_sizes(cfg) >= 1)
+
+
+def test_solve_rounds_at_least_as_good_as_fixed_R():
+    cfg = AnalysisConfig.default(U=10, L=10, R=30, T_max=120.0,
+                                 eta0=0.5, seed=0)
+    fixed = solve(cfg, "adam", steps=400)
+    sch, cfg_r = solve_rounds(cfg, "adam", steps=400)
+    assert sch.objective <= fixed.objective * (1 + 1e-4)
+    assert cfg_r.R in range(2, 61)
+    assert sch.T.shape == (cfg_r.R,)
+
+
+def test_calibrate_constants_shapes_and_positive():
+    from repro.data.synthetic import make_image_dataset
+    from repro.fl.calibrate import calibrate_constants
+    from repro.fl.partition import iid_partition, stack_clients
+    from repro.models.paper_models import make_mlp
+
+    x, y, _, _ = make_image_dataset("mnist", n_train=300, n_test=10, seed=0)
+    U = 4
+    parts = iid_partition(len(y), U, seed=0)
+    cx, cy, counts = stack_clients(x, y, parts)
+    model = make_mlp()
+    cfg = AnalysisConfig.default(U=U, L=model.L, R=5, T_max=10.0, seed=0)
+    params = model.init(jax.random.PRNGKey(0))
+    out = calibrate_constants(cfg, model, params, cx, cy, counts,
+                              n_probe=16)
+    assert out.sigma2.shape == (U,)
+    assert np.all(out.sigma2 > 0)
+    assert out.G2 > 0
+    # G2 must upper-bound the full-gradient norm component
+    assert out.G2 >= 0.0

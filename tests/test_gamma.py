@@ -1,0 +1,58 @@
+"""Auxiliary Lemma (Appendix E) + Lemma 1 machinery: the vectorized
+regularized upper incomplete gamma ladder."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from scipy.special import gammaincc
+from scipy.stats import poisson
+
+from repro.core.gamma import (layer_q, log_q_gamma_all, p_no_contributor,
+                              poisson_cdf, q_gamma, q_gamma_all)
+
+
+@pytest.mark.parametrize("s", [1, 2, 5, 17])
+@pytest.mark.parametrize("x", [0.0, 0.3, 1.0, 7.5, 40.0])
+def test_matches_scipy(s, x):
+    ours = float(q_gamma(s, jnp.float32(x)))
+    ref = float(gammaincc(s, x))          # scipy regularized upper gamma
+    assert abs(ours - ref) < 1e-5, (s, x, ours, ref)
+
+
+def test_poisson_cdf_identity():
+    """Auxiliary Lemma: Q(s, x) = P[Poisson(x) <= s-1]."""
+    for lam in [0.1, 2.0, 9.0]:
+        for k in range(6):
+            ours = float(poisson_cdf(k, jnp.float32(lam)))
+            ref = float(poisson.cdf(k, lam))
+            assert abs(ours - ref) < 1e-5
+
+
+def test_ladder_consistent():
+    x = jnp.asarray([0.5, 3.0, 12.0])
+    all_q = q_gamma_all(8, x)
+    for s in range(1, 9):
+        np.testing.assert_allclose(np.asarray(all_q[:, s - 1]),
+                                   [float(q_gamma(s, xx)) for xx in x],
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_layer_monotonicity():
+    """Paper: p_t^l decreases with layer index l (layer L easiest)."""
+    L = 10
+    q = np.asarray(layer_q(L, jnp.float32(4.0)))
+    assert q.shape == (L,)
+    assert np.all(np.diff(q) <= 1e-7)     # nonincreasing in l
+    assert q[-1] == pytest.approx(np.exp(-4.0), rel=1e-4)  # Q(1,x)=e^-x
+
+
+@settings(deadline=None, max_examples=40)
+@given(st.integers(1, 30), st.floats(0.01, 60.0), st.integers(1, 40))
+def test_lemma1_bound_properties(L, x, U):
+    """0 <= Q^U <= 1, monotone in U, and log-stable for large x."""
+    p = np.asarray(p_no_contributor(L, jnp.float32(x), U))
+    assert p.shape == (L,)
+    assert np.all(p >= 0) and np.all(p <= 1 + 1e-6)
+    p2 = np.asarray(p_no_contributor(L, jnp.float32(x), U + 1))
+    assert np.all(p2 <= p + 1e-6)         # more users -> less likely empty
+    assert np.all(np.isfinite(p))

@@ -1,0 +1,148 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.adel_agg import adel_agg
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ops import (adel_aggregate_pallas, gqa_flash,
+                               ssd_chunked_pallas)
+from repro.kernels.ref import adel_agg_ref, flash_attention_ref, ssd_scan_ref
+from repro.kernels.ssd_scan import ssd_scan
+
+
+def _qs(shape, seed, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape).astype(dtype)
+
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,KV,S,hd", [
+    (1, 2, 2, 128, 64),      # MHA
+    (2, 4, 2, 256, 64),      # GQA g=2
+    (1, 8, 1, 128, 128),     # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, H, KV, S, hd, dtype):
+    q = _qs((B, H, S, hd), 0, dtype)
+    k = _qs((B, KV, S, hd), 1, dtype)
+    v = _qs((B, KV, S, hd), 2, dtype)
+    out = flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                          interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("window", [32, 64, 100])
+def test_flash_attention_window(window):
+    B, H, KV, S, hd = 1, 2, 1, 256, 64
+    q, k, v = (_qs((B, H, S, hd), 0), _qs((B, KV, S, hd), 1),
+               _qs((B, KV, S, hd), 2))
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=64, block_k=64, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_noncausal_cross_shapes():
+    """Sq != Sk (cross-attention shape)."""
+    B, H, KV, hd = 2, 2, 2, 64
+    q = _qs((B, H, 128, hd), 0)
+    k = _qs((B, KV, 256, hd), 1)
+    v = _qs((B, KV, 256, hd), 2)
+    out = flash_attention(q, k, v, causal=False, block_q=64, block_k=64,
+                          interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_gqa_flash_model_layout():
+    B, S, H, KV, hd = 2, 128, 4, 2, 64
+    q = _qs((B, S, H, hd), 3)
+    k = _qs((B, S, KV, hd), 4)
+    v = _qs((B, S, KV, hd), 5)
+    out = gqa_flash(q, k, v, block_q=64, block_k=64, interpret=True)
+    ref = jnp.swapaxes(flash_attention_ref(
+        jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+        jnp.swapaxes(v, 1, 2)), 1, 2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (1, 64, 2, 16, 8, 16),
+    (2, 128, 4, 32, 16, 32),
+    (1, 256, 1, 64, 128, 64),     # mamba2-370m block dims
+])
+def test_ssd_scan_sweep(B, S, H, P, N, chunk):
+    x = _qs((B, S, H, P), 0)
+    dt = jax.nn.softplus(_qs((B, S, H), 1))
+    A = jax.nn.softplus(_qs((H,), 2))
+    b = 0.3 * _qs((B, S, N), 3)
+    c = 0.3 * _qs((B, S, N), 4)
+    out = ssd_chunked_pallas(x, dt, A, b, c, chunk=chunk, interpret=True)
+    ref = ssd_scan_ref(x, dt, A, b, c)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_ssd_scan_state_carry_vs_chunking():
+    """Chunk size must not change the result (state carried correctly)."""
+    B, S, H, P, N = 1, 128, 2, 16, 8
+    x = _qs((B, S, H, P), 0)
+    dt = jax.nn.softplus(_qs((B, S, H), 1))
+    A = jax.nn.softplus(_qs((H,), 2))
+    b, c = 0.3 * _qs((B, S, N), 3), 0.3 * _qs((B, S, N), 4)
+    o1 = ssd_chunked_pallas(x, dt, A, b, c, chunk=16, interpret=True)
+    o2 = ssd_chunked_pallas(x, dt, A, b, c, chunk=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=3e-4, atol=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# ADEL aggregation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("U,L,F,bf", [
+    (4, 3, 512, 512),
+    (16, 8, 1024, 256),
+    (7, 5, 512, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_adel_agg_sweep(U, L, F, bf, dtype):
+    g = _qs((U, L, F), 0, dtype)
+    c = jax.random.uniform(jax.random.PRNGKey(1), (U, L)).astype(dtype)
+    out = adel_agg(g, c, block_f=bf, interpret=True)
+    ref = adel_agg_ref(g, c)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOL[dtype])
+
+
+def test_adel_agg_pytree_matches_reference_path():
+    from repro.core.aggregation import aggregate_grads
+    U, L = 5, 4
+    key = jax.random.PRNGKey(3)
+    grads = {"a": _qs((U, L, 24, 8), 0), "b": _qs((U, 10), 1)}
+    ids = {"a": jnp.arange(L), "b": jnp.int32(1)}
+    mask = (jax.random.uniform(key, (U, L)) > 0.4).astype(jnp.float32)
+    p = jnp.full((L,), 0.08)
+    out_k = adel_aggregate_pallas(grads, ids, mask, p, interpret=True)
+    out_r = aggregate_grads(grads, ids, mask, p)
+    for k in grads:
+        np.testing.assert_allclose(np.asarray(out_k[k]),
+                                   np.asarray(out_r[k]), rtol=2e-5,
+                                   atol=1e-6)

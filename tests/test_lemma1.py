@@ -1,0 +1,43 @@
+"""Lemma 1: p_t^l = P(|U_t^l| = 0) <= Q(L+1-l, T_t/m)^U, Monte-Carlo."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gamma import p_no_contributor
+from repro.core.straggler import (exact_p_layers, poisson_rates,
+                                  simulate_p_empirical)
+from repro.core.types import AnalysisConfig
+
+
+def _cfg(U=12, L=8, seed=3):
+    return AnalysisConfig.default(U=U, L=L, R=10, T_max=100.0, seed=seed)
+
+
+def test_lemma1_montecarlo_bound():
+    cfg = _cfg()
+    T_d, m = 9.0, 1.2
+    emp = simulate_p_empirical(T_d, m, cfg, n_trials=4000)
+    bound = np.asarray(p_no_contributor(cfg.L, jnp.float32(T_d / m), cfg.U))
+    # Monte-Carlo noise: allow 3-sigma slack on 4000 trials
+    sigma = np.sqrt(np.maximum(bound * (1 - bound), 1e-4) / 4000)
+    assert np.all(emp <= bound + 3 * sigma), (emp, bound)
+
+
+def test_exact_p_below_lemma1_bound():
+    """The exact product form is tighter than (or equal to) the Lemma-1
+    bound, which replaces every lambda_u by the uniform lower bound T/m."""
+    cfg = _cfg(U=20, L=12)
+    T_d, m = 7.0, 1.0
+    lam = poisson_rates(T_d, m, jnp.asarray(cfg.P), jnp.asarray(cfg.B))
+    exact = np.asarray(exact_p_layers(lam, cfg.L))
+    bound = np.asarray(p_no_contributor(cfg.L, jnp.float32(T_d / m), cfg.U))
+    assert np.all(exact <= bound + 1e-6)
+
+
+def test_empirical_matches_exact_p():
+    cfg = _cfg(U=10, L=6, seed=7)
+    T_d, m = 6.0, 1.5
+    emp = simulate_p_empirical(T_d, m, cfg, n_trials=8000, seed=5)
+    lam = poisson_rates(T_d, m, jnp.asarray(cfg.P), jnp.asarray(cfg.B))
+    exact = np.asarray(exact_p_layers(lam, cfg.L))
+    sigma = np.sqrt(np.maximum(exact * (1 - exact), 1e-4) / 8000)
+    assert np.all(np.abs(emp - exact) <= 4 * sigma + 5e-3), (emp, exact)

@@ -1,0 +1,63 @@
+"""Paper-model details: GroupNorm, zero-init heads, cost-probe math."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.nn import group_norm
+from repro.models.paper_models import make_cnn, make_mlp, make_vgg
+
+
+def test_group_norm_normalizes_groups():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 4, 4, 16)) * 5 + 3
+    g = jnp.ones((16,))
+    o = jnp.zeros((16,))
+    y = group_norm(x, g, o, groups=4)
+    yg = np.asarray(y).reshape(2, 4, 4, 4, 4)
+    mu = yg.mean(axis=(1, 2, 4))
+    sd = yg.std(axis=(1, 2, 4))
+    np.testing.assert_allclose(mu, 0.0, atol=1e-4)
+    np.testing.assert_allclose(sd, 1.0, atol=1e-3)
+
+
+def test_group_norm_affine():
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 2, 8))
+    y = group_norm(x, 2.0 * jnp.ones((8,)), 3.0 * jnp.ones((8,)), groups=2)
+    y1 = group_norm(x, jnp.ones((8,)), jnp.zeros((8,)), groups=2)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(2.0 * y1 + 3.0),
+                               rtol=1e-5)
+
+
+@pytest.mark.parametrize("make", [make_mlp, make_cnn,
+                                  lambda: make_vgg(11, width_scale=0.125)])
+def test_zero_init_head_gives_log10_loss(make):
+    model = make()
+    params = model.init(jax.random.PRNGKey(0))
+    shape = (8, 28, 28, 1) if model.name in ("mlp", "cnn") else (8, 32, 32, 3)
+    x = jax.random.normal(jax.random.PRNGKey(1), shape)
+    y = jnp.arange(8) % 10
+    w = jnp.full((8,), 1.0 / 8)
+    loss = float(model.loss(params, x, y, w))
+    assert abs(loss - np.log(10.0)) < 1e-3, loss
+
+
+def test_costprobe_linear_extrapolation():
+    from repro.launch.costprobe import _lin2
+    # exact recovery of rest + l * slope
+    c2 = {"flops": 10.0 + 2 * 3.0, "bytes": 5.0 + 2 * 1.0, "coll": 2 * 4.0}
+    c4 = {"flops": 10.0 + 4 * 3.0, "bytes": 5.0 + 4 * 1.0, "coll": 4 * 4.0}
+    out = _lin2(c2, c4, 40)
+    assert out["flops"] == pytest.approx(10.0 + 40 * 3.0)
+    assert out["bytes"] == pytest.approx(5.0 + 40 * 1.0)
+    assert out["coll"] == pytest.approx(40 * 4.0)
+
+
+def test_vgg_width_masks_cover_norm_params():
+    model = make_vgg(11, width_scale=0.125)
+    params = model.init(jax.random.PRNGKey(0))
+    masks = model.width_masks(params, np.asarray([0.5, 1.0]))
+    # congruent trees: every param leaf has a mask leaf with a leading U dim
+    jax.tree.map(lambda p, m: None, params, jax.tree.map(lambda m: m[0],
+                                                         masks))
+    lead = {m.shape[0] for m in jax.tree.leaves(masks)}
+    assert lead == {2}

@@ -1,0 +1,54 @@
+"""Problem-2 solver: constraint satisfaction + improvement over the naive
+constant allocation (both solver paths)."""
+import numpy as np
+import pytest
+
+from repro.core.scheduler import (constant_schedule, solve_adam,
+                                  solve_trust_region)
+from repro.core.types import AnalysisConfig
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return AnalysisConfig.default(U=10, L=8, R=12, T_max=120.0, seed=1)
+
+
+def _check_feasible(s, cfg):
+    assert s.T.shape == (cfg.R,)
+    assert np.all(s.T > 0)
+    assert s.T.sum() <= cfg.T_max * (1 + 1e-4)
+    assert np.all(np.diff(s.T) <= 1e-5), "deadlines must be nonincreasing"
+    assert np.all(s.p1 < 0.2 + 1e-6), "Lemma-3 validity p_t^1 < 0.2"
+    assert s.m >= 1.0
+
+
+def test_adam_solver_feasible_and_improves(cfg):
+    base = constant_schedule(cfg)
+    s = solve_adam(cfg, steps=1200)
+    _check_feasible(s, cfg)
+    assert s.objective <= base.objective * (1 + 1e-5), \
+        (s.objective, base.objective)
+
+
+def test_trust_region_solver_feasible_and_improves(cfg):
+    base = constant_schedule(cfg)
+    s = solve_trust_region(cfg, maxiter=150)
+    _check_feasible(s, cfg)
+    assert s.objective <= base.objective * (1 + 1e-4)
+
+
+def test_deadlines_decrease_like_paper(cfg):
+    """Fig. 2a/3a: the optimized allocation decreases over rounds (larger
+    early deadlines exploit the larger early learning rates)."""
+    s = solve_adam(cfg, steps=1200)
+    assert s.T[0] > s.T[-1]
+
+
+def test_batch_sizes_b3(cfg):
+    s = solve_adam(cfg, steps=300)
+    S = s.batch_sizes(cfg)
+    assert S.shape == (cfg.R, cfg.U)
+    assert np.all(S >= 1)
+    # B3: S propto P_u for fixed round (up to the floor and B_u correction)
+    fast, slow = np.argmax(cfg.P), np.argmin(cfg.P)
+    assert S[0, fast] >= S[0, slow]

@@ -1,0 +1,117 @@
+"""System-level behaviour: checkpointing round-trip, optimizer, data
+pipeline, partitioning, and the property-based straggler invariants."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.core.straggler import batch_sizes, contribution_mask, poisson_rates
+from repro.data.synthetic import make_image_dataset, make_lm_dataset
+from repro.fl.partition import dirichlet_partition, iid_partition, stack_clients
+from repro.optim import inverse_decay, momentum, sgd
+
+
+def test_checkpoint_roundtrip():
+    params = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+              "b": [jnp.ones((4,)), jnp.zeros((2, 2), jnp.int32)]}
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ckpt_1")
+        save_checkpoint(path, params, step=7, meta={"arch": "test"})
+        restored, manifest = load_checkpoint(path, params)
+        assert manifest["step"] == 7
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sgd_and_momentum_step():
+    params = {"w": jnp.ones((3,))}
+    grads = {"w": jnp.full((3,), 2.0)}
+    opt = sgd()
+    new, _ = opt.update(grads, opt.init(params), params, jnp.float32(0.1))
+    np.testing.assert_allclose(np.asarray(new["w"]), 0.8, rtol=1e-6)
+    mopt = momentum(0.5)
+    st8 = mopt.init(params)
+    p1, st8 = mopt.update(grads, st8, params, jnp.float32(0.1))
+    p2, _ = mopt.update(grads, st8, p1, jnp.float32(0.1))
+    # second step includes 0.5 * previous velocity
+    np.testing.assert_allclose(np.asarray(p2["w"]), 1 - 0.2 - 0.3, rtol=1e-5)
+
+
+def test_inverse_decay_satisfies_theorem_condition():
+    eta = inverse_decay(0.5, 50)
+    assert np.all(eta[:-1] <= 2 * eta[1:] + 1e-9)   # eta_t <= 2 eta_{t+1}
+    assert np.all(np.diff(eta) < 0)
+
+
+def test_image_dataset_learnable_signal():
+    x, y, xt, yt = make_image_dataset("mnist", n_train=500, n_test=100,
+                                      seed=0, noise_std=0.5)
+    assert x.shape == (500, 28, 28, 1) and y.shape == (500,)
+    # nearest-template classification works at low noise -> classes differ
+    assert len(np.unique(y)) == 10
+
+
+def test_lm_dataset_structure():
+    toks = make_lm_dataset(vocab=256, n_tokens=4096, seed=0)
+    assert toks.shape == (4096,) and toks.max() < 256 and toks.min() >= 0
+
+
+def test_dirichlet_partition_covers_everything():
+    y = np.random.default_rng(0).integers(0, 10, 2000)
+    parts = dirichlet_partition(y, U=8, alpha=0.5, seed=1)
+    all_idx = np.concatenate(parts)
+    assert len(all_idx) == 2000
+    assert len(np.unique(all_idx)) == 2000          # a true partition
+    assert min(len(p) for p in parts) >= 2
+
+
+def test_stack_clients_padding():
+    x = np.arange(10, dtype=np.float32).reshape(10, 1)
+    y = np.arange(10)
+    parts = iid_partition(10, 3, seed=0)
+    xs, ys, counts = stack_clients(x, y, parts)
+    assert xs.shape[0] == 3 and xs.shape[1] == max(len(p) for p in parts)
+    assert counts.sum() == 10
+
+
+@settings(deadline=None, max_examples=50)
+@given(st.floats(0.5, 100.0), st.floats(1.0, 50.0),
+       st.floats(0.1, 10.0), st.floats(0.0, 0.4))
+def test_b3_batch_sizes_properties(T_d, m, P, Bfrac):
+    """B3 invariants: S >= 1; S grows with m and with P."""
+    B = jnp.float32(Bfrac * T_d)
+    s = float(batch_sizes(T_d, m, jnp.float32(P), B))
+    assert s >= 1.0
+    s2 = float(batch_sizes(T_d, 2 * m, jnp.float32(P), B))
+    assert s2 >= s - 1e-6
+
+
+@settings(deadline=None, max_examples=50)
+@given(st.integers(1, 40), st.integers(0, 60))
+def test_contribution_mask_is_suffix(L, z):
+    """A client contributes a SUFFIX of layers (backprop reaches the output
+    side first): mask rows are nondecreasing in l."""
+    mask = np.asarray(contribution_mask(jnp.asarray([z]), L))[0]
+    assert mask.shape == (L,)
+    assert np.all(np.diff(mask) >= 0)
+    assert mask.sum() == min(z, L)
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.floats(1.0, 60.0), st.floats(1.0, 20.0))
+def test_poisson_rate_lower_bound(T_d, m):
+    """Appendix A: lambda_u >= T/m for every user (basis of Lemma 1).
+
+    Holds in the feasible regime m P_u (T - B_u)/T >= 1 (i.e. S_u >= 1
+    before clipping) — the same condition Problem 2 enforces so the B_t
+    denominator stays positive.
+    """
+    P = jnp.asarray([0.5, 1.0, 3.0])
+    B = jnp.zeros((3,))
+    feasible = np.asarray(m * np.asarray(P) >= 1.0)
+    lam = np.asarray(poisson_rates(T_d, m, P, B))
+    assert np.all(lam[feasible] >= T_d / m - 1e-4)

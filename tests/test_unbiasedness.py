@@ -1,0 +1,52 @@
+"""Lemma 2 (unbiasedness): E[w~_{t+1}] = w_{t+1} (vanilla FedAvg), given the
+batches — the aggregation randomness is only the straggler draw."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import aggregate_grads
+from repro.core.straggler import contribution_mask, exact_p_layers, sample_depths
+
+
+def test_unbiased_montecarlo():
+    U, L, F = 8, 5, 12
+    key = jax.random.PRNGKey(0)
+    g = jax.random.normal(key, (U, L, F))          # fixed client grads
+    ids = jnp.arange(L)
+    # B3 batch scaling EQUALIZES the per-user Poisson rates (lambda_u ~ T/m
+    # for every u) — this exchangeability is what makes the masked mean
+    # conditionally unbiased (Lemma 4 of [18], invoked in Appendix B). With
+    # heterogeneous rates the layer-wise mean would tilt toward fast
+    # clients; see DESIGN.md §Faithfulness-notes.
+    lam = jnp.full((U,), 5.0, jnp.float32)
+    p = exact_p_layers(lam, L)                     # (L,)
+    fedavg = g.mean(0)                             # full participation
+
+    n = 6000
+    keys = jax.random.split(jax.random.PRNGKey(42), n)
+
+    def one(k):
+        z = sample_depths(k, lam)
+        mask = contribution_mask(z, L)
+        return aggregate_grads({"w": g}, {"w": ids}, mask, p)["w"]
+
+    agg = jax.vmap(one)(keys)                      # (n, L, F)
+    mean = np.asarray(agg.mean(0))
+    se = np.asarray(agg.std(0)) / np.sqrt(n)
+    err = np.abs(mean - np.asarray(fedavg))
+    # Eq. (5) in gradient form: E[g~^l] = (1-p_l) * mean_masked / (1-p_l) = g^l
+    assert np.all(err <= 4.5 * se + 2e-3), (err.max(), se.max())
+
+
+def test_layer_preserved_when_empty():
+    """ADEL-FL preserves layer params when no updates arrive (g~ = 0),
+    unlike SALF's default FedAvg fallback."""
+    U, L, F = 4, 3, 7
+    g = jnp.ones((U, L, F))
+    mask = jnp.ones((U, L)).at[:, 0].set(0.0)      # nobody reached layer 1
+    p = jnp.asarray([0.9, 0.1, 0.0])
+    agg = aggregate_grads({"w": g}, {"w": jnp.arange(L)}, mask, p)["w"]
+    np.testing.assert_allclose(np.asarray(agg[0]), 0.0)     # preserved
+    np.testing.assert_allclose(np.asarray(agg[1]),
+                               1.0 / (1 - 0.1), rtol=1e-6)  # corrected
+    np.testing.assert_allclose(np.asarray(agg[2]), 1.0, rtol=1e-6)
