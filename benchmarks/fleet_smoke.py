@@ -1,0 +1,38 @@
+"""Fleet-smoke — fast end-to-end pass over two contrasting fleet scenarios
+(churny long-tail mobile vs always-on datacenter) at reduced scale."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import cached_result, save_result
+
+SCENARIO_NAMES = ("longtail-mobile-diurnal", "datacenter-always-on")
+
+
+def run(quick: bool = False) -> dict:
+    cached = cached_result("fleet_smoke")
+    if cached is not None:
+        return cached
+    from repro.fleet.scenarios import get_scenario, run_scenario
+
+    fleet_size = 200 if quick else 400
+    rounds = 4 if quick else 8
+    result = {}
+    for name in SCENARIO_NAMES:
+        scn = get_scenario(name)
+        scn = dataclasses.replace(scn, n_train=1200 if quick else 2500,
+                                  n_test=400)
+        print(f"[fleet_smoke] {name}: fleet={fleet_size} rounds={rounds}")
+        hist = run_scenario(scn, rounds=rounds, fleet_size=fleet_size,
+                            solver_steps=400, eval_every=2, verbose=False)
+        acc = hist["accuracy"][-1] if hist["accuracy"] else 0.0
+        print(f"  [{scn.method:9s}] rounds="
+              f"{hist['rounds'][-1] if hist['rounds'] else 0}"
+              f"  final_acc={acc:.4f}  wall={hist['wall_s']:.1f}s")
+        result[name] = {scn.method: hist}
+    save_result("fleet_smoke", result)
+    return result
+
+
+if __name__ == "__main__":
+    run()

@@ -75,7 +75,7 @@ def section_roofline() -> str:
 def section_repro() -> str:
     out = []
     for name in ("fig2_mnist", "fig3_cifar", "fig4_robustness",
-                 "table2_budgets"):
+                 "table2_budgets", "fleet_smoke", "fleet_scenarios"):
         fn = os.path.join(RESULTS, "results", f"{name}.json")
         if not os.path.exists(fn):
             continue

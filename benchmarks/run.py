@@ -18,13 +18,14 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from benchmarks import (fig2_mnist, fig3_cifar, fig4_robustness,
-                            roofline, table2_budgets)
+                            fleet_smoke, roofline, table2_budgets)
     suites = {
         "fig2_mnist": fig2_mnist.run,
         "fig3_cifar": fig3_cifar.run,
         "fig4_robustness": fig4_robustness.run,
         "table2_budgets": table2_budgets.run,
         "roofline": roofline.run,
+        "fleet_smoke": fleet_smoke.run,
     }
     if args.only:
         suites = {args.only: suites[args.only]}

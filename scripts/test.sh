@@ -1,0 +1,5 @@
+#!/usr/bin/env sh
+# Tier-1 verify: run the suite from anywhere (pyproject pins pythonpath=src).
+set -e
+cd "$(dirname "$0")/.."
+exec python -m pytest -x -q "$@"

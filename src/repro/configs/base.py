@@ -11,7 +11,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-__all__ = ["ArchConfig", "InputShape", "INPUT_SHAPES", "pad_vocab"]
+__all__ = ["ArchConfig", "FleetConfig", "InputShape", "INPUT_SHAPES",
+           "pad_vocab"]
 
 
 def pad_vocab(v: int, multiple: int = 512) -> int:
@@ -204,6 +205,30 @@ class ArchConfig:
         # keep n_heads a multiple of n_kv
         kw["n_heads"] = max(kw["n_heads"] - kw["n_heads"] % kw["n_kv"], kw["n_kv"])
         return ArchConfig(**kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    """Fleet-simulation block consumed by ``repro.fleet``.
+
+    Describes a heterogeneous device population and the per-round cohort
+    drawn from it (see ``repro/fleet/__init__.py`` for the subsystem docs).
+    ``availability_kwargs`` is a tuple of (key, value) pairs so the config
+    stays hashable/frozen; use :meth:`availability_dict` to consume it.
+    """
+
+    preset: str = "uniform"        # profiles.PRESETS key (ignored w/ trace)
+    size: int = 500                # number of simulated devices
+    trace_path: Optional[str] = None   # JSON device trace overrides preset
+    availability: str = "always-on"    # availability.AVAILABILITY key
+    availability_kwargs: tuple = ()
+    cohort_size: int = 32          # U clients planned per round
+    cohort_strategy: str = "uniform"   # uniform | power-of-choice | stratified
+    chunk_size: int = 16           # client-shard axis chunk for the engine
+    seed: int = 0
+
+    def availability_dict(self) -> dict:
+        return dict(self.availability_kwargs)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 __all__ = [
     "layer_coefficients",
     "aggregate_grads",
+    "aggregate_grads_chunk",
     "aggregate_grads_local",
     "masked_mean_grads",
 ]
@@ -95,6 +96,28 @@ def aggregate_grads_local(local_grads: PyTree, layer_ids: PyTree,
     partial = jax.tree.map(lambda g, ids: _weight_leaf(g, ids, c),
                            local_grads, layer_ids)
     return jax.lax.psum(partial, axis_name)
+
+
+def aggregate_grads_chunk(chunk_grads: PyTree, layer_ids: PyTree,
+                          chunk_mask: jnp.ndarray, p: jnp.ndarray,
+                          counts: jnp.ndarray, *,
+                          bias_correct: bool = True) -> PyTree:
+    """Sequential-chunk analogue of :func:`aggregate_grads_local`.
+
+    The caller supplies the GLOBAL per-layer contributor counts and sums the
+    returned partial aggregates over chunks — a software psum over the
+    client-shard axis, so a large cohort never materializes one stacked
+    (cohort, ...) delta pytree. Summing the partials over every chunk is
+    exactly ``aggregate_grads`` on the concatenated client axis, and the
+    chunk axis maps 1:1 onto a ``shard_map`` client mesh axis (swap the host
+    loop for ``jax.lax.psum``).
+
+    chunk_grads leaves: (U_chunk,) + param.shape; chunk_mask: (U_chunk, L).
+    """
+    c = layer_coefficients(chunk_mask, p, bias_correct=bias_correct,
+                           counts=counts)
+    return jax.tree.map(lambda g, ids: _weight_leaf(g, ids, c),
+                        chunk_grads, layer_ids)
 
 
 def masked_mean_grads(grads: PyTree, layer_ids: PyTree,

@@ -36,13 +36,34 @@ class RoundPlan:
 
 
 class Policy:
+    """Per-round decision maker.
+
+    ``round(key, t, view=None)`` accepts an optional per-round
+    :class:`AnalysisConfig` *view* whose ``U``/``P``/``B`` describe the
+    cohort actually sampled this round (the fleet engine re-derives one
+    per round); with ``view=None`` the policy uses the static config it
+    was constructed with, which preserves the original single-population
+    behaviour.
+    """
+
     name: str = "base"
 
     def __init__(self, cfg: AnalysisConfig):
         self.cfg = cfg
 
-    def round(self, key: jax.Array, t: int) -> RoundPlan:  # pragma: no cover
+    def round(self, key: jax.Array, t: int,
+              view: Optional[AnalysisConfig] = None) -> RoundPlan:  # pragma: no cover
         raise NotImplementedError
+
+    def _resolve(self, view: Optional[AnalysisConfig]) -> AnalysisConfig:
+        return view if view is not None else self.cfg
+
+    def _fixed_batch(self, view: Optional[AnalysisConfig], T: float):
+        """Fixed-batch policies (salf/drop/wait): cached S for the static
+        population, re-derived from the cohort view otherwise."""
+        if view is None:
+            return self.S
+        return straggler.fixed_batch(T, self.m, view)
 
     def describe(self) -> dict:
         return {"name": self.name}
@@ -57,9 +78,10 @@ class AdelPolicy(Policy):
         super().__init__(cfg)
         self.schedule = schedule
 
-    def round(self, key, t):
+    def round(self, key, t, view=None):
+        cfg = self._resolve(view)
         T_t = float(self.schedule.T[t])
-        mask, p, S, _ = straggler.sample_round(key, T_t, self.schedule.m, self.cfg)
+        mask, p, S, _ = straggler.sample_round(key, T_t, self.schedule.m, cfg)
         return RoundPlan(mask=mask, p=p, batch_sizes=S, elapsed=T_t,
                          bias_correct=True)
 
@@ -81,10 +103,11 @@ class SalfPolicy(Policy):
         self.T_t = cfg.T_max / cfg.R
         self.S = straggler.fixed_batch(self.T_t, self.m, cfg)
 
-    def round(self, key, t):
-        mask, p, _ = straggler.sample_round_fixed(key, self.T_t, self.S,
-                                                  self.cfg)
-        S = jnp.full((self.cfg.U,), self.S)
+    def round(self, key, t, view=None):
+        cfg = self._resolve(view)
+        S_fix = self._fixed_batch(view, self.T_t)
+        mask, p, _ = straggler.sample_round_fixed(key, self.T_t, S_fix, cfg)
+        S = jnp.full((cfg.U,), S_fix)
         return RoundPlan(mask=mask, p=p, batch_sizes=S, elapsed=self.T_t,
                          bias_correct=True)
 
@@ -105,14 +128,15 @@ class DropPolicy(Policy):
         self.T_t = cfg.T_max / cfg.R
         self.S = straggler.fixed_batch(self.T_t, self.m, cfg)
 
-    def round(self, key, t):
-        cfg = self.cfg
+    def round(self, key, t, view=None):
+        cfg = self._resolve(view)
+        S_fix = self._fixed_batch(view, self.T_t)
         P, B = jnp.asarray(cfg.P), jnp.asarray(cfg.B)
-        lam = P / self.S * jnp.maximum(self.T_t - B, 0.0)
+        lam = P / S_fix * jnp.maximum(self.T_t - B, 0.0)
         z = straggler.sample_depths(key, lam)
         full = (z >= cfg.L).astype(jnp.float32)                  # (U,)
         mask = jnp.broadcast_to(full[:, None], (cfg.U, cfg.L))
-        S = jnp.full((cfg.U,), self.S)
+        S = jnp.full((cfg.U,), S_fix)
         return RoundPlan(mask=mask, p=jnp.zeros(cfg.L), batch_sizes=S,
                          elapsed=self.T_t, bias_correct=False)
 
@@ -130,15 +154,16 @@ class WaitPolicy(Policy):
         self.T_ref = cfg.T_max / cfg.R
         self.S = straggler.fixed_batch(self.T_ref, self.m, cfg)
 
-    def round(self, key, t):
-        cfg = self.cfg
+    def round(self, key, t, view=None):
+        cfg = self._resolve(view)
+        S_fix = self._fixed_batch(view, self.T_ref)
         P, B = jnp.asarray(cfg.P), jnp.asarray(cfg.B)
         # full backprop time = sum of L iid Exp(S/P) = Gamma(L, scale=S/P);
         # with a FIXED batch the slowest device dominates the round clock
-        g = jax.random.gamma(key, cfg.L, shape=(cfg.U,)) * (self.S / P)
+        g = jax.random.gamma(key, cfg.L, shape=(cfg.U,)) * (S_fix / P)
         elapsed = float(jnp.max(g + B))
         mask = jnp.ones((cfg.U, cfg.L), jnp.float32)
-        S = jnp.full((cfg.U,), self.S)
+        S = jnp.full((cfg.U,), S_fix)
         return RoundPlan(mask=mask, p=jnp.zeros(cfg.L), batch_sizes=S,
                          elapsed=elapsed, bias_correct=False)
 
@@ -157,16 +182,23 @@ class HeteroFLPolicy(Policy):
         super().__init__(cfg)
         self.m = float(m)
         self.T_t = cfg.T_max / cfg.R
-        # capability-bucketed width ratios: fastest quartile -> 1.0, etc.
-        order = np.argsort(np.argsort(-cfg.P))      # rank 0 = fastest
-        quart = (order * len(self.LEVELS)) // cfg.U
-        self.ratios = np.asarray([self.LEVELS[q] for q in quart], np.float32)
+        self.ratios = self._capability_ratios(cfg.P)
 
-    def round(self, key, t):
-        cfg = self.cfg
+    @classmethod
+    def _capability_ratios(cls, P: np.ndarray) -> np.ndarray:
+        """Capability-bucketed width ratios: fastest quartile -> 1.0, etc."""
+        P = np.asarray(P)
+        order = np.argsort(np.argsort(-P))          # rank 0 = fastest
+        quart = (order * len(cls.LEVELS)) // len(P)
+        return np.asarray([cls.LEVELS[q] for q in quart], np.float32)
+
+    def round(self, key, t, view=None):
+        cfg = self._resolve(view)
+        ratios = (self.ratios if view is None
+                  else self._capability_ratios(cfg.P))
         P, B = jnp.asarray(cfg.P), jnp.asarray(cfg.B)
         S_fix = straggler.fixed_batch(self.T_t, self.m, cfg)
-        r = jnp.asarray(self.ratios)
+        r = jnp.asarray(ratios)
         # per-layer time Exp(S r^2 / P) -> completed layers ~ Poisson(P (T-B) / (S r^2))
         lam = P / (S_fix * r ** 2) * jnp.maximum(self.T_t - B, 0.0)
         z = straggler.sample_depths(key, lam)
@@ -175,7 +207,7 @@ class HeteroFLPolicy(Policy):
         S = jnp.full((cfg.U,), S_fix)
         return RoundPlan(mask=mask, p=jnp.zeros(cfg.L), batch_sizes=S,
                          elapsed=self.T_t, bias_correct=False,
-                         width_ratios=self.ratios)
+                         width_ratios=ratios)
 
     def describe(self):
         return {"name": self.name, "m": self.m, "ratios": self.ratios.tolist()}

@@ -35,15 +35,18 @@ def dirichlet_partition(labels: np.ndarray, U: int, alpha: float = 0.5,
     return [np.sort(np.asarray(ci, dtype=np.int64)) for ci in client_idx]
 
 
-def stack_clients(x: np.ndarray, y: np.ndarray,
-                  parts: list[np.ndarray]) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+def stack_clients(x: np.ndarray, y: np.ndarray, parts: list[np.ndarray],
+                  n_pad: int | None = None
+                  ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Pad per-client shards to a common N and stack to (U, N, ...).
 
     Padding repeats each client's own data (valid counts returned separately),
-    so with-replacement sampling never sees foreign samples.
+    so with-replacement sampling never sees foreign samples. ``n_pad``
+    overrides the common N (callers needing a jit-stable shape across
+    varying client subsets, e.g. the fleet engine, pass a fixed one).
     """
     U = len(parts)
-    n_max = max(len(p) for p in parts)
+    n_max = max(len(p) for p in parts) if n_pad is None else int(n_pad)
     xs = np.zeros((U, n_max) + x.shape[1:], x.dtype)
     ys = np.zeros((U, n_max), y.dtype)
     counts = np.zeros((U,), np.int32)
@@ -53,5 +56,5 @@ def stack_clients(x: np.ndarray, y: np.ndarray,
         tiled = np.tile(p, reps)[:n_max]
         xs[u] = x[tiled]
         ys[u] = y[tiled]
-        counts[u] = k
+        counts[u] = min(k, n_max)   # never index past an n_pad truncation
     return xs, ys, counts

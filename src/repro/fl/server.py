@@ -44,15 +44,21 @@ class History:
     accuracy: list = dataclasses.field(default_factory=list)
     deadlines: list = dataclasses.field(default_factory=list)
     train_loss: list = dataclasses.field(default_factory=list)
+    # fleet runs only: reachable-device count per executed round
+    available: list = dataclasses.field(default_factory=list)
     method: str = ""
 
     def as_dict(self):
         return dataclasses.asdict(self)
 
 
-def _make_round_step(model: ModelAPI, *, local_iters: int, l2: float,
-                     bias_correct: bool, hetero: bool):
-    """One jitted federated round: client deltas -> aggregation -> update."""
+def make_round_step(model: ModelAPI, *, local_iters: int, l2: float,
+                    bias_correct: bool, hetero: bool = False):
+    """One jitted federated round: client deltas -> aggregation -> update.
+
+    Shared by :func:`run_federated` and ``repro.fleet.engine`` (the fleet
+    engine uses it directly whenever the whole cohort fits in one chunk).
+    """
 
     @functools.partial(jax.jit, static_argnames=())
     def step(params, xb, yb, wb, mask, p, eta, wmasks):
@@ -85,6 +91,17 @@ def evaluate(model: ModelAPI, params: PyTree, x: jnp.ndarray, y: jnp.ndarray,
         logits = predict(params, x[i:i + batch])
         correct += int((jnp.argmax(logits, -1) == y[i:i + batch]).sum())
     return correct / n
+
+
+def eval_metrics(model: ModelAPI, params: PyTree, test_x: jnp.ndarray,
+                 test_y: jnp.ndarray, *, loss_samples: int = 256
+                 ) -> tuple[float, float]:
+    """(accuracy over the full test set, mean loss over a fixed head)."""
+    acc = evaluate(model, params, test_x, test_y)
+    n = min(loss_samples, int(test_y.shape[0]))
+    loss = float(model.loss(params, test_x[:n], test_y[:n],
+                            jnp.full((n,), 1.0 / n, jnp.float32)))
+    return acc, loss
 
 
 def run_federated(model: ModelAPI, policy: Policy, cfg: AnalysisConfig,
@@ -125,19 +142,14 @@ def run_federated(model: ModelAPI, policy: Policy, cfg: AnalysisConfig,
             k_batch, client_x, client_y, n_per_client, plan.batch_sizes, s_max)
         bc = bool(plan.bias_correct)
         if bc not in step_cache:
-            step_cache[bc] = _make_round_step(
+            step_cache[bc] = make_round_step(
                 model, local_iters=local_iters, l2=l2, bias_correct=bc,
                 hetero=hetero)
         params = step_cache[bc](params, xb, yb, wb, plan.mask, plan.p,
                                 jnp.float32(eta[t]), wmasks)
         elapsed += plan.elapsed
         if (t % eval_every == 0) or (t == cfg.R - 1):
-            acc = evaluate(model, params, test_x, test_y)
-            loss = float(model.loss(
-                params, test_x[:256],
-                test_y[:256],
-                jnp.full((min(256, test_y.shape[0]),),
-                         1.0 / min(256, test_y.shape[0]), jnp.float32)))
+            acc, loss = eval_metrics(model, params, test_x, test_y)
             hist.times.append(elapsed)
             hist.rounds.append(t + 1)
             hist.accuracy.append(acc)

@@ -1,0 +1,50 @@
+"""Fleet simulation: trace-driven heterogeneous device fleets at
+thousands-of-clients scale.
+
+The seed repro exercised one small, statically stacked client set whose
+``P_u``/``B_u`` were fixed at config time. This subsystem is the layer
+between data/config and the FL runtime that lets every policy be evaluated
+against realistic populations:
+
+* :mod:`repro.fleet.profiles` — device-profile registry. Named presets
+  (``uniform``, ``bimodal-edge``, ``longtail-mobile``, ``datacenter``)
+  sample per-device compute rates ``P_u``, network times ``B_u`` and memory
+  tiers from parameterized distributions; ``load_trace``/``save_trace``
+  round-trip fleets through JSON device traces.
+* :mod:`repro.fleet.availability` — pluggable churn models deciding who is
+  reachable each round: ``always-on``, ``bernoulli``, ``diurnal``
+  (sine-wave day/night with per-device phase), ``markov`` (sticky on/off).
+* :mod:`repro.fleet.cohort` — per-round cohort sampling (``uniform``,
+  ``power-of-choice`` by ``P_u``, ``stratified`` by tier) and
+  ``cohort_view``, which re-derives the :class:`AnalysisConfig` the
+  policies consume so ADEL/baselines see the sampled cohort's ``P``/``B``.
+* :mod:`repro.fleet.engine` — ``run_fleet``, the driver: wraps the round
+  step of :mod:`repro.fl.server` but chunks cohort execution over a
+  client-shard axis (vmap per chunk + software psum via
+  ``aggregate_grads_chunk``), so large fleets never materialize
+  ``(fleet, N, ...)`` arrays.
+* :mod:`repro.fleet.scenarios` — named scenario registry
+  (fleet x availability x partition x policy) with a CLI::
+
+      PYTHONPATH=src python -m repro.fleet.scenarios --list
+      PYTHONPATH=src python -m repro.fleet.scenarios \
+          --run longtail-mobile-diurnal --rounds 5
+
+  emitting History dicts consumable by ``benchmarks/report.py``.
+
+The population block lives in :class:`repro.configs.FleetConfig`.
+"""
+from repro.fleet.availability import (AVAILABILITY, AvailabilityModel,
+                                      make_availability)
+from repro.fleet.cohort import COHORT_STRATEGIES, cohort_view, sample_cohort
+from repro.fleet.engine import (FleetData, partition_fleet, reference_config,
+                                run_fleet)
+from repro.fleet.profiles import (PRESETS, Fleet, fleet_from_config,
+                                  load_trace, make_fleet, save_trace)
+
+__all__ = [
+    "AVAILABILITY", "AvailabilityModel", "COHORT_STRATEGIES", "Fleet",
+    "FleetData", "PRESETS", "cohort_view", "fleet_from_config", "load_trace",
+    "make_availability", "make_fleet", "partition_fleet", "reference_config",
+    "run_fleet", "sample_cohort", "save_trace",
+]

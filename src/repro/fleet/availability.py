@@ -1,0 +1,134 @@
+"""Pluggable availability / churn models for simulated device fleets.
+
+Each model answers, per round ``t``, which devices are reachable:
+``step(t) -> bool (n,)``. Models are stateful where the dynamics demand it
+(Markov on/off chains carry per-device state between rounds) and fully
+deterministic given their seed and the sequence of ``step`` calls;
+``reset()`` rewinds to the initial state.
+
+* ``always-on``  — every device reachable every round (the seed repro).
+* ``bernoulli``  — iid per-device, per-round reachability with rate ``rate``.
+* ``diurnal``    — sine-wave day/night cycle: availability probability
+                   ``mean + amplitude * sin(2 pi t / period + phase_u)``
+                   with a per-device phase (devices live in time zones).
+* ``markov``     — per-device on/off Markov chain with transition probs
+                   ``p_off_to_on`` / ``p_on_to_off``; stationary availability
+                   is ``p_off_to_on / (p_off_to_on + p_on_to_off)``, and
+                   outages are temporally correlated (sticky churn).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["AvailabilityModel", "AlwaysOn", "Bernoulli", "Diurnal", "Markov",
+           "AVAILABILITY", "make_availability"]
+
+
+class AvailabilityModel:
+    """Base class: deterministic in (seed, step-call sequence)."""
+
+    name = "base"
+
+    def __init__(self, n: int, seed: int = 0):
+        self.n = int(n)
+        self.seed = int(seed)
+        self.reset()
+
+    def reset(self) -> None:
+        self._rng = np.random.default_rng([1021, self.seed])
+        self._init_state()
+
+    def _init_state(self) -> None:
+        pass
+
+    def step(self, t: int) -> np.ndarray:  # pragma: no cover
+        """Reachability of every device in round ``t`` -> bool (n,)."""
+        raise NotImplementedError
+
+    def describe(self) -> dict:
+        return {"name": self.name, "n": self.n}
+
+
+class AlwaysOn(AvailabilityModel):
+    name = "always-on"
+
+    def step(self, t: int) -> np.ndarray:
+        return np.ones(self.n, bool)
+
+
+class Bernoulli(AvailabilityModel):
+    name = "bernoulli"
+
+    def __init__(self, n: int, seed: int = 0, rate: float = 0.8):
+        self.rate = float(rate)
+        super().__init__(n, seed)
+
+    def step(self, t: int) -> np.ndarray:
+        return self._rng.random(self.n) < self.rate
+
+    def describe(self) -> dict:
+        return {"name": self.name, "n": self.n, "rate": self.rate}
+
+
+class Diurnal(AvailabilityModel):
+    name = "diurnal"
+
+    def __init__(self, n: int, seed: int = 0, mean: float = 0.65,
+                 amplitude: float = 0.3, period: float = 24.0):
+        self.mean = float(mean)
+        self.amplitude = float(amplitude)
+        self.period = float(period)
+        super().__init__(n, seed)
+
+    def _init_state(self) -> None:
+        self.phase = self._rng.uniform(0.0, 2.0 * np.pi, self.n)
+
+    def prob(self, t: int) -> np.ndarray:
+        raw = self.mean + self.amplitude * np.sin(
+            2.0 * np.pi * t / self.period + self.phase)
+        return np.clip(raw, 0.0, 1.0)
+
+    def step(self, t: int) -> np.ndarray:
+        return self._rng.random(self.n) < self.prob(t)
+
+    def describe(self) -> dict:
+        return {"name": self.name, "n": self.n, "mean": self.mean,
+                "amplitude": self.amplitude, "period": self.period}
+
+
+class Markov(AvailabilityModel):
+    name = "markov"
+
+    def __init__(self, n: int, seed: int = 0, p_off_to_on: float = 0.3,
+                 p_on_to_off: float = 0.1):
+        self.p_up = float(p_off_to_on)
+        self.p_down = float(p_on_to_off)
+        super().__init__(n, seed)
+
+    @property
+    def stationary(self) -> float:
+        return self.p_up / max(self.p_up + self.p_down, 1e-12)
+
+    def _init_state(self) -> None:
+        # start from the stationary distribution so rates hold from round 0
+        self.state = self._rng.random(self.n) < self.stationary
+
+    def step(self, t: int) -> np.ndarray:
+        u = self._rng.random(self.n)
+        self.state = np.where(self.state, u >= self.p_down, u < self.p_up)
+        return self.state.copy()
+
+    def describe(self) -> dict:
+        return {"name": self.name, "n": self.n, "p_off_to_on": self.p_up,
+                "p_on_to_off": self.p_down}
+
+
+AVAILABILITY = {m.name: m for m in (AlwaysOn, Bernoulli, Diurnal, Markov)}
+
+
+def make_availability(name: str, n: int, seed: int = 0,
+                      **kwargs) -> AvailabilityModel:
+    if name not in AVAILABILITY:
+        raise KeyError(
+            f"unknown availability model {name!r}; known: {sorted(AVAILABILITY)}")
+    return AVAILABILITY[name](n, seed=seed, **kwargs)

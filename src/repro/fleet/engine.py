@@ -1,0 +1,261 @@
+"""``run_fleet``: the fleet-scale federated driver.
+
+Wraps the per-round machinery of :mod:`repro.fl.server` but decouples the
+*population* (thousands of devices) from the *cohort* (the ``U`` clients a
+round plans for):
+
+1. the availability model decides who is reachable,
+2. a cohort sampler picks at most ``cohort_size`` devices,
+3. ``cohort_view`` re-derives the AnalysisConfig the policy sees,
+4. the round executes CHUNKED over a client-shard axis: client deltas are
+   computed ``chunk_size`` clients at a time (one vmap per chunk) and folded
+   into a running partial aggregate via
+   :func:`repro.core.aggregation.aggregate_grads_chunk` with *global*
+   contributor counts — a software psum, shaped exactly like the
+   ``aggregate_grads_local``/``shard_map`` path, so a 2,000-device fleet
+   with a 64-client cohort never materializes a ``(fleet, N, ...)`` or a
+   full ``(cohort, ...)`` delta pytree.
+
+All round-execution arrays are padded to fixed shapes (``n_pad`` samples
+per client, ``cohort_size`` rounded up to a ``chunk_size`` multiple), so
+jit compiles the chunk step once regardless of availability fluctuations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import aggregate_grads_chunk
+from repro.core.baselines import Policy, RoundPlan, make_policy
+from repro.core.scheduler import solve
+from repro.core.types import AnalysisConfig
+from repro.fl.client import batched_client_deltas, sample_client_batches
+from repro.fl.partition import dirichlet_partition, iid_partition, stack_clients
+from repro.fl.server import History, ModelAPI, eval_metrics, make_round_step
+from repro.fleet.availability import AvailabilityModel
+from repro.fleet.cohort import cohort_view, sample_cohort
+from repro.fleet.profiles import Fleet
+
+__all__ = ["FleetData", "partition_fleet", "reference_config", "run_fleet"]
+
+
+@dataclasses.dataclass
+class FleetData:
+    """Dataset + per-device shard indices (never stacked fleet-wide).
+
+    ``parts[u]`` indexes device u's samples inside the shared ``x``/``y``
+    arrays; only the per-round cohort is ever materialized as a stacked
+    ``(U, n_pad, ...)`` batch.
+    """
+
+    x: np.ndarray                 # (n, ...) training inputs
+    y: np.ndarray                 # (n,) training labels
+    parts: list                   # len == fleet.size, index arrays into x/y
+    x_test: np.ndarray
+    y_test: np.ndarray
+
+    @property
+    def n_pad(self) -> int:
+        return max(len(p) for p in self.parts)
+
+
+def partition_fleet(x: np.ndarray, y: np.ndarray, x_test: np.ndarray,
+                    y_test: np.ndarray, n_devices: int, *,
+                    alpha: Optional[float] = 0.5, seed: int = 0) -> FleetData:
+    """Split one dataset over ``n_devices`` shards (Dirichlet or IID)."""
+    if alpha is None:
+        parts = iid_partition(len(y), n_devices, seed=seed)
+    else:
+        parts = dirichlet_partition(y, n_devices, alpha=alpha, seed=seed)
+    return FleetData(x=x, y=y, parts=parts, x_test=x_test, y_test=y_test)
+
+
+def reference_config(fleet: Fleet, *, U: int, L: int, R: int, T_max: float,
+                     eta0: float = 2.0, eta_decay: float = 1.0,
+                     seed: int = 0) -> AnalysisConfig:
+    """Planning config for the Problem-2 solver: a quantile-spaced
+    representative cohort of the fleet (so the schedule reflects the real
+    P/B spread rather than one random draw)."""
+    q = (np.arange(U) + 0.5) / U
+    order = np.argsort(fleet.P)
+    pick = order[np.clip((q * fleet.size).astype(int), 0, fleet.size - 1)]
+    base = AnalysisConfig.default(U=U, L=L, R=R, T_max=T_max, eta0=eta0,
+                                  eta_decay=eta_decay, seed=seed)
+    return dataclasses.replace(base, P=fleet.P[pick].copy(),
+                               B=fleet.B[pick].copy())
+
+
+def _make_chunk_step(model: ModelAPI, *, local_iters: int, l2: float,
+                     bias_correct: bool) -> Callable:
+    """Jitted per-chunk partial aggregate: deltas -> weighted layer sums."""
+
+    # same argument order as fl.server.make_round_step (mask, p, eta last
+    # block) — both land in the engine's step cache
+    @jax.jit
+    def chunk_partial(params, xb, yb, wb, mask_c, p, eta, counts):
+        deltas = batched_client_deltas(model.loss, params, xb, yb, wb, eta,
+                                       local_iters=local_iters, l2=l2)
+        ids = model.layer_ids(params)
+        return aggregate_grads_chunk(deltas, ids, mask_c, p, counts,
+                                     bias_correct=bias_correct)
+
+    return chunk_partial
+
+
+def run_fleet(model: ModelAPI, fleet: Fleet, availability: AvailabilityModel,
+              data: FleetData, *, method: str = "adel", rounds: int = 20,
+              cohort_size: int = 32, cohort_strategy: str = "uniform",
+              chunk_size: int = 16, T_max: Optional[float] = None,
+              eta0: float = 2.0, eta_decay: float = 1.0,
+              solver: str = "adam", solver_steps: int = 600,
+              local_iters: int = 1, l2: float = 0.0,
+              s_max: Optional[int] = None, eval_every: int = 1,
+              seed: int = 0, verbose: bool = False) -> tuple:
+    """Run up to ``rounds`` federated rounds against a simulated fleet.
+
+    Returns ``(params, History)``; the History carries the same fields as
+    :func:`repro.fl.server.run_federated` plus per-round reachable-device
+    counts, so ``benchmarks/report.py`` consumes it unchanged.
+    """
+    if fleet.size != len(data.parts):
+        raise ValueError(f"fleet size {fleet.size} != data shards "
+                         f"{len(data.parts)}")
+    if availability.n != fleet.size:
+        raise ValueError(f"availability model over {availability.n} devices "
+                         f"!= fleet size {fleet.size}")
+    if T_max is None:
+        # same calibration as the seed benchmarks: avg depth ~50% of layers
+        T_max = rounds * model.L * 0.5
+
+    ref = reference_config(fleet, U=cohort_size, L=model.L, R=rounds,
+                           T_max=T_max, eta0=eta0, eta_decay=eta_decay,
+                           seed=seed)
+    schedule = None
+    if method == "adel":
+        schedule = solve(ref, solver,
+                         **({"steps": solver_steps} if solver == "adam" else {}))
+    policy: Policy = make_policy(method, ref, schedule=schedule)
+    if getattr(policy, "name", "") == "heterofl":
+        raise NotImplementedError(
+            "run_fleet does not support HeteroFL width masks yet; use "
+            "fl.server.run_federated for the static-population variant")
+
+    if s_max is None:
+        # probe against a synthetic best-case device (fleet-max P, fleet-min
+        # B): per-device batch sizes (ADEL's B3) grow with P_u and shrink
+        # with B_u, and the baselines' fixed batch uses the cohort MEANS —
+        # both are maximized by this one-device view, so no realized cohort
+        # (power-of-choice top picks, or a lucky tiny cohort under churn)
+        # can plan a batch that sample_client_batches would silently clip
+        view_best = dataclasses.replace(
+            ref, U=1, P=np.asarray([fleet.P.max()], np.float32),
+            B=np.asarray([fleet.B.min()], np.float32),
+            sigma2=np.asarray([float(np.mean(ref.sigma2))], np.float32))
+        probe = [policy.round(jax.random.PRNGKey(0), t, view=view_best)
+                 for t in (0, rounds - 1)]
+        s_max = int(max(float(jnp.max(pl.batch_sizes)) for pl in probe))
+        # memory bound: batches are drawn with replacement, so allow up to
+        # 4x the largest shard before clipping a (rare) extreme plan — every
+        # client pays O(s_max) delta compute, and an unbounded best-case
+        # bound would let one outlier device size the whole round's batch
+        s_max = min(s_max, 4 * data.n_pad)
+    s_max = max(s_max, 2)
+
+    n_pad = data.n_pad
+    L = model.L
+    chunk_size = min(chunk_size, cohort_size)   # never vmap dead padding
+    U_pad = -(-cohort_size // chunk_size) * chunk_size
+    eta = ref.eta
+
+    step_cache: dict[bool, Callable] = {}
+    apply_update = jax.jit(
+        lambda params, agg: jax.tree.map(lambda w, d: w - d, params, agg))
+
+    rng = np.random.default_rng([2077, seed])
+    key = jax.random.PRNGKey(seed)
+    key, k_init = jax.random.split(key)
+    params = model.init(k_init)
+    availability.reset()
+
+    test_x = jnp.asarray(data.x_test)
+    test_y = jnp.asarray(data.y_test)
+
+    hist = History(method=f"fleet-{policy.name}")
+    elapsed = 0.0
+    for t in range(rounds):
+        avail = availability.step(t)
+        idx = sample_cohort(rng, avail, fleet, cohort_size, cohort_strategy)
+        if len(idx) == 0:
+            continue  # nobody reachable: the round never starts
+        view = cohort_view(ref, fleet, idx)
+        key, k_round, k_batch = jax.random.split(key, 3)
+        plan: RoundPlan = policy.round(k_round, t, view=view)
+        if elapsed + plan.elapsed > T_max * (1 + 1e-6):
+            break
+
+        U_act = len(idx)
+        xs, ys, counts = stack_clients(data.x, data.y,
+                                       [data.parts[u] for u in idx],
+                                       n_pad=n_pad)
+        # pad the cohort axis to the fixed chunked width; padded rows carry
+        # an all-zero mask, so their coefficients — and contributions — are 0
+        mask = np.zeros((U_pad, L), np.float32)
+        mask[:U_act] = np.asarray(plan.mask, np.float32)
+        S = np.ones((U_pad,), np.int32)
+        S[:U_act] = np.asarray(plan.batch_sizes, np.int32)
+        if U_act < U_pad:
+            pad = U_pad - U_act
+            xs = np.concatenate(
+                [xs, np.zeros((pad,) + xs.shape[1:], xs.dtype)])
+            ys = np.concatenate([ys, np.zeros((pad,) + ys.shape[1:], ys.dtype)])
+            counts = np.concatenate([counts, np.ones((pad,), np.int32)])
+        counts_layer = jnp.asarray(mask.sum(0))          # (L,) global counts
+
+        xb, yb, wb = sample_client_batches(
+            k_batch, jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(counts),
+            jnp.asarray(S), s_max)
+
+        bc = bool(plan.bias_correct)
+        single_chunk = U_pad <= chunk_size
+        if bc not in step_cache:
+            step_cache[bc] = (
+                make_round_step(model, local_iters=local_iters, l2=l2,
+                                bias_correct=bc)
+                if single_chunk else
+                _make_chunk_step(model, local_iters=local_iters, l2=l2,
+                                 bias_correct=bc))
+        step = step_cache[bc]
+
+        mask_j = jnp.asarray(mask)
+        if single_chunk:
+            # whole cohort in one chunk: reuse the server's round step
+            params = step(params, xb, yb, wb, mask_j, plan.p,
+                          jnp.float32(eta[t]), None)
+        else:
+            agg = None
+            for c0 in range(0, U_pad, chunk_size):
+                sl = slice(c0, c0 + chunk_size)
+                part = step(params, xb[sl], yb[sl], wb[sl], mask_j[sl],
+                            plan.p, jnp.float32(eta[t]), counts_layer)
+                agg = part if agg is None else jax.tree.map(jnp.add, agg, part)
+            params = apply_update(params, agg)
+
+        elapsed += plan.elapsed
+        if (t % eval_every == 0) or (t == rounds - 1):
+            acc, loss = eval_metrics(model, params, test_x, test_y)
+            hist.times.append(elapsed)
+            hist.rounds.append(t + 1)
+            hist.accuracy.append(acc)
+            hist.deadlines.append(float(plan.elapsed))
+            hist.train_loss.append(loss)
+            hist.available.append(int(avail.sum()))
+            if verbose:
+                print(f"[fleet-{policy.name}] round {t+1:3d} "
+                      f"avail {int(avail.sum()):4d}/{fleet.size} "
+                      f"cohort {U_act:3d} time {elapsed:9.2f} "
+                      f"deadline {plan.elapsed:7.3f} acc {acc:.4f}")
+    return params, hist

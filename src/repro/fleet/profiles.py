@@ -1,0 +1,157 @@
+"""Device-profile registry: named fleet presets and JSON trace files.
+
+A :class:`Fleet` is the static description of a device population — one
+compute rate ``P_u`` (samples/sec per layer, Model Formulation B1), one
+communication time ``B_u`` (seconds, B2), and one memory tier per device.
+Presets sample these from parameterized distributions modelled on the
+populations in the heterogeneity-aware FL literature (TimelyFL / FedEL
+style device mixes):
+
+* ``uniform``        — the seed repro's population: log-uniform P over a
+                       ~4x spread, moderate network times.
+* ``bimodal-edge``   — 70% slow edge boxes + 30% fast gateways; the slow
+                       mode also has worse links.
+* ``longtail-mobile``— lognormal P with a heavy right tail: a mass of
+                       mid/slow phones and a few flagship devices; Pareto
+                       network tail (congested uplinks).
+* ``datacenter``     — tightly clustered fast workers with near-zero
+                       network time.
+
+``load_trace``/``save_trace`` round-trip a fleet through a JSON file with
+one record per device, so measured traces can replace synthetic presets.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import zlib
+from typing import Callable
+
+import numpy as np
+
+__all__ = ["Fleet", "PRESETS", "preset", "make_fleet", "fleet_from_config",
+           "load_trace", "save_trace"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Fleet:
+    """Static per-device capabilities of a simulated population."""
+
+    name: str
+    P: np.ndarray        # (n,) compute rate P_u, samples/sec per layer (B1)
+    B: np.ndarray        # (n,) communication time B_u, seconds (B2)
+    tier: np.ndarray     # (n,) memory tier 0 (small) .. 2 (large)
+
+    def __post_init__(self):
+        object.__setattr__(self, "P", np.asarray(self.P, np.float32))
+        object.__setattr__(self, "B", np.asarray(self.B, np.float32))
+        object.__setattr__(self, "tier", np.asarray(self.tier, np.int32))
+        assert self.P.shape == self.B.shape == self.tier.shape
+        assert self.P.ndim == 1 and self.size > 0
+        assert float(self.P.min()) > 0.0
+
+    @property
+    def size(self) -> int:
+        return int(self.P.shape[0])
+
+    def describe(self) -> dict:
+        q = lambda a: [round(float(np.quantile(a, x)), 4)
+                       for x in (0.05, 0.5, 0.95)]
+        return {"name": self.name, "size": self.size,
+                "P_q05_50_95": q(self.P), "B_q05_50_95": q(self.B),
+                "tiers": np.bincount(self.tier, minlength=3).tolist()}
+
+
+PRESETS: dict[str, Callable] = {}
+
+
+def preset(name: str):
+    """Register ``fn(n, rng) -> (P, B, tier)`` as a named fleet preset."""
+    def deco(fn):
+        PRESETS[name] = fn
+        return fn
+    return deco
+
+
+def _tiers_by_speed(P: np.ndarray) -> np.ndarray:
+    """Memory tier from compute terciles (fast devices carry more RAM)."""
+    t1, t2 = np.quantile(P, [1 / 3, 2 / 3])
+    return (P >= t1).astype(np.int32) + (P >= t2).astype(np.int32)
+
+
+@preset("uniform")
+def _uniform(n: int, rng: np.random.Generator):
+    P = 8.0 * np.exp(rng.uniform(0.0, np.log(4.0), n)).astype(np.float32)
+    B = rng.uniform(0.02, 0.08, n).astype(np.float32)
+    return P, B, _tiers_by_speed(P)
+
+
+@preset("bimodal-edge")
+def _bimodal_edge(n: int, rng: np.random.Generator):
+    fast = rng.random(n) < 0.3
+    P = np.where(fast,
+                 rng.lognormal(np.log(16.0), 0.15, n),
+                 rng.lognormal(np.log(3.0), 0.25, n)).astype(np.float32)
+    B = np.where(fast,
+                 rng.uniform(0.01, 0.03, n),
+                 rng.uniform(0.05, 0.15, n)).astype(np.float32)
+    tier = np.where(fast, 2, rng.integers(0, 2, n)).astype(np.int32)
+    return P, B, tier
+
+
+@preset("longtail-mobile")
+def _longtail_mobile(n: int, rng: np.random.Generator):
+    P = rng.lognormal(np.log(5.0), 0.7, n).astype(np.float32)
+    P = np.clip(P, 0.5, 80.0)
+    # Pareto-tailed uplink times: most links fine, a congested tail
+    B = (0.02 * (1.0 + rng.pareto(3.0, n))).astype(np.float32)
+    B = np.clip(B, 0.02, 0.5)
+    return P, B, _tiers_by_speed(P)
+
+
+@preset("datacenter")
+def _datacenter(n: int, rng: np.random.Generator):
+    P = np.clip(rng.normal(32.0, 2.0, n), 24.0, 40.0).astype(np.float32)
+    B = rng.uniform(0.001, 0.004, n).astype(np.float32)
+    return P, B, np.full(n, 2, np.int32)
+
+
+def make_fleet(preset_name: str, n: int, seed: int = 0) -> Fleet:
+    """Sample a fleet of ``n`` devices from a named preset, deterministically
+    in ``seed`` (the same (preset, n, seed) always yields the same fleet)."""
+    if preset_name not in PRESETS:
+        raise KeyError(
+            f"unknown fleet preset {preset_name!r}; known: {sorted(PRESETS)}")
+    # crc32, not hash(): str hash is salted per process and would break
+    # cross-run determinism of the sampled fleet
+    rng = np.random.default_rng([zlib.crc32(preset_name.encode()), seed])
+    P, B, tier = PRESETS[preset_name](n, rng)
+    return Fleet(name=preset_name, P=P, B=B, tier=tier)
+
+
+def fleet_from_config(fc) -> Fleet:
+    """Build a fleet from a :class:`repro.configs.FleetConfig` block."""
+    if fc.trace_path:
+        return load_trace(fc.trace_path)
+    return make_fleet(fc.preset, fc.size, seed=fc.seed)
+
+
+def save_trace(fleet: Fleet, path: str) -> str:
+    payload = {"name": fleet.name,
+               "devices": [{"P": float(p), "B": float(b), "tier": int(t)}
+                           for p, b, t in zip(fleet.P, fleet.B, fleet.tier)]}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def load_trace(path: str) -> Fleet:
+    with open(path) as f:
+        payload = json.load(f)
+    dev = payload["devices"]
+    if not dev:
+        raise ValueError(f"trace {path!r} has no devices")
+    return Fleet(name=payload.get("name", "trace"),
+                 P=np.asarray([d["P"] for d in dev], np.float32),
+                 B=np.asarray([d["B"] for d in dev], np.float32),
+                 tier=np.asarray([d.get("tier", 1) for d in dev], np.int32))

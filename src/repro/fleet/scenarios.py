@@ -1,0 +1,192 @@
+"""Named fleet scenarios: fleet preset x availability x partition x policy.
+
+A scenario bundles a :class:`repro.configs.FleetConfig` (population +
+cohort) with the data partition and the round policy, so every later PR
+can say "run ADEL against ``longtail-mobile-diurnal``" and get the same
+experiment. The CLI emits ``History`` dicts in the same JSON layout the
+paper-figure benchmarks use, so ``benchmarks/report.py`` renders them.
+
+    PYTHONPATH=src python -m repro.fleet.scenarios --list
+    PYTHONPATH=src python -m repro.fleet.scenarios --run longtail-mobile-diurnal --rounds 5
+    PYTHONPATH=src python -m repro.fleet.scenarios --run datacenter-always-on --save
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.configs.base import FleetConfig
+from repro.data.synthetic import make_image_dataset
+from repro.fleet.availability import make_availability
+from repro.fleet.engine import partition_fleet, run_fleet
+from repro.fleet.profiles import fleet_from_config
+from repro.models.paper_models import make_cnn, make_mlp
+
+__all__ = ["Scenario", "SCENARIOS", "get_scenario", "run_scenario"]
+
+RESULTS_PATH = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "experiments", "results", "fleet_scenarios.json")
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    name: str
+    fleet: FleetConfig
+    method: str = "adel"           # adel | salf | drop | wait
+    model: str = "mlp"             # mlp | cnn
+    alpha: Optional[float] = 0.5   # Dirichlet non-IID (None = IID)
+    rounds: int = 20
+    eta0: float = 2.0
+    n_train: int = 4000
+    n_test: int = 400
+    note: str = ""
+
+
+def _scn(name, preset, size, availability, akw=(), method="adel",
+         strategy="uniform", alpha=0.5, note="", **kw) -> Scenario:
+    return Scenario(
+        name=name, method=method, alpha=alpha, note=note,
+        fleet=FleetConfig(preset=preset, size=size, availability=availability,
+                          availability_kwargs=tuple(akw),
+                          cohort_strategy=strategy),
+        **kw)
+
+
+SCENARIOS = {s.name: s for s in [
+    _scn("longtail-mobile-diurnal", "longtail-mobile", 600, "diurnal",
+         akw=(("mean", 0.6), ("amplitude", 0.35), ("period", 12.0)),
+         note="mass-market phones in time zones; ADEL under churny long tail"),
+    _scn("datacenter-always-on", "datacenter", 512, "always-on",
+         note="homogeneous fast silo — the deadline solver's easy regime"),
+    _scn("bimodal-edge-markov", "bimodal-edge", 500, "markov",
+         akw=(("p_off_to_on", 0.35), ("p_on_to_off", 0.12)),
+         strategy="stratified",
+         note="edge boxes with sticky outages; stratified tier coverage"),
+    _scn("uniform-bernoulli-salf", "uniform", 500, "bernoulli",
+         akw=(("rate", 0.7),), method="salf",
+         note="SALF baseline under iid 70% availability"),
+    _scn("longtail-mobile-power-of-choice", "longtail-mobile", 600, "diurnal",
+         akw=(("mean", 0.6), ("amplitude", 0.35), ("period", 12.0)),
+         strategy="power-of-choice",
+         note="same population as longtail-mobile-diurnal, capability-biased "
+              "cohort selection"),
+]}
+
+
+def get_scenario(name: str) -> Scenario:
+    if name not in SCENARIOS:
+        raise KeyError(f"unknown scenario {name!r}; known: {sorted(SCENARIOS)}")
+    return SCENARIOS[name]
+
+
+def run_scenario(scn: Scenario, *, rounds: Optional[int] = None,
+                 fleet_size: Optional[int] = None,
+                 cohort_size: Optional[int] = None, seed: int = 0,
+                 solver_steps: int = 600, eval_every: int = 1,
+                 verbose: bool = True) -> dict:
+    """Run one scenario; returns the History dict (+ fleet/availability
+    descriptions) consumable by ``benchmarks/report.py``."""
+    fc = scn.fleet
+    if fleet_size is not None:
+        fc = dataclasses.replace(fc, size=fleet_size)
+    if cohort_size is not None:
+        fc = dataclasses.replace(fc, cohort_size=cohort_size)
+    rounds = scn.rounds if rounds is None else rounds
+
+    fleet = fleet_from_config(fc)
+    avail = make_availability(fc.availability, fleet.size,
+                              seed=fc.seed + seed, **fc.availability_dict())
+    x_tr, y_tr, x_te, y_te = make_image_dataset(
+        "mnist", n_train=scn.n_train, n_test=scn.n_test, seed=seed,
+        noise_std=1.0)
+    data = partition_fleet(x_tr, y_tr, x_te, y_te, fleet.size,
+                           alpha=scn.alpha, seed=seed)
+    model = make_cnn() if scn.model == "cnn" else make_mlp()
+
+    t0 = time.time()
+    _, hist = run_fleet(
+        model, fleet, avail, data, method=scn.method, rounds=rounds,
+        cohort_size=fc.cohort_size, cohort_strategy=fc.cohort_strategy,
+        chunk_size=fc.chunk_size, eta0=scn.eta0, solver_steps=solver_steps,
+        eval_every=eval_every, seed=seed, verbose=verbose)
+    out = hist.as_dict()
+    out["wall_s"] = round(time.time() - t0, 2)
+    out["scenario"] = scn.name
+    out["fleet"] = fleet.describe()
+    out["availability"] = avail.describe()
+    out["cohort"] = {"size": fc.cohort_size, "strategy": fc.cohort_strategy}
+    return out
+
+
+def save_scenario_result(name: str, method: str, result: dict,
+                         path: str = RESULTS_PATH) -> str:
+    """Merge one run into experiments/results/fleet_scenarios.json in the
+    {setting: {method: history}} layout section_repro expects."""
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    payload = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            payload = json.load(f)
+    payload.setdefault(name, {})[method] = result
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return os.path.abspath(path)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="Fleet-scenario runner (see module docstring)")
+    ap.add_argument("--list", action="store_true", help="list scenarios")
+    ap.add_argument("--run", default=None, metavar="NAME")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--fleet-size", type=int, default=None)
+    ap.add_argument("--cohort", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--solver-steps", type=int, default=600)
+    ap.add_argument("--save", action="store_true",
+                    help="merge the History into experiments/results/"
+                         "fleet_scenarios.json for benchmarks.report")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list or not args.run:
+        print(f"{'scenario':38s} {'fleet':28s} {'avail':10s} "
+              f"{'cohort':22s} method")
+        for s in SCENARIOS.values():
+            fc = s.fleet
+            print(f"{s.name:38s} {fc.preset + ' x' + str(fc.size):28s} "
+                  f"{fc.availability:10s} "
+                  f"{str(fc.cohort_size) + ' ' + fc.cohort_strategy:22s} "
+                  f"{s.method}")
+            if s.note:
+                print(f"    {s.note}")
+        return
+
+    try:
+        scn = get_scenario(args.run)
+    except KeyError as e:
+        ap.error(str(e.args[0]))
+    res = run_scenario(scn, rounds=args.rounds, fleet_size=args.fleet_size,
+                       cohort_size=args.cohort, seed=args.seed,
+                       solver_steps=args.solver_steps,
+                       verbose=not args.quiet)
+    acc = res["accuracy"][-1] if res["accuracy"] else float("nan")
+    rounds_done = res["rounds"][-1] if res["rounds"] else 0
+    print(f"[{scn.name}] method={scn.method} fleet={res['fleet']['size']} "
+          f"rounds={rounds_done} final_acc={acc:.4f} "
+          f"wall={res['wall_s']:.1f}s")
+    print(f"  avail/round: {res['available']}")
+    print(f"  deadlines:   {[round(d, 3) for d in res['deadlines']]}")
+    if args.save:
+        path = save_scenario_result(scn.name, scn.method, res)
+        print(f"  saved -> {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Cross-version Pallas TPU compat.
+
+jax renamed ``pltpu.TPUCompilerParams`` (<= 0.4.x) to
+``pltpu.CompilerParams`` (>= 0.5); resolve whichever the installed
+release provides so the kernels run on both.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

@@ -17,7 +17,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels._compat import CompilerParams
 
 __all__ = ["adel_agg"]
 
@@ -33,13 +33,20 @@ def _kernel(g_ref, c_ref, o_ref):
 @functools.partial(jax.jit, static_argnames=("block_f", "interpret"))
 def adel_agg(grads: jnp.ndarray, coeff: jnp.ndarray, *, block_f: int = 512,
              interpret: bool = False) -> jnp.ndarray:
-    """grads: (U, L, F); coeff: (U, L) -> (L, F)."""
+    """grads: (U, L, F); coeff: (U, L) -> (L, F).
+
+    Arbitrary F is supported: the flattened feature dim is zero-padded up to
+    a ``block_f`` multiple for the kernel grid and the output sliced back.
+    """
     U, L, F = grads.shape
     bf = min(block_f, F)
-    assert F % bf == 0, (F, bf)
-    grid = (L, F // bf)
+    pad = (-F) % bf
+    if pad:
+        grads = jnp.pad(grads, ((0, 0), (0, 0), (0, pad)))
+    Fp = F + pad
+    grid = (L, Fp // bf)
 
-    return pl.pallas_call(
+    out = pl.pallas_call(
         _kernel,
         grid=grid,
         in_specs=[
@@ -47,8 +54,9 @@ def adel_agg(grads: jnp.ndarray, coeff: jnp.ndarray, *, block_f: int = 512,
             pl.BlockSpec((U, 1), lambda l, f: (0, l)),
         ],
         out_specs=pl.BlockSpec((1, bf), lambda l, f: (l, f)),
-        out_shape=jax.ShapeDtypeStruct((L, F), grads.dtype),
-        compiler_params=pltpu.CompilerParams(
+        out_shape=jax.ShapeDtypeStruct((L, Fp), grads.dtype),
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(grads, coeff)
+    return out[:, :F] if pad else out

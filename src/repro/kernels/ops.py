@@ -82,14 +82,8 @@ def adel_aggregate_pallas(grads, layer_ids_tree, mask, p, *,
             F *= d
         flat = g.reshape(U, L, F)
         cl = jnp.take(c, ids, axis=1)              # (U, L)
-        # pad F to a block multiple for the kernel
-        bf = 512 if F >= 512 else F
-        pad = (-F) % bf
-        if pad:
-            flat = jnp.pad(flat, ((0, 0), (0, 0), (0, pad)))
-        out = adel_agg(flat, cl, block_f=bf, interpret=interpret)
-        if pad:
-            out = out[:, :F]
+        # adel_agg pads F to a block multiple internally
+        out = adel_agg(flat, cl, interpret=interpret)
         return out.reshape(g.shape[1:]).astype(g.dtype)
 
     return jax.tree.map(agg_leaf, grads, layer_ids_tree)

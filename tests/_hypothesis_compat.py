@@ -1,0 +1,63 @@
+"""Hypothesis shim: use the real library when installed, otherwise a tiny
+deterministic fallback.
+
+The container image does not ship ``hypothesis``; property tests still run,
+exercising each ``@given`` test on the boundary tuples (all-min, all-max)
+plus a fixed number of seeded pseudo-random samples. Only the strategy
+subset the suite actually uses (``integers``, ``floats``) is implemented.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, lo, hi, sample):
+            self.lo, self.hi, self._sample = lo, hi, sample
+
+        def sample(self, rng):
+            return self._sample(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                int(min_value), int(max_value),
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                float(min_value), float(max_value),
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+    st = _Strategies()
+
+    def settings(**_kwargs):
+        """Accepted and ignored (fallback always runs a fixed sample count)."""
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            def wrapper():
+                rng = np.random.default_rng(20260727)
+                fn(*[s.lo for s in strats])
+                fn(*[s.hi for s in strats])
+                for _ in range(10):
+                    fn(*[s.sample(rng) for s in strats])
+            # NOT functools.wraps: copying __wrapped__ would make pytest
+            # introspect the original signature and demand fixtures for the
+            # strategy-bound parameters.
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco

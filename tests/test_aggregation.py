@@ -3,7 +3,7 @@ shard_map/psum path equivalence."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.aggregation import (aggregate_grads, aggregate_grads_local,
                                     layer_coefficients, masked_mean_grads)
@@ -64,7 +64,10 @@ def test_masked_mean_no_correction():
 def test_shard_map_psum_path_matches():
     """aggregate_grads_local under shard_map == aggregate_grads globally."""
     from jax.sharding import Mesh, PartitionSpec as P
-    from jax import shard_map
+    try:
+        from jax import shard_map            # jax >= 0.5
+    except ImportError:
+        from jax.experimental.shard_map import shard_map
 
     U, L, F = 4, 3, 6   # single CPU device -> 1 shard holding all clients
     g = _rand((U, L, F), 0)

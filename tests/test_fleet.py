@@ -1,0 +1,247 @@
+"""Fleet subsystem: profiles, availability, cohort sampling, chunked
+aggregation equivalence, and an end-to-end 200-device run_fleet smoke."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FleetConfig
+from repro.core.aggregation import aggregate_grads, aggregate_grads_chunk
+from repro.core.types import AnalysisConfig
+from repro.data.synthetic import make_image_dataset
+from repro.fleet.availability import (AVAILABILITY, AlwaysOn, Bernoulli,
+                                      Diurnal, Markov, make_availability)
+from repro.fleet.cohort import cohort_view, sample_cohort
+from repro.fleet.engine import partition_fleet, reference_config, run_fleet
+from repro.fleet.profiles import (PRESETS, fleet_from_config, load_trace,
+                                  make_fleet, save_trace)
+from repro.models.paper_models import make_mlp
+
+
+# ---------------------------------------------------------------------------
+# profiles
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("preset", sorted(PRESETS))
+def test_preset_sampling_deterministic_in_seed(preset):
+    f1 = make_fleet(preset, 257, seed=3)
+    f2 = make_fleet(preset, 257, seed=3)
+    f3 = make_fleet(preset, 257, seed=4)
+    assert f1.size == 257
+    np.testing.assert_array_equal(f1.P, f2.P)
+    np.testing.assert_array_equal(f1.B, f2.B)
+    np.testing.assert_array_equal(f1.tier, f2.tier)
+    assert not np.array_equal(f1.P, f3.P)
+    assert float(f1.P.min()) > 0 and float(f1.B.min()) > 0
+    assert set(np.unique(f1.tier)) <= {0, 1, 2}
+
+
+def test_preset_shapes_differ():
+    """The presets describe genuinely different populations."""
+    lt = make_fleet("longtail-mobile", 2000, seed=0)
+    dc = make_fleet("datacenter", 2000, seed=0)
+    # datacenter: fast and tight; longtail: slower median, huge spread
+    assert np.median(dc.P) > 3 * np.median(lt.P)
+    assert (lt.P.max() / lt.P.min()) > 10 * (dc.P.max() / dc.P.min())
+    assert dc.B.mean() < lt.B.mean()
+
+
+def test_trace_roundtrip(tmp_path):
+    fleet = make_fleet("bimodal-edge", 50, seed=1)
+    path = os.path.join(tmp_path, "trace.json")
+    save_trace(fleet, path)
+    loaded = load_trace(path)
+    np.testing.assert_allclose(loaded.P, fleet.P, rtol=1e-6)
+    np.testing.assert_allclose(loaded.B, fleet.B, rtol=1e-6)
+    np.testing.assert_array_equal(loaded.tier, fleet.tier)
+    # FleetConfig trace_path routes through load_trace
+    fc = FleetConfig(trace_path=path)
+    np.testing.assert_allclose(fleet_from_config(fc).P, fleet.P, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# availability
+# ---------------------------------------------------------------------------
+
+def _mean_rate(model, rounds=300):
+    model.reset()
+    return np.mean([model.step(t).mean() for t in range(rounds)])
+
+
+def test_always_on():
+    m = AlwaysOn(100)
+    assert m.step(0).all() and m.step(7).all()
+
+
+def test_bernoulli_respects_rate():
+    m = Bernoulli(400, seed=0, rate=0.7)
+    assert abs(_mean_rate(m) - 0.7) < 0.03
+
+
+def test_diurnal_oscillates_around_mean():
+    m = Diurnal(400, seed=0, mean=0.6, amplitude=0.35, period=12.0)
+    assert abs(_mean_rate(m, rounds=240) - 0.6) < 0.04
+    # with a shared phase the wave must actually swing
+    m2 = Diurnal(400, seed=0, mean=0.6, amplitude=0.35, period=12.0)
+    m2.phase[:] = 0.0
+    per_round = [m2.step(t).mean() for t in range(12)]
+    assert max(per_round) - min(per_round) > 0.4
+
+
+def test_markov_stationary_rate_and_stickiness():
+    m = Markov(500, seed=0, p_off_to_on=0.3, p_on_to_off=0.1)
+    assert abs(m.stationary - 0.75) < 1e-9
+    assert abs(_mean_rate(m) - 0.75) < 0.04
+    # sticky: consecutive states agree far more often than iid draws would
+    m.reset()
+    prev = m.step(0)
+    agrees = []
+    for t in range(1, 50):
+        cur = m.step(t)
+        agrees.append(np.mean(cur == prev))
+        prev = cur
+    assert np.mean(agrees) > 0.8
+
+
+def test_availability_deterministic_after_reset():
+    for name in AVAILABILITY:
+        m = make_availability(name, 64, seed=5)
+        seq1 = [m.step(t).copy() for t in range(5)]
+        m.reset()
+        seq2 = [m.step(t).copy() for t in range(5)]
+        for a, b in zip(seq1, seq2):
+            np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# cohort sampling
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", ["uniform", "power-of-choice",
+                                      "stratified"])
+def test_cohort_exactly_U_distinct_available(strategy):
+    fleet = make_fleet("longtail-mobile", 300, seed=0)
+    rng = np.random.default_rng(0)
+    avail = np.zeros(300, bool)
+    avail[rng.choice(300, 150, replace=False)] = True
+    idx = sample_cohort(np.random.default_rng(1), avail, fleet, 32, strategy)
+    assert len(idx) == 32
+    assert len(np.unique(idx)) == 32
+    assert avail[idx].all()
+
+
+def test_cohort_degrades_when_few_available():
+    fleet = make_fleet("uniform", 100, seed=0)
+    avail = np.zeros(100, bool)
+    avail[:7] = True
+    idx = sample_cohort(np.random.default_rng(0), avail, fleet, 32)
+    assert sorted(idx.tolist()) == list(range(7))
+    assert len(sample_cohort(np.random.default_rng(0),
+                             np.zeros(100, bool), fleet, 32)) == 0
+
+
+def test_power_of_choice_prefers_fast_devices():
+    fleet = make_fleet("longtail-mobile", 500, seed=0)
+    avail = np.ones(500, bool)
+    rng1, rng2 = np.random.default_rng(0), np.random.default_rng(0)
+    uni = sample_cohort(rng1, avail, fleet, 32, "uniform")
+    poc = sample_cohort(rng2, avail, fleet, 32, "power-of-choice")
+    assert fleet.P[poc].mean() > fleet.P[uni].mean()
+
+
+def test_stratified_covers_tiers():
+    fleet = make_fleet("uniform", 300, seed=0)
+    avail = np.ones(300, bool)
+    idx = sample_cohort(np.random.default_rng(0), avail, fleet, 30,
+                        "stratified")
+    assert set(np.unique(fleet.tier[idx])) == set(np.unique(fleet.tier))
+
+
+def test_cohort_view_rederives_config():
+    fleet = make_fleet("bimodal-edge", 200, seed=0)
+    base = AnalysisConfig.default(U=16, L=4, R=8, T_max=16.0)
+    idx = np.arange(10, 26)
+    view = cohort_view(base, fleet, idx)
+    assert view.U == 16
+    np.testing.assert_array_equal(view.P, fleet.P[idx])
+    np.testing.assert_array_equal(view.B, fleet.B[idx])
+    assert view.R == base.R and view.T_max == base.T_max
+
+
+# ---------------------------------------------------------------------------
+# chunked aggregation == monolithic aggregation
+# ---------------------------------------------------------------------------
+
+def test_chunked_aggregation_matches_monolithic():
+    U, L, F, C = 24, 5, 7, 8
+    key = jax.random.PRNGKey(0)
+    g = jax.random.normal(key, (U, L, F))
+    mask = (jax.random.uniform(jax.random.PRNGKey(1), (U, L)) > 0.4
+            ).astype(jnp.float32)
+    p = jnp.full((L,), 0.1)
+    ids = {"w": jnp.arange(L)}
+    ref = aggregate_grads({"w": g}, ids, mask, p)["w"]
+    counts = mask.sum(0)
+    agg = None
+    for c0 in range(0, U, C):
+        part = aggregate_grads_chunk({"w": g[c0:c0 + C]}, ids,
+                                     mask[c0:c0 + C], p, counts)["w"]
+        agg = part if agg is None else agg + part
+    np.testing.assert_allclose(np.asarray(agg), np.asarray(ref), rtol=1e-5,
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end fleet run
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def fleet_setup():
+    x_tr, y_tr, x_te, y_te = make_image_dataset(
+        "mnist", n_train=1200, n_test=300, seed=0, noise_std=1.0)
+    fleet = make_fleet("longtail-mobile", 200, seed=0)
+    data = partition_fleet(x_tr, y_tr, x_te, y_te, 200, alpha=0.5, seed=0)
+    return fleet, data
+
+
+def test_run_fleet_smoke_200_devices(fleet_setup):
+    fleet, data = fleet_setup
+    model = make_mlp()
+    avail = make_availability("diurnal", 200, seed=0, mean=0.7,
+                              amplitude=0.25, period=8.0)
+    _, hist = run_fleet(model, fleet, avail, data, method="adel", rounds=6,
+                        cohort_size=16, chunk_size=8, solver_steps=300,
+                        seed=0)
+    assert len(hist.accuracy) >= 4
+    assert len(hist.available) == len(hist.accuracy)
+    assert all(0 < a <= 200 for a in hist.available)
+    # learning signal: train loss decreases over the run
+    assert hist.train_loss[-1] < hist.train_loss[0], hist.train_loss
+    # simulated clock respects the budget
+    assert hist.times[-1] <= 6 * model.L * 0.5 * 1.001
+    assert hist.method == "fleet-adel"
+
+
+def test_run_fleet_baseline_and_reduced_cohort(fleet_setup):
+    """salf + single-chunk fast path (cohort == chunk) + rounds where
+    availability < cohort_size still execute."""
+    fleet, data = fleet_setup
+    model = make_mlp()
+    avail = make_availability("bernoulli", 200, seed=1, rate=0.06)  # ~12 up
+    _, hist = run_fleet(model, fleet, avail, data, method="salf", rounds=3,
+                        cohort_size=16, chunk_size=16, seed=0)
+    assert len(hist.accuracy) >= 1
+    assert hist.method == "fleet-salf"
+
+
+def test_reference_config_spans_fleet():
+    fleet = make_fleet("longtail-mobile", 500, seed=0)
+    ref = reference_config(fleet, U=32, L=4, R=10, T_max=20.0)
+    assert ref.U == 32 and ref.P.shape == (32,)
+    # quantile-spaced: planning cohort spans the population's spread
+    assert ref.P.min() <= np.quantile(fleet.P, 0.1)
+    assert ref.P.max() >= np.quantile(fleet.P, 0.9)
+    assert (np.diff(ref.P) >= 0).all()

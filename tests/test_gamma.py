@@ -3,7 +3,7 @@ regularized upper incomplete gamma ladder."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 from scipy.special import gammaincc
 from scipy.stats import poisson
 

@@ -132,6 +132,22 @@ def test_adel_agg_sweep(U, L, F, bf, dtype):
                                np.asarray(ref, np.float32), **TOL[dtype])
 
 
+@pytest.mark.parametrize("U,L,F,bf", [
+    (3, 2, 300, 128),     # F not a multiple of block_f
+    (4, 3, 130, 512),     # F < block_f and odd
+    (2, 2, 7, 4),         # tiny, non-multiple
+])
+def test_adel_agg_nonmultiple_feature_dim(U, L, F, bf):
+    """The kernel pads the flattened feature dim and slices the output."""
+    g = _qs((U, L, F), 0)
+    c = jax.random.uniform(jax.random.PRNGKey(1), (U, L))
+    out = adel_agg(g, c, block_f=bf, interpret=True)
+    assert out.shape == (L, F)
+    ref = adel_agg_ref(g, c)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
 def test_adel_agg_pytree_matches_reference_path():
     from repro.core.aggregation import aggregate_grads
     U, L = 5, 4

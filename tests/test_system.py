@@ -6,7 +6,7 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.core.straggler import batch_sizes, contribution_mask, poisson_rates
