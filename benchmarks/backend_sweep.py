@@ -1,0 +1,95 @@
+"""Backend sweep — wall-clock per round for the three execution backends
+(dense / chunked / shard_map) across cohort sizes {16, 64, 256}.
+
+Drives :class:`repro.fl.runtime.RoundRuntime` directly: one warmup pass
+compiles each backend's round step, then a timed pass measures steady-state
+seconds per round (eval excluded from the loop via a final-round-only
+cadence). On a single-device host the shard_map mesh has one shard; set
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before running to
+sweep a real N-way client mesh. Emits ``experiments/results/
+backend_sweep.json`` consumed by ``benchmarks/report.py``.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import cached_result, save_result
+
+COHORTS = (16, 64, 256)
+BACKENDS = ("dense", "chunked", "shard_map")
+
+
+def _sweep_one(U: int, backend: str, *, rounds: int, chunk_size: int,
+               n_train: int) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.baselines import make_policy
+    from repro.core.types import AnalysisConfig
+    from repro.data.synthetic import make_image_dataset
+    from repro.fl.partition import iid_partition, stack_clients
+    from repro.fl.runtime import RoundRuntime, StaticCohortSource, probe_s_max
+    from repro.models.paper_models import make_mlp
+
+    x_tr, y_tr, x_te, y_te = make_image_dataset(
+        "mnist", n_train=n_train, n_test=256, seed=0, noise_std=1.0)
+    parts = iid_partition(len(y_tr), U, seed=0)
+    cx, cy, counts = stack_clients(x_tr, y_tr, parts)
+    model = make_mlp()
+    cfg = AnalysisConfig.default(U=U, L=model.L, R=rounds,
+                                 T_max=rounds * model.L * 0.5, eta0=1.0,
+                                 seed=0)
+    policy = make_policy("salf", cfg)   # fixed deadline, no solver cost
+    s_max = max(min(probe_s_max(policy, rounds), int(cy.shape[1])), 2)
+
+    runtime = RoundRuntime(model, policy, backend=backend,
+                           chunk_size=chunk_size)
+    source = StaticCohortSource(jnp.asarray(cx), jnp.asarray(cy),
+                                jnp.asarray(counts))
+    common = dict(T_max=cfg.T_max * 10, eta=cfg.eta, s_max=s_max,
+                  test_x=jnp.asarray(x_te), test_y=jnp.asarray(y_te),
+                  eval_every=rounds + 1)
+    # warmup compiles the round step + eval; the jit caches live on the
+    # backend / model, so the timed pass measures steady-state rounds
+    runtime.run(source, rounds=1, key=jax.random.PRNGKey(1), **common)
+    t0 = time.time()
+    _, hist = runtime.run(source, rounds=rounds, key=jax.random.PRNGKey(0),
+                          **common)
+    wall = time.time() - t0
+    return {
+        "backend": backend,
+        "cohort": U,
+        "rounds": rounds,
+        "U_pad": runtime.backend.cohort_pad(U),
+        "wall_s": round(wall, 4),
+        "wall_per_round_s": round(wall / rounds, 4),
+        "final_acc": hist.accuracy[-1] if hist.accuracy else None,
+        "devices": len(jax.devices()),
+        **runtime.backend.describe(),
+    }
+
+
+def run(quick: bool = False) -> dict:
+    cached = cached_result("backend_sweep")
+    if cached is not None:
+        return cached
+    cohorts = COHORTS[:2] if quick else COHORTS
+    rounds = 3 if quick else 6
+    n_train = 1024 if quick else 2048
+    result = {}
+    for U in cohorts:
+        row = {}
+        for backend in BACKENDS:
+            rec = _sweep_one(U, backend, rounds=rounds,
+                             chunk_size=max(U // 4, 8), n_train=n_train)
+            row[backend] = rec
+            print(f"[backend_sweep] cohort={U:4d} {backend:9s} "
+                  f"{rec['wall_per_round_s']:8.3f}s/round "
+                  f"(pad {rec['U_pad']}, {rec['devices']} dev)")
+        result[f"cohort_{U}"] = row
+    save_result("backend_sweep", result)
+    return result
+
+
+if __name__ == "__main__":
+    run()

@@ -72,6 +72,33 @@ def section_roofline() -> str:
     return "\n".join(out)
 
 
+def section_backend_sweep() -> str:
+    """Seconds/round for the three execution backends (fl.backends)."""
+    fn = os.path.join(RESULTS, "results", "backend_sweep.json")
+    if not os.path.exists(fn):
+        return ""
+    with open(fn) as f:
+        res = json.load(f)
+    out = ["### backend_sweep (s/round)\n",
+           "| cohort | dense | chunked | shard_map | devices |",
+           "|---|---|---|---|---|"]
+    for setting, row in sorted(res.items(),
+                               key=lambda kv: int(kv[0].split("_")[-1])):
+        if not isinstance(row, dict):
+            continue
+        cells = []
+        for b in ("dense", "chunked", "shard_map"):
+            d = row.get(b)
+            cells.append(f"{d['wall_per_round_s']:.3f}"
+                         if isinstance(d, dict) else "—")
+        dev = next((d.get("devices") for d in row.values()
+                    if isinstance(d, dict)), "?")
+        out.append(f"| {setting.removeprefix('cohort_')} | "
+                   + " | ".join(cells) + f" | {dev} |")
+    out.append("")
+    return "\n".join(out)
+
+
 def section_repro() -> str:
     out = []
     for name in ("fig2_mnist", "fig3_cifar", "fig4_robustness",
@@ -99,6 +126,9 @@ def section_repro() -> str:
                     cells.append("—")
             out.append(f"| {setting} | " + " | ".join(cells) + " |")
         out.append("")
+    sweep = section_backend_sweep()
+    if sweep:
+        out.append(sweep)
     return "\n".join(out)
 
 

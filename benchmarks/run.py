@@ -17,8 +17,9 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args(argv)
 
-    from benchmarks import (fig2_mnist, fig3_cifar, fig4_robustness,
-                            fleet_smoke, roofline, table2_budgets)
+    from benchmarks import (backend_sweep, fig2_mnist, fig3_cifar,
+                            fig4_robustness, fleet_smoke, roofline,
+                            table2_budgets)
     suites = {
         "fig2_mnist": fig2_mnist.run,
         "fig3_cifar": fig3_cifar.run,
@@ -26,6 +27,7 @@ def main(argv=None) -> None:
         "table2_budgets": table2_budgets.run,
         "roofline": roofline.run,
         "fleet_smoke": fleet_smoke.run,
+        "backend_sweep": backend_sweep.run,
     }
     if args.only:
         suites = {args.only: suites[args.only]}
@@ -50,6 +52,16 @@ def _derive(name: str, result: dict) -> str:
             rows = result["rows"]
             ok = [r for r in rows if "error" not in r]
             return f"{len(ok)}/{len(rows)} combos"
+        if name == "backend_sweep":
+            pieces = []
+            for setting, row in sorted(
+                    result.items(),
+                    key=lambda kv: int(kv[0].split("_")[-1])):
+                walls = "/".join(f"{row[b]['wall_per_round_s']:.2f}"
+                                 for b in ("dense", "chunked", "shard_map")
+                                 if b in row)
+                pieces.append(f"{setting.removeprefix('cohort_')}:{walls}s")
+            return "dense/chunked/shard " + " ".join(pieces)
         if name == "table2_budgets":
             accs = []
             for k, v in result.items():

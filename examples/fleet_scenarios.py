@@ -20,6 +20,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--fleet-size", type=int, default=300)
+    ap.add_argument("--backend", default=None,
+                    choices=["dense", "chunked", "shard_map"],
+                    help="execution backend (repro.fl.backends); default "
+                         "keeps the scenario's chunked engine")
     args = ap.parse_args()
 
     runs = {}
@@ -29,6 +33,7 @@ def main():
               f"(fleet={args.fleet_size}, rounds={args.rounds}) ==")
         runs[name] = run_scenario(scn, rounds=args.rounds,
                                   fleet_size=args.fleet_size,
+                                  backend=args.backend,
                                   solver_steps=400, verbose=False)
 
     a, b = (runs[n] for n in NAMES)

@@ -1,5 +1,6 @@
 #!/usr/bin/env sh
 # Tier-1 verify: run the suite from anywhere (pyproject pins pythonpath=src).
+# exec replaces the shell, so the script exits with pytest's own status code.
 set -e
 cd "$(dirname "$0")/.."
 exec python -m pytest -x -q "$@"

@@ -224,7 +224,8 @@ class FleetConfig:
     availability_kwargs: tuple = ()
     cohort_size: int = 32          # U clients planned per round
     cohort_strategy: str = "uniform"   # uniform | power-of-choice | stratified
-    chunk_size: int = 16           # client-shard axis chunk for the engine
+    backend: str = "chunked"       # fl.backends: dense | chunked | shard_map
+    chunk_size: int = 16           # client-shard axis chunk (chunked backend)
     seed: int = 0
 
     def availability_dict(self) -> dict:

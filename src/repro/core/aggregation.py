@@ -33,6 +33,8 @@ __all__ = [
     "aggregate_grads",
     "aggregate_grads_chunk",
     "aggregate_grads_local",
+    "hetero_overlap_partials",
+    "hetero_overlap_mean",
     "masked_mean_grads",
 ]
 
@@ -118,6 +120,38 @@ def aggregate_grads_chunk(chunk_grads: PyTree, layer_ids: PyTree,
                            counts=counts)
     return jax.tree.map(lambda g, ids: _weight_leaf(g, ids, c),
                         chunk_grads, layer_ids)
+
+
+def hetero_overlap_partials(deltas: PyTree, wmasks: PyTree,
+                            part: jnp.ndarray) -> tuple[PyTree, PyTree]:
+    """Per-shard partials of the HeteroFL width-overlap mean.
+
+    HeteroFL averages each parameter ENTRY over the participating clients
+    whose width-reduced submodel contains it:
+
+        agg = sum_u part_u wm_u d_u / max(sum_u part_u wm_u, 1)
+
+    Both sums are linear over the client axis, so — exactly like
+    :func:`aggregate_grads_chunk` / :func:`aggregate_grads_local` — a
+    backend computes local (num, den) partials over its slice of clients
+    and combines them with a chunk-sum or ``jax.lax.psum`` before the
+    final divide in :func:`hetero_overlap_mean`.
+
+    deltas/wmasks leaves: (U_local,) + param.shape; part: (U_local,)
+    participation indicator (all-or-nothing rows of the layer mask).
+    """
+    def w(wm):
+        return part.reshape((-1,) + (1,) * (wm.ndim - 1)) * wm
+
+    num = jax.tree.map(lambda d, wm: (w(wm) * d).sum(0), deltas, wmasks)
+    den = jax.tree.map(lambda wm: w(wm).sum(0), wmasks)
+    return num, den
+
+
+def hetero_overlap_mean(num: PyTree, den: PyTree) -> PyTree:
+    """Finish the width-overlap mean from globally combined partials;
+    entries no participating client covers keep delta 0."""
+    return jax.tree.map(lambda n, d: n / jnp.maximum(d, 1.0), num, den)
 
 
 def masked_mean_grads(grads: PyTree, layer_ids: PyTree,

@@ -173,6 +173,11 @@ class HeteroFLPolicy(Policy):
     capability; aggregation averages each parameter entry over the clients
     whose submodel contains it. Compute per layer scales ~ r^2 (both weight
     matrices shrink), so slow clients nearly always finish their small model.
+
+    With a per-round cohort ``view`` (fleet runs) the capability buckets are
+    re-derived from the sampled cohort's P, and ``RoundPlan.width_ratios``
+    tells the runtime which width masks to build; the width-overlap mean
+    runs on every execution backend (``repro.fl.backends``).
     """
 
     name = "heterofl"

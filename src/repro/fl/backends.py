@@ -1,0 +1,298 @@
+"""Pluggable execution backends for the unified round runtime.
+
+:class:`repro.fl.runtime.RoundRuntime` plans a round (policy, padding,
+clock, eval) and hands the padded fixed-shape round inputs to an
+:class:`ExecutionBackend`, which owns HOW the cohort's client updates are
+computed and aggregated:
+
+* :class:`DenseBackend`     — one vmap over the whole cohort; aggregation is
+  :func:`repro.core.aggregation.aggregate_grads` (the original
+  ``run_federated`` path).
+* :class:`ChunkedBackend`   — the cohort axis is processed ``chunk_size``
+  clients at a time; per-chunk partial aggregates from
+  :func:`repro.core.aggregation.aggregate_grads_chunk` are summed on the
+  host — a software psum that never materializes a full ``(cohort, ...)``
+  delta pytree (the original fleet-engine path).
+* :class:`ShardMapBackend`  — the chunk loop becomes a REAL client mesh
+  axis: ``jax.shard_map`` over :func:`repro.launch.mesh.batch_axes` with
+  :func:`repro.core.aggregation.aggregate_grads_local` (``jax.lax.psum``).
+  Testable on a CPU host via
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+
+All three produce the same updates up to float summation order, which
+``tests/test_backends.py`` asserts end-to-end. Each backend keeps its own
+jit cache keyed by ``(bias_correct, hetero)``, so retracing happens at most
+once per aggregation rule; HeteroFL width-overlap aggregation
+(:func:`repro.core.aggregation.hetero_overlap_partials`) flows through the
+same chunk/psum machinery as the layer-wise rule.
+
+Backends are selected by name: ``make_backend("dense" | "chunked" |
+"shard_map", model, ...)``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregation import (aggregate_grads, aggregate_grads_chunk,
+                                    aggregate_grads_local,
+                                    hetero_overlap_mean,
+                                    hetero_overlap_partials)
+from repro.fl.client import batched_client_deltas
+
+try:                                     # jax >= 0.5
+    from jax import shard_map as _shard_map
+except ImportError:                      # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["BACKENDS", "ExecutionBackend", "DenseBackend", "ChunkedBackend",
+           "ShardMapBackend", "make_backend"]
+
+PyTree = Any
+
+BACKENDS = ("dense", "chunked", "shard_map")
+
+
+class ExecutionBackend:
+    """Executes one federated round over a padded fixed-shape cohort.
+
+    ``run_round`` receives per-client batches ``xb/yb/wb`` with leading axis
+    ``U_pad = cohort_pad(cohort_size)``, the (U_pad, L) contribution mask
+    (padded rows all-zero, so they contribute nothing), the (L,)
+    zero-contributor probabilities ``p``, the round's learning rate, and —
+    for HeteroFL rounds — a width-mask pytree with leading axis U_pad.
+    It returns the updated global params.
+    """
+
+    name = "base"
+
+    def __init__(self, model, *, local_iters: int = 1, l2: float = 0.0):
+        self.model = model
+        self.local_iters = int(local_iters)
+        self.l2 = float(l2)
+
+    def cohort_pad(self, U: int) -> int:
+        """Smallest padded cohort width >= U this backend can execute."""
+        return int(U)
+
+    def run_round(self, params: PyTree, xb, yb, wb, mask, p, eta, *,
+                  bias_correct: bool, wmasks: PyTree | None = None) -> PyTree:
+        raise NotImplementedError
+
+    def describe(self) -> dict:
+        return {"backend": self.name}
+
+    # shared sub-computations -------------------------------------------
+    def _deltas(self, params, xb, yb, wb, eta):
+        return batched_client_deltas(self.model.loss, params, xb, yb, wb,
+                                     eta, local_iters=self.local_iters,
+                                     l2=self.l2)
+
+
+class DenseBackend(ExecutionBackend):
+    """Whole cohort in one vmap + one monolithic aggregation."""
+
+    name = "dense"
+
+    def __init__(self, model, *, local_iters: int = 1, l2: float = 0.0):
+        super().__init__(model, local_iters=local_iters, l2=l2)
+        self._steps: dict[tuple, Callable] = {}
+
+    def _step(self, bias_correct: bool, hetero: bool) -> Callable:
+        key = (bias_correct, hetero)
+        if key not in self._steps:
+            @jax.jit
+            def step(params, xb, yb, wb, mask, p, eta, wmasks):
+                deltas = self._deltas(params, xb, yb, wb, eta)
+                ids = self.model.layer_ids(params)
+                if hetero:
+                    num, den = hetero_overlap_partials(deltas, wmasks,
+                                                       mask[:, 0])
+                    agg = hetero_overlap_mean(num, den)
+                else:
+                    agg = aggregate_grads(deltas, ids, mask, p,
+                                          bias_correct=bias_correct)
+                return jax.tree.map(lambda w, d: w - d, params, agg)
+
+            self._steps[key] = step
+        return self._steps[key]
+
+    def run_round(self, params, xb, yb, wb, mask, p, eta, *,
+                  bias_correct, wmasks=None):
+        step = self._step(bool(bias_correct), wmasks is not None)
+        return step(params, xb, yb, wb, mask, p, eta, wmasks)
+
+
+class ChunkedBackend(ExecutionBackend):
+    """Sequential software psum over a client-shard axis.
+
+    The cohort is padded to a ``chunk_size`` multiple; each chunk's partial
+    aggregate uses the GLOBAL per-layer contributor counts, so summing the
+    partials over chunks equals the dense aggregation on the concatenated
+    client axis. A single-chunk cohort falls through to the dense step.
+    """
+
+    name = "chunked"
+
+    def __init__(self, model, *, chunk_size: int = 16, local_iters: int = 1,
+                 l2: float = 0.0):
+        super().__init__(model, local_iters=local_iters, l2=l2)
+        self.chunk_size = max(int(chunk_size), 1)
+        self._dense = DenseBackend(model, local_iters=local_iters, l2=l2)
+        self._chunks: dict[tuple, Callable] = {}
+        self._apply = jax.jit(
+            lambda params, agg: jax.tree.map(lambda w, d: w - d, params, agg))
+        self._apply_hetero = jax.jit(
+            lambda params, num, den: jax.tree.map(
+                lambda w, d: w - d, params, hetero_overlap_mean(num, den)))
+
+    def cohort_pad(self, U: int) -> int:
+        c = min(self.chunk_size, int(U))   # never vmap dead padding
+        return -(-int(U) // c) * c
+
+    def _chunk_step(self, bias_correct: bool, hetero: bool) -> Callable:
+        key = (bias_correct, hetero)
+        if key not in self._chunks:
+            @jax.jit
+            def chunk_partial(params, xb, yb, wb, mask_c, p, eta, counts,
+                              wmasks_c):
+                deltas = self._deltas(params, xb, yb, wb, eta)
+                ids = self.model.layer_ids(params)
+                if hetero:
+                    return hetero_overlap_partials(deltas, wmasks_c,
+                                                   mask_c[:, 0])
+                return aggregate_grads_chunk(deltas, ids, mask_c, p, counts,
+                                             bias_correct=bias_correct)
+
+            self._chunks[key] = chunk_partial
+        return self._chunks[key]
+
+    def run_round(self, params, xb, yb, wb, mask, p, eta, *,
+                  bias_correct, wmasks=None):
+        U = int(mask.shape[0])
+        c = min(self.chunk_size, U)
+        if U <= c:
+            return self._dense.run_round(params, xb, yb, wb, mask, p, eta,
+                                         bias_correct=bias_correct,
+                                         wmasks=wmasks)
+        hetero = wmasks is not None
+        step = self._chunk_step(bool(bias_correct), hetero)
+        counts = mask.sum(0)                       # (L,) global contributors
+        num = den = agg = None
+        for c0 in range(0, U, c):
+            sl = slice(c0, c0 + c)
+            wm_c = (None if not hetero
+                    else jax.tree.map(lambda m: m[sl], wmasks))
+            part = step(params, xb[sl], yb[sl], wb[sl], mask[sl], p, eta,
+                        counts, wm_c)
+            if hetero:
+                n_p, d_p = part
+                num = n_p if num is None else jax.tree.map(jnp.add, num, n_p)
+                den = d_p if den is None else jax.tree.map(jnp.add, den, d_p)
+            else:
+                agg = part if agg is None else jax.tree.map(jnp.add, agg, part)
+        if hetero:
+            return self._apply_hetero(params, num, den)
+        return self._apply(params, agg)
+
+    def describe(self):
+        return {"backend": self.name, "chunk_size": self.chunk_size}
+
+
+class ShardMapBackend(ExecutionBackend):
+    """The chunk axis as a real client mesh axis: shard_map + lax.psum.
+
+    The cohort is padded to a multiple of the mesh's batch shards; every
+    shard computes its clients' deltas and local partials, and
+    ``jax.lax.psum`` over :func:`repro.launch.mesh.batch_axes` combines
+    counts and weighted sums — the hardware form of the chunk loop.
+    """
+
+    name = "shard_map"
+
+    def __init__(self, model, *, mesh=None, local_iters: int = 1,
+                 l2: float = 0.0):
+        super().__init__(model, local_iters=local_iters, l2=l2)
+        self._mesh = mesh
+        self._steps: dict[tuple, Callable] = {}
+
+    @property
+    def mesh(self):
+        if self._mesh is None:
+            from repro.launch.mesh import make_client_mesh
+            self._mesh = make_client_mesh()
+        return self._mesh
+
+    @property
+    def client_axes(self) -> tuple:
+        from repro.launch.mesh import batch_axes
+        return batch_axes(self.mesh)
+
+    @property
+    def n_shards(self) -> int:
+        from repro.launch.mesh import batch_shards
+        return batch_shards(self.mesh)
+
+    def cohort_pad(self, U: int) -> int:
+        n = self.n_shards
+        return -(-int(U) // n) * n
+
+    def _step(self, bias_correct: bool, hetero: bool) -> Callable:
+        key = (bias_correct, hetero)
+        if key not in self._steps:
+            mesh = self.mesh
+            ax = tuple(self.client_axes)
+            model = self.model
+
+            def local_fn(params, xb, yb, wb, mask_l, p, eta, wmasks_l):
+                deltas = self._deltas(params, xb, yb, wb, eta)
+                ids = model.layer_ids(params)
+                if hetero:
+                    num, den = hetero_overlap_partials(deltas, wmasks_l,
+                                                       mask_l[:, 0])
+                    num = jax.lax.psum(num, ax)
+                    den = jax.lax.psum(den, ax)
+                    agg = hetero_overlap_mean(num, den)
+                else:
+                    agg = aggregate_grads_local(deltas, ids, mask_l, p, ax,
+                                                bias_correct=bias_correct)
+                return jax.tree.map(lambda w, d: w - d, params, agg)
+
+            spec_c = P(ax)      # leading client axis sharded over batch axes
+            spec_r = P()        # replicated
+            wm_spec = spec_c if hetero else spec_r
+            self._steps[key] = jax.jit(_shard_map(
+                local_fn, mesh=mesh,
+                in_specs=(spec_r, spec_c, spec_c, spec_c, spec_c, spec_r,
+                          spec_r, wm_spec),
+                out_specs=spec_r, check_rep=False))
+        return self._steps[key]
+
+    def run_round(self, params, xb, yb, wb, mask, p, eta, *,
+                  bias_correct, wmasks=None):
+        step = self._step(bool(bias_correct), wmasks is not None)
+        return step(params, xb, yb, wb, mask, p, eta, wmasks)
+
+    def describe(self):
+        return {"backend": self.name, "shards": self.n_shards,
+                "mesh_axes": list(self.mesh.axis_names)}
+
+
+def make_backend(backend, model, *, chunk_size: int = 16, mesh=None,
+                 local_iters: int = 1, l2: float = 0.0) -> ExecutionBackend:
+    """Resolve a backend by name (``"dense" | "chunked" | "shard_map"``) or
+    pass an :class:`ExecutionBackend` instance through unchanged."""
+    if isinstance(backend, ExecutionBackend):
+        return backend
+    if backend == "dense":
+        return DenseBackend(model, local_iters=local_iters, l2=l2)
+    if backend == "chunked":
+        return ChunkedBackend(model, chunk_size=chunk_size,
+                              local_iters=local_iters, l2=l2)
+    if backend == "shard_map":
+        return ShardMapBackend(model, mesh=mesh, local_iters=local_iters,
+                               l2=l2)
+    raise ValueError(f"unknown backend {backend!r}; known: {BACKENDS}")

@@ -62,6 +62,11 @@ def sample_client_batches(key: jax.Array, data_x: jnp.ndarray,
     data_x: (U, N, ...), data_y: (U, N); n_per_client: (U,) valid counts;
     batch_sizes: (U,) this round's S_t^u. Returns (xb, yb, wb) where
     wb[u, i] = 1/S_u for i < S_u else 0 (so a weighted sum is the batch mean).
+
+    NOTE: the draw is tied to the (U, s_max) shape by jax's counter-based
+    PRNG, so callers that pad the client axis (``repro.fl.runtime``) must
+    sample at the UNPADDED width and zero-pad xb/yb/wb afterwards — never
+    sample at a backend-dependent padded width.
     """
     U, N = data_y.shape
     idx = jax.random.randint(key, (U, s_max), 0, 2 ** 30)

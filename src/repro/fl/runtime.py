@@ -1,0 +1,258 @@
+"""Unified federated round runtime.
+
+One :class:`RoundRuntime` owns everything a federated round loop needs,
+independent of how the cohort's compute is executed:
+
+* per-round policy planning through the ``view=`` kwarg of
+  :meth:`repro.core.baselines.Policy.round`,
+* cohort stacking / padding to jit-stable fixed shapes (padded rows carry
+  an all-zero mask, batch size 1, and zero data, so they contribute 0),
+* ``s_max`` probing (:func:`probe_s_max`),
+* HeteroFL width-mask derivation (cached per distinct width-ratio vector),
+* the simulated wall-clock under Requirements R1 (max R rounds) and
+  R2 (total time <= T_max),
+* eval cadence and the :class:`History` record.
+
+HOW a round executes is delegated to an
+:class:`repro.fl.backends.ExecutionBackend` (``dense`` / ``chunked`` /
+``shard_map``), and WHERE the clients come from is delegated to a cohort
+source: :class:`StaticCohortSource` replays one pre-stacked population
+every round (``repro.fl.server.run_federated``), while the fleet engine's
+source samples availability + cohort per round
+(``repro.fleet.engine.run_fleet``). Policies, width masks, availability
+models, and future hooks are therefore written once and work under every
+backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.baselines import Policy, RoundPlan
+from repro.fl.backends import ExecutionBackend, make_backend
+from repro.fl.client import sample_client_batches
+
+PyTree = Any
+
+__all__ = ["ModelAPI", "History", "Cohort", "StaticCohortSource",
+           "RoundRuntime", "probe_s_max", "evaluate", "eval_metrics"]
+
+
+@dataclasses.dataclass
+class ModelAPI:
+    """Minimal model interface consumed by the FL runtime."""
+
+    init: Callable[[jax.Array], PyTree]
+    loss: Callable[[PyTree, jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray]
+    predict: Callable[[PyTree, jnp.ndarray], jnp.ndarray]
+    layer_ids: Callable[[PyTree], PyTree]
+    L: int
+    name: str = "model"
+    # HeteroFL support: width_masks(params, ratios (U,)) -> pytree with leading U axis
+    width_masks: Optional[Callable[[PyTree, np.ndarray], PyTree]] = None
+
+
+@dataclasses.dataclass
+class History:
+    times: list = dataclasses.field(default_factory=list)
+    rounds: list = dataclasses.field(default_factory=list)
+    accuracy: list = dataclasses.field(default_factory=list)
+    deadlines: list = dataclasses.field(default_factory=list)
+    train_loss: list = dataclasses.field(default_factory=list)
+    # fleet runs only: reachable-device count per executed round
+    available: list = dataclasses.field(default_factory=list)
+    method: str = ""
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def _jit_predict(model: ModelAPI):
+    """One jit wrapper per ModelAPI instance, reused across every eval call
+    (a fresh ``jax.jit(model.predict)`` per call would retrace each time)."""
+    fn = getattr(model, "_predict_jit", None)
+    if fn is None:
+        fn = jax.jit(model.predict)
+        model._predict_jit = fn
+    return fn
+
+
+def evaluate(model: ModelAPI, params: PyTree, x: jnp.ndarray, y: jnp.ndarray,
+             batch: int = 512) -> float:
+    n = x.shape[0]
+    correct = 0
+    predict = _jit_predict(model)
+    for i in range(0, n, batch):
+        logits = predict(params, x[i:i + batch])
+        correct += int((jnp.argmax(logits, -1) == y[i:i + batch]).sum())
+    return correct / n
+
+
+def eval_metrics(model: ModelAPI, params: PyTree, test_x: jnp.ndarray,
+                 test_y: jnp.ndarray, *, loss_samples: int = 256
+                 ) -> tuple[float, float]:
+    """(accuracy over the full test set, mean loss over a fixed head)."""
+    acc = evaluate(model, params, test_x, test_y)
+    n = min(loss_samples, int(test_y.shape[0]))
+    loss = float(model.loss(params, test_x[:n], test_y[:n],
+                            jnp.full((n,), 1.0 / n, jnp.float32)))
+    return acc, loss
+
+
+def probe_s_max(policy: Policy, rounds: int, *, view=None) -> int:
+    """Largest batch size the policy can plan (probed at the first and last
+    round), so per-client minibatches can be padded to one fixed width."""
+    probe = [policy.round(jax.random.PRNGKey(0), t, view=view)
+             for t in (0, max(rounds - 1, 0))]
+    return int(max(float(jnp.max(pl.batch_sizes)) for pl in probe))
+
+
+@dataclasses.dataclass
+class Cohort:
+    """One round's stacked client data, as produced by a cohort source.
+
+    ``x``: (U_act, n_pad, ...) inputs, ``y``: (U_act, n_pad) labels,
+    ``counts``: (U_act,) valid samples per client. ``view`` is the
+    per-round AnalysisConfig the policy should plan against (None keeps
+    the policy's static config), ``available`` the reachable-device count
+    (None outside fleet runs).
+    """
+
+    x: Any
+    y: Any
+    counts: Any
+    view: Any = None
+    available: Optional[int] = None
+
+    @property
+    def size(self) -> int:
+        return int(self.x.shape[0])
+
+
+class StaticCohortSource:
+    """The same pre-stacked client population every round (the classic
+    ``run_federated`` setting: cohort == population, no churn)."""
+
+    def __init__(self, client_x, client_y, n_per_client):
+        self._cohort = Cohort(x=client_x, y=client_y, counts=n_per_client)
+
+    @property
+    def cohort_size(self) -> int:
+        return self._cohort.size
+
+    def round_cohort(self, t: int) -> Cohort:
+        return self._cohort
+
+
+class RoundRuntime:
+    """The single federated round loop, parameterized by execution backend.
+
+    ``backend`` is a name (``"dense" | "chunked" | "shard_map"``) or an
+    :class:`repro.fl.backends.ExecutionBackend` instance; ``chunk_size`` /
+    ``mesh`` configure the chunked / shard_map backends.
+    """
+
+    def __init__(self, model: ModelAPI, policy: Policy, *,
+                 backend="dense", chunk_size: int = 16, mesh=None,
+                 local_iters: int = 1, l2: float = 0.0):
+        self.model = model
+        self.policy = policy
+        self.backend = make_backend(backend, model, chunk_size=chunk_size,
+                                    mesh=mesh, local_iters=local_iters, l2=l2)
+        self._wmask_cache: dict[bytes, PyTree] = {}
+
+    # ------------------------------------------------------------------
+    def _width_masks(self, params: PyTree, ratios, U_pad: int) -> PyTree:
+        if self.model.width_masks is None:
+            raise ValueError("model does not support HeteroFL width masks")
+        r = np.asarray(ratios, np.float32)
+        if r.shape[0] < U_pad:
+            # padded clients pose as full-width; their mask row is zero, so
+            # they never touch the overlap mean
+            r = np.concatenate([r, np.ones(U_pad - r.shape[0], np.float32)])
+        key = r.tobytes()
+        if key not in self._wmask_cache:
+            # fleet cohorts re-derive ratios every round, so bound the cache
+            # (each entry is a cohort-sized mask pytree) LRU-style
+            while len(self._wmask_cache) >= 8:
+                self._wmask_cache.pop(next(iter(self._wmask_cache)))
+            self._wmask_cache[key] = self.model.width_masks(params, r)
+        return self._wmask_cache[key]
+
+    def _prepare(self, cohort: Cohort, plan: RoundPlan, k_batch, s_max: int,
+                 U_pad: int):
+        """Draw the per-client minibatches, then pad the cohort axis to the
+        backend's fixed width.
+
+        Sampling always happens at the UNPADDED cohort width: jax's
+        counter-based PRNG ties the draw to the array shape, so sampling at
+        a backend-dependent padded width would give every backend different
+        minibatches. Padded rows get all-zero batches, weights, and mask —
+        their aggregation coefficients are 0, so they contribute nothing.
+        """
+        U_act = cohort.size
+        xb, yb, wb = sample_client_batches(
+            k_batch, jnp.asarray(cohort.x), jnp.asarray(cohort.y),
+            jnp.asarray(cohort.counts), jnp.asarray(plan.batch_sizes), s_max)
+        mask = jnp.asarray(plan.mask, jnp.float32)
+        if U_pad != U_act:
+            pad = U_pad - U_act
+            zrow = lambda a: jnp.concatenate(
+                [a, jnp.zeros((pad,) + a.shape[1:], a.dtype)])
+            xb, yb, wb, mask = zrow(xb), zrow(yb), zrow(wb), zrow(mask)
+        return xb, yb, wb, mask, U_act
+
+    # ------------------------------------------------------------------
+    def run(self, source, *, rounds: int, T_max: float, eta, s_max: int,
+            key: jax.Array, test_x, test_y, eval_every: int = 1,
+            verbose: bool = False, method: str = "") -> tuple[PyTree, History]:
+        """Run up to ``rounds`` rounds, stopping when the simulated clock
+        exceeds ``T_max``; returns ``(params, History)``."""
+        model, policy, backend = self.model, self.policy, self.backend
+        if getattr(policy, "name", "") == "heterofl" and \
+                model.width_masks is None:
+            raise ValueError("model does not support HeteroFL width masks")
+        key, k_init = jax.random.split(key)
+        params = model.init(k_init)
+        U_pad = backend.cohort_pad(source.cohort_size)
+
+        hist = History(method=method or policy.name)
+        elapsed = 0.0
+        for t in range(rounds):
+            cohort = source.round_cohort(t)
+            if cohort is None:
+                continue  # nobody reachable: the round never starts
+            key, k_round, k_batch = jax.random.split(key, 3)
+            plan: RoundPlan = policy.round(k_round, t, view=cohort.view)
+            if elapsed + plan.elapsed > T_max * (1 + 1e-6):
+                break
+            xb, yb, wb, mask, U_act = self._prepare(cohort, plan, k_batch,
+                                                    s_max, U_pad)
+            wmasks = (None if plan.width_ratios is None else
+                      self._width_masks(params, plan.width_ratios, U_pad))
+            params = backend.run_round(params, xb, yb, wb, mask, plan.p,
+                                       jnp.float32(eta[t]),
+                                       bias_correct=bool(plan.bias_correct),
+                                       wmasks=wmasks)
+            elapsed += plan.elapsed
+            if (t % eval_every == 0) or (t == rounds - 1):
+                acc, loss = eval_metrics(model, params, test_x, test_y)
+                hist.times.append(elapsed)
+                hist.rounds.append(t + 1)
+                hist.accuracy.append(acc)
+                hist.deadlines.append(float(plan.elapsed))
+                hist.train_loss.append(loss)
+                if cohort.available is not None:
+                    hist.available.append(int(cohort.available))
+                if verbose:
+                    fleet_bit = (
+                        "" if cohort.available is None else
+                        f"avail {cohort.available:4d} cohort {U_act:3d} ")
+                    print(f"[{hist.method}] round {t+1:3d} {fleet_bit}"
+                          f"time {elapsed:9.2f} "
+                          f"deadline {plan.elapsed:7.3f} acc {acc:.4f}")
+        return params, hist

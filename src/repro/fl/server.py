@@ -1,161 +1,53 @@
-"""Server-side federated round loop with simulated wall-clock accounting.
+"""Static-population front-end over the unified round runtime.
 
-``run_federated`` drives any :class:`repro.core.baselines.Policy` (ADEL-FL or
-a baseline) against a ModelAPI + per-client dataset, under the paper's
-Requirements R1 (max R rounds) and R2 (total time <= T_max).
+``run_federated`` is a thin wrapper: it probes ``s_max``, wraps the
+pre-stacked client arrays in a :class:`repro.fl.runtime.StaticCohortSource`
+(cohort == population, ``view=None`` every round), and hands the loop to
+:class:`repro.fl.runtime.RoundRuntime`, which owns policy planning, cohort
+padding, the simulated R1/R2 clock, eval cadence, and the
+:class:`repro.fl.runtime.History` record. HOW each round executes is an
+interchangeable :mod:`repro.fl.backends` backend — ``dense`` (one vmap over
+the cohort, the default here), ``chunked`` (sequential software psum), or
+``shard_map`` (a real client mesh axis with ``jax.lax.psum``) — all
+numerically equivalent up to float summation order.
+
+``ModelAPI`` / ``History`` / ``evaluate`` / ``eval_metrics`` are defined in
+:mod:`repro.fl.runtime` and re-exported here for compatibility.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-import time as _time
-from typing import Any, Callable, Optional
-
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.aggregation import aggregate_grads
-from repro.core.baselines import Policy, RoundPlan
+from repro.core.baselines import Policy
 from repro.core.types import AnalysisConfig
-from repro.fl.client import batched_client_deltas, sample_client_batches
+from repro.fl.runtime import (History, ModelAPI, RoundRuntime,
+                              StaticCohortSource, eval_metrics, evaluate,
+                              probe_s_max)
 
-PyTree = Any
+__all__ = ["ModelAPI", "History", "evaluate", "eval_metrics",
+           "run_federated"]
 
-
-@dataclasses.dataclass
-class ModelAPI:
-    """Minimal model interface consumed by the FL runtime."""
-
-    init: Callable[[jax.Array], PyTree]
-    loss: Callable[[PyTree, jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray]
-    predict: Callable[[PyTree, jnp.ndarray], jnp.ndarray]
-    layer_ids: Callable[[PyTree], PyTree]
-    L: int
-    name: str = "model"
-    # HeteroFL support: width_masks(params, ratios (U,)) -> pytree with leading U axis
-    width_masks: Optional[Callable[[PyTree, np.ndarray], PyTree]] = None
-
-
-@dataclasses.dataclass
-class History:
-    times: list = dataclasses.field(default_factory=list)
-    rounds: list = dataclasses.field(default_factory=list)
-    accuracy: list = dataclasses.field(default_factory=list)
-    deadlines: list = dataclasses.field(default_factory=list)
-    train_loss: list = dataclasses.field(default_factory=list)
-    # fleet runs only: reachable-device count per executed round
-    available: list = dataclasses.field(default_factory=list)
-    method: str = ""
-
-    def as_dict(self):
-        return dataclasses.asdict(self)
-
-
-def make_round_step(model: ModelAPI, *, local_iters: int, l2: float,
-                    bias_correct: bool, hetero: bool = False):
-    """One jitted federated round: client deltas -> aggregation -> update.
-
-    Shared by :func:`run_federated` and ``repro.fleet.engine`` (the fleet
-    engine uses it directly whenever the whole cohort fits in one chunk).
-    """
-
-    @functools.partial(jax.jit, static_argnames=())
-    def step(params, xb, yb, wb, mask, p, eta, wmasks):
-        deltas = batched_client_deltas(model.loss, params, xb, yb, wb, eta,
-                                       local_iters=local_iters, l2=l2)
-        ids = model.layer_ids(params)
-        if hetero:
-            # HeteroFL: per-entry overlap mean over participating clients.
-            part = mask[:, 0]  # all-or-nothing rows
-            def agg_leaf(d, wm):
-                w = part.reshape((-1,) + (1,) * (d.ndim - 1)) * wm
-                num = (w * d).sum(0)
-                den = jnp.maximum(w.sum(0), 1.0)
-                return num / den
-            agg = jax.tree.map(agg_leaf, deltas, wmasks)
-        else:
-            agg = aggregate_grads(deltas, ids, mask, p, bias_correct=bias_correct)
-        new_params = jax.tree.map(lambda w, d: w - d, params, agg)
-        return new_params
-
-    return step
-
-
-def evaluate(model: ModelAPI, params: PyTree, x: jnp.ndarray, y: jnp.ndarray,
-             batch: int = 512) -> float:
-    n = x.shape[0]
-    correct = 0
-    predict = jax.jit(model.predict)
-    for i in range(0, n, batch):
-        logits = predict(params, x[i:i + batch])
-        correct += int((jnp.argmax(logits, -1) == y[i:i + batch]).sum())
-    return correct / n
-
-
-def eval_metrics(model: ModelAPI, params: PyTree, test_x: jnp.ndarray,
-                 test_y: jnp.ndarray, *, loss_samples: int = 256
-                 ) -> tuple[float, float]:
-    """(accuracy over the full test set, mean loss over a fixed head)."""
-    acc = evaluate(model, params, test_x, test_y)
-    n = min(loss_samples, int(test_y.shape[0]))
-    loss = float(model.loss(params, test_x[:n], test_y[:n],
-                            jnp.full((n,), 1.0 / n, jnp.float32)))
-    return acc, loss
+PyTree = object
 
 
 def run_federated(model: ModelAPI, policy: Policy, cfg: AnalysisConfig,
-                  client_x: jnp.ndarray, client_y: jnp.ndarray,
-                  n_per_client: jnp.ndarray, test_x: jnp.ndarray,
-                  test_y: jnp.ndarray, *, key: jax.Array,
+                  client_x, client_y, n_per_client, test_x, test_y, *, key,
                   eta: np.ndarray | None = None, local_iters: int = 1,
                   l2: float = 0.0, s_max: int | None = None,
-                  eval_every: int = 1, verbose: bool = False) -> tuple[PyTree, History]:
+                  eval_every: int = 1, verbose: bool = False,
+                  backend="dense", chunk_size: int = 16,
+                  mesh=None) -> tuple[PyTree, History]:
     """Run up to R rounds, stopping when the simulated clock exceeds T_max."""
     eta = cfg.eta if eta is None else np.asarray(eta, np.float32)
-    key, k_init = jax.random.split(key)
-    params = model.init(k_init)
-
     if s_max is None:
         # largest batch any client can be assigned under the policy
-        probe = [policy.round(jax.random.PRNGKey(0), t) for t in (0, cfg.R - 1)]
-        s_max = int(max(float(jnp.max(pl.batch_sizes)) for pl in probe))
-        s_max = max(min(s_max, int(client_y.shape[1])), 2)
-
-    hetero = getattr(policy, "name", "") == "heterofl"
-    wmasks = None
-    if hetero:
-        if model.width_masks is None:
-            raise ValueError("model does not support HeteroFL width masks")
-        wmasks = model.width_masks(params, policy.ratios)
-
-    step_cache: dict[bool, Callable] = {}
-
-    hist = History(method=policy.name)
-    elapsed = 0.0
-    for t in range(cfg.R):
-        key, k_round, k_batch = jax.random.split(key, 3)
-        plan: RoundPlan = policy.round(k_round, t)
-        if elapsed + plan.elapsed > cfg.T_max * (1 + 1e-6):
-            break
-        xb, yb, wb = sample_client_batches(
-            k_batch, client_x, client_y, n_per_client, plan.batch_sizes, s_max)
-        bc = bool(plan.bias_correct)
-        if bc not in step_cache:
-            step_cache[bc] = make_round_step(
-                model, local_iters=local_iters, l2=l2, bias_correct=bc,
-                hetero=hetero)
-        params = step_cache[bc](params, xb, yb, wb, plan.mask, plan.p,
-                                jnp.float32(eta[t]), wmasks)
-        elapsed += plan.elapsed
-        if (t % eval_every == 0) or (t == cfg.R - 1):
-            acc, loss = eval_metrics(model, params, test_x, test_y)
-            hist.times.append(elapsed)
-            hist.rounds.append(t + 1)
-            hist.accuracy.append(acc)
-            hist.deadlines.append(float(plan.elapsed))
-            hist.train_loss.append(loss)
-            if verbose:
-                print(f"[{policy.name}] round {t+1:3d} time {elapsed:9.2f} "
-                      f"deadline {plan.elapsed:7.3f} acc {acc:.4f}")
-    return params, hist
+        s_max = max(min(probe_s_max(policy, cfg.R),
+                        int(client_y.shape[1])), 2)
+    runtime = RoundRuntime(model, policy, backend=backend,
+                           chunk_size=chunk_size, mesh=mesh,
+                           local_iters=local_iters, l2=l2)
+    source = StaticCohortSource(client_x, client_y, n_per_client)
+    return runtime.run(source, rounds=cfg.R, T_max=cfg.T_max, eta=eta,
+                       s_max=s_max, key=key, test_x=test_x, test_y=test_y,
+                       eval_every=eval_every, verbose=verbose,
+                       method=policy.name)

@@ -18,11 +18,12 @@ against realistic populations:
   ``power-of-choice`` by ``P_u``, ``stratified`` by tier) and
   ``cohort_view``, which re-derives the :class:`AnalysisConfig` the
   policies consume so ADEL/baselines see the sampled cohort's ``P``/``B``.
-* :mod:`repro.fleet.engine` — ``run_fleet``, the driver: wraps the round
-  step of :mod:`repro.fl.server` but chunks cohort execution over a
-  client-shard axis (vmap per chunk + software psum via
-  ``aggregate_grads_chunk``), so large fleets never materialize
-  ``(fleet, N, ...)`` arrays.
+* :mod:`repro.fleet.engine` — ``run_fleet``, a thin fleet front-end over
+  the unified :class:`repro.fl.runtime.RoundRuntime`: per-round
+  availability/cohort/view sampling feeds any :mod:`repro.fl.backends`
+  execution backend (``chunked`` by default — software psum via
+  ``aggregate_grads_chunk`` — or ``dense`` / ``shard_map``), so large
+  fleets never materialize ``(fleet, N, ...)`` arrays.
 * :mod:`repro.fleet.scenarios` — named scenario registry
   (fleet x availability x partition x policy) with a CLI::
 

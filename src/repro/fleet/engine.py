@@ -1,46 +1,46 @@
-"""``run_fleet``: the fleet-scale federated driver.
+"""``run_fleet``: the fleet-scale front-end over the unified round runtime.
 
-Wraps the per-round machinery of :mod:`repro.fl.server` but decouples the
-*population* (thousands of devices) from the *cohort* (the ``U`` clients a
-round plans for):
+``run_fleet`` decouples the *population* (thousands of devices) from the
+*cohort* (the ``U`` clients a round plans for) and is now a thin wrapper:
 
-1. the availability model decides who is reachable,
-2. a cohort sampler picks at most ``cohort_size`` devices,
-3. ``cohort_view`` re-derives the AnalysisConfig the policy sees,
-4. the round executes CHUNKED over a client-shard axis: client deltas are
-   computed ``chunk_size`` clients at a time (one vmap per chunk) and folded
-   into a running partial aggregate via
-   :func:`repro.core.aggregation.aggregate_grads_chunk` with *global*
-   contributor counts — a software psum, shaped exactly like the
-   ``aggregate_grads_local``/``shard_map`` path, so a 2,000-device fleet
-   with a 64-client cohort never materializes a ``(fleet, N, ...)`` or a
-   full ``(cohort, ...)`` delta pytree.
+1. it builds the Problem-2 planning config (:func:`reference_config`) and
+   the policy, probes ``s_max`` against a synthetic best-case device, and
+2. wraps availability + cohort sampling + per-round view derivation in a
+   :class:`FleetCohortSource`, then hands the loop to
+   :class:`repro.fl.runtime.RoundRuntime`.
 
-All round-execution arrays are padded to fixed shapes (``n_pad`` samples
-per client, ``cohort_size`` rounded up to a ``chunk_size`` multiple), so
-jit compiles the chunk step once regardless of availability fluctuations.
+Per round the source decides who is reachable (availability model), picks
+at most ``cohort_size`` devices (cohort sampler), re-derives the
+AnalysisConfig the policy sees (``cohort_view``), and stacks only the
+sampled cohort's shards at a fixed ``n_pad`` — never a ``(fleet, N, ...)``
+array. The runtime pads the cohort axis to the execution backend's fixed
+width and runs the round on any :mod:`repro.fl.backends` backend:
+``chunked`` (default here — sequential software psum via
+``aggregate_grads_chunk``), ``dense``, or ``shard_map`` (the chunk axis as
+a real client mesh axis). HeteroFL width masks flow through all three, so
+the same fleet scenario can compare layer-depth and width-scaling policies.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.aggregation import aggregate_grads_chunk
-from repro.core.baselines import Policy, RoundPlan, make_policy
+from repro.core.baselines import Policy, make_policy
 from repro.core.scheduler import solve
 from repro.core.types import AnalysisConfig
-from repro.fl.client import batched_client_deltas, sample_client_batches
 from repro.fl.partition import dirichlet_partition, iid_partition, stack_clients
-from repro.fl.server import History, ModelAPI, eval_metrics, make_round_step
+from repro.fl.runtime import (Cohort, History, ModelAPI, RoundRuntime,
+                              probe_s_max)
 from repro.fleet.availability import AvailabilityModel
 from repro.fleet.cohort import cohort_view, sample_cohort
 from repro.fleet.profiles import Fleet
 
-__all__ = ["FleetData", "partition_fleet", "reference_config", "run_fleet"]
+__all__ = ["FleetData", "FleetCohortSource", "partition_fleet",
+           "reference_config", "run_fleet"]
 
 
 @dataclasses.dataclass
@@ -89,27 +89,41 @@ def reference_config(fleet: Fleet, *, U: int, L: int, R: int, T_max: float,
                                B=fleet.B[pick].copy())
 
 
-def _make_chunk_step(model: ModelAPI, *, local_iters: int, l2: float,
-                     bias_correct: bool) -> Callable:
-    """Jitted per-chunk partial aggregate: deltas -> weighted layer sums."""
+class FleetCohortSource:
+    """Per-round availability draw -> cohort sample -> policy view -> the
+    sampled cohort's shards stacked at a fixed ``n_pad``."""
 
-    # same argument order as fl.server.make_round_step (mask, p, eta last
-    # block) — both land in the engine's step cache
-    @jax.jit
-    def chunk_partial(params, xb, yb, wb, mask_c, p, eta, counts):
-        deltas = batched_client_deltas(model.loss, params, xb, yb, wb, eta,
-                                       local_iters=local_iters, l2=l2)
-        ids = model.layer_ids(params)
-        return aggregate_grads_chunk(deltas, ids, mask_c, p, counts,
-                                     bias_correct=bias_correct)
+    def __init__(self, fleet: Fleet, availability: AvailabilityModel,
+                 data: FleetData, ref: AnalysisConfig, *, cohort_size: int,
+                 strategy: str = "uniform", seed: int = 0):
+        self.fleet = fleet
+        self.availability = availability
+        self.data = data
+        self.ref = ref
+        self.cohort_size = int(cohort_size)
+        self.strategy = strategy
+        self.rng = np.random.default_rng([2077, seed])
+        availability.reset()
 
-    return chunk_partial
+    def round_cohort(self, t: int) -> Optional[Cohort]:
+        avail = self.availability.step(t)
+        idx = sample_cohort(self.rng, avail, self.fleet, self.cohort_size,
+                            self.strategy)
+        if len(idx) == 0:
+            return None
+        view = cohort_view(self.ref, self.fleet, idx)
+        xs, ys, counts = stack_clients(self.data.x, self.data.y,
+                                       [self.data.parts[u] for u in idx],
+                                       n_pad=self.data.n_pad)
+        return Cohort(x=xs, y=ys, counts=counts, view=view,
+                      available=int(avail.sum()))
 
 
 def run_fleet(model: ModelAPI, fleet: Fleet, availability: AvailabilityModel,
               data: FleetData, *, method: str = "adel", rounds: int = 20,
               cohort_size: int = 32, cohort_strategy: str = "uniform",
-              chunk_size: int = 16, T_max: Optional[float] = None,
+              backend="chunked", chunk_size: int = 16, mesh=None,
+              T_max: Optional[float] = None,
               eta0: float = 2.0, eta_decay: float = 1.0,
               solver: str = "adam", solver_steps: int = 600,
               local_iters: int = 1, l2: float = 0.0,
@@ -119,7 +133,8 @@ def run_fleet(model: ModelAPI, fleet: Fleet, availability: AvailabilityModel,
 
     Returns ``(params, History)``; the History carries the same fields as
     :func:`repro.fl.server.run_federated` plus per-round reachable-device
-    counts, so ``benchmarks/report.py`` consumes it unchanged.
+    counts, so ``benchmarks/report.py`` consumes it unchanged. ``backend``
+    selects the execution backend (``"chunked" | "dense" | "shard_map"``).
     """
     if fleet.size != len(data.parts):
         raise ValueError(f"fleet size {fleet.size} != data shards "
@@ -139,10 +154,6 @@ def run_fleet(model: ModelAPI, fleet: Fleet, availability: AvailabilityModel,
         schedule = solve(ref, solver,
                          **({"steps": solver_steps} if solver == "adam" else {}))
     policy: Policy = make_policy(method, ref, schedule=schedule)
-    if getattr(policy, "name", "") == "heterofl":
-        raise NotImplementedError(
-            "run_fleet does not support HeteroFL width masks yet; use "
-            "fl.server.run_federated for the static-population variant")
 
     if s_max is None:
         # probe against a synthetic best-case device (fleet-max P, fleet-min
@@ -155,107 +166,23 @@ def run_fleet(model: ModelAPI, fleet: Fleet, availability: AvailabilityModel,
             ref, U=1, P=np.asarray([fleet.P.max()], np.float32),
             B=np.asarray([fleet.B.min()], np.float32),
             sigma2=np.asarray([float(np.mean(ref.sigma2))], np.float32))
-        probe = [policy.round(jax.random.PRNGKey(0), t, view=view_best)
-                 for t in (0, rounds - 1)]
-        s_max = int(max(float(jnp.max(pl.batch_sizes)) for pl in probe))
         # memory bound: batches are drawn with replacement, so allow up to
         # 4x the largest shard before clipping a (rare) extreme plan — every
         # client pays O(s_max) delta compute, and an unbounded best-case
         # bound would let one outlier device size the whole round's batch
-        s_max = min(s_max, 4 * data.n_pad)
+        s_max = min(probe_s_max(policy, rounds, view=view_best),
+                    4 * data.n_pad)
     s_max = max(s_max, 2)
 
-    n_pad = data.n_pad
-    L = model.L
-    chunk_size = min(chunk_size, cohort_size)   # never vmap dead padding
-    U_pad = -(-cohort_size // chunk_size) * chunk_size
-    eta = ref.eta
-
-    step_cache: dict[bool, Callable] = {}
-    apply_update = jax.jit(
-        lambda params, agg: jax.tree.map(lambda w, d: w - d, params, agg))
-
-    rng = np.random.default_rng([2077, seed])
-    key = jax.random.PRNGKey(seed)
-    key, k_init = jax.random.split(key)
-    params = model.init(k_init)
-    availability.reset()
-
-    test_x = jnp.asarray(data.x_test)
-    test_y = jnp.asarray(data.y_test)
-
-    hist = History(method=f"fleet-{policy.name}")
-    elapsed = 0.0
-    for t in range(rounds):
-        avail = availability.step(t)
-        idx = sample_cohort(rng, avail, fleet, cohort_size, cohort_strategy)
-        if len(idx) == 0:
-            continue  # nobody reachable: the round never starts
-        view = cohort_view(ref, fleet, idx)
-        key, k_round, k_batch = jax.random.split(key, 3)
-        plan: RoundPlan = policy.round(k_round, t, view=view)
-        if elapsed + plan.elapsed > T_max * (1 + 1e-6):
-            break
-
-        U_act = len(idx)
-        xs, ys, counts = stack_clients(data.x, data.y,
-                                       [data.parts[u] for u in idx],
-                                       n_pad=n_pad)
-        # pad the cohort axis to the fixed chunked width; padded rows carry
-        # an all-zero mask, so their coefficients — and contributions — are 0
-        mask = np.zeros((U_pad, L), np.float32)
-        mask[:U_act] = np.asarray(plan.mask, np.float32)
-        S = np.ones((U_pad,), np.int32)
-        S[:U_act] = np.asarray(plan.batch_sizes, np.int32)
-        if U_act < U_pad:
-            pad = U_pad - U_act
-            xs = np.concatenate(
-                [xs, np.zeros((pad,) + xs.shape[1:], xs.dtype)])
-            ys = np.concatenate([ys, np.zeros((pad,) + ys.shape[1:], ys.dtype)])
-            counts = np.concatenate([counts, np.ones((pad,), np.int32)])
-        counts_layer = jnp.asarray(mask.sum(0))          # (L,) global counts
-
-        xb, yb, wb = sample_client_batches(
-            k_batch, jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(counts),
-            jnp.asarray(S), s_max)
-
-        bc = bool(plan.bias_correct)
-        single_chunk = U_pad <= chunk_size
-        if bc not in step_cache:
-            step_cache[bc] = (
-                make_round_step(model, local_iters=local_iters, l2=l2,
-                                bias_correct=bc)
-                if single_chunk else
-                _make_chunk_step(model, local_iters=local_iters, l2=l2,
-                                 bias_correct=bc))
-        step = step_cache[bc]
-
-        mask_j = jnp.asarray(mask)
-        if single_chunk:
-            # whole cohort in one chunk: reuse the server's round step
-            params = step(params, xb, yb, wb, mask_j, plan.p,
-                          jnp.float32(eta[t]), None)
-        else:
-            agg = None
-            for c0 in range(0, U_pad, chunk_size):
-                sl = slice(c0, c0 + chunk_size)
-                part = step(params, xb[sl], yb[sl], wb[sl], mask_j[sl],
-                            plan.p, jnp.float32(eta[t]), counts_layer)
-                agg = part if agg is None else jax.tree.map(jnp.add, agg, part)
-            params = apply_update(params, agg)
-
-        elapsed += plan.elapsed
-        if (t % eval_every == 0) or (t == rounds - 1):
-            acc, loss = eval_metrics(model, params, test_x, test_y)
-            hist.times.append(elapsed)
-            hist.rounds.append(t + 1)
-            hist.accuracy.append(acc)
-            hist.deadlines.append(float(plan.elapsed))
-            hist.train_loss.append(loss)
-            hist.available.append(int(avail.sum()))
-            if verbose:
-                print(f"[fleet-{policy.name}] round {t+1:3d} "
-                      f"avail {int(avail.sum()):4d}/{fleet.size} "
-                      f"cohort {U_act:3d} time {elapsed:9.2f} "
-                      f"deadline {plan.elapsed:7.3f} acc {acc:.4f}")
-    return params, hist
+    runtime = RoundRuntime(model, policy, backend=backend,
+                           chunk_size=min(chunk_size, cohort_size),
+                           mesh=mesh, local_iters=local_iters, l2=l2)
+    source = FleetCohortSource(fleet, availability, data, ref,
+                               cohort_size=cohort_size,
+                               strategy=cohort_strategy, seed=seed)
+    return runtime.run(source, rounds=rounds, T_max=T_max, eta=ref.eta,
+                       s_max=s_max, key=jax.random.PRNGKey(seed),
+                       test_x=jnp.asarray(data.x_test),
+                       test_y=jnp.asarray(data.y_test),
+                       eval_every=eval_every, verbose=verbose,
+                       method=f"fleet-{policy.name}")

@@ -71,6 +71,11 @@ SCENARIOS = {s.name: s for s in [
     _scn("uniform-bernoulli-salf", "uniform", 500, "bernoulli",
          akw=(("rate", 0.7),), method="salf",
          note="SALF baseline under iid 70% availability"),
+    _scn("bimodal-edge-heterofl", "bimodal-edge", 500, "markov",
+         akw=(("p_off_to_on", 0.35), ("p_on_to_off", 0.12)),
+         method="heterofl", strategy="stratified",
+         note="HeteroFL width scaling on the same sticky-outage edge fleet "
+              "as bimodal-edge-markov: slow boxes train narrow submodels"),
     _scn("longtail-mobile-power-of-choice", "longtail-mobile", 600, "diurnal",
          akw=(("mean", 0.6), ("amplitude", 0.35), ("period", 12.0)),
          strategy="power-of-choice",
@@ -87,16 +92,20 @@ def get_scenario(name: str) -> Scenario:
 
 def run_scenario(scn: Scenario, *, rounds: Optional[int] = None,
                  fleet_size: Optional[int] = None,
-                 cohort_size: Optional[int] = None, seed: int = 0,
+                 cohort_size: Optional[int] = None,
+                 backend: Optional[str] = None, seed: int = 0,
                  solver_steps: int = 600, eval_every: int = 1,
                  verbose: bool = True) -> dict:
     """Run one scenario; returns the History dict (+ fleet/availability
-    descriptions) consumable by ``benchmarks/report.py``."""
+    descriptions) consumable by ``benchmarks/report.py``. ``backend``
+    overrides the FleetConfig's execution backend (dense/chunked/shard_map)."""
     fc = scn.fleet
     if fleet_size is not None:
         fc = dataclasses.replace(fc, size=fleet_size)
     if cohort_size is not None:
         fc = dataclasses.replace(fc, cohort_size=cohort_size)
+    if backend is not None:
+        fc = dataclasses.replace(fc, backend=backend)
     rounds = scn.rounds if rounds is None else rounds
 
     fleet = fleet_from_config(fc)
@@ -113,14 +122,16 @@ def run_scenario(scn: Scenario, *, rounds: Optional[int] = None,
     _, hist = run_fleet(
         model, fleet, avail, data, method=scn.method, rounds=rounds,
         cohort_size=fc.cohort_size, cohort_strategy=fc.cohort_strategy,
-        chunk_size=fc.chunk_size, eta0=scn.eta0, solver_steps=solver_steps,
-        eval_every=eval_every, seed=seed, verbose=verbose)
+        backend=fc.backend, chunk_size=fc.chunk_size, eta0=scn.eta0,
+        solver_steps=solver_steps, eval_every=eval_every, seed=seed,
+        verbose=verbose)
     out = hist.as_dict()
     out["wall_s"] = round(time.time() - t0, 2)
     out["scenario"] = scn.name
     out["fleet"] = fleet.describe()
     out["availability"] = avail.describe()
     out["cohort"] = {"size": fc.cohort_size, "strategy": fc.cohort_strategy}
+    out["backend"] = fc.backend
     return out
 
 
@@ -147,6 +158,9 @@ def main(argv=None) -> None:
     ap.add_argument("--rounds", type=int, default=None)
     ap.add_argument("--fleet-size", type=int, default=None)
     ap.add_argument("--cohort", type=int, default=None)
+    ap.add_argument("--backend", default=None,
+                    choices=["dense", "chunked", "shard_map"],
+                    help="execution backend override (repro.fl.backends)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--solver-steps", type=int, default=600)
     ap.add_argument("--save", action="store_true",
@@ -173,8 +187,8 @@ def main(argv=None) -> None:
     except KeyError as e:
         ap.error(str(e.args[0]))
     res = run_scenario(scn, rounds=args.rounds, fleet_size=args.fleet_size,
-                       cohort_size=args.cohort, seed=args.seed,
-                       solver_steps=args.solver_steps,
+                       cohort_size=args.cohort, backend=args.backend,
+                       seed=args.seed, solver_steps=args.solver_steps,
                        verbose=not args.quiet)
     acc = res["accuracy"][-1] if res["accuracy"] else float("nan")
     rounds_done = res["rounds"][-1] if res["rounds"] else 0

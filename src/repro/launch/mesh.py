@@ -7,8 +7,10 @@ BEFORE importing jax.
 from __future__ import annotations
 
 import jax
+import numpy as np
 
-__all__ = ["make_production_mesh", "batch_axes", "mesh_chips"]
+__all__ = ["make_production_mesh", "make_client_mesh", "batch_axes",
+           "mesh_chips", "batch_shards"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -19,10 +21,33 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_client_mesh(n_devices: int | None = None):
+    """1-D mesh over the available devices with the axis named ``data`` so
+    :func:`batch_axes` treats it exactly like the production data axis.
+
+    This is the mesh ``repro.fl.backends.ShardMapBackend`` uses by default:
+    the federated client axis becomes a real mesh axis. On a CPU host, set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (before importing
+    jax) to get N shards.
+    """
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else min(int(n_devices), len(devs))
+    return jax.sharding.Mesh(np.asarray(devs[:n]), ("data",))
+
+
 def batch_axes(mesh) -> tuple:
     """The axes the (client/batch) dimension shards over."""
     names = mesh.axis_names
     return ("pod", "data") if "pod" in names else ("data",)
+
+
+def batch_shards(mesh) -> int:
+    """Number of shards the client/batch dimension splits into."""
+    shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = 1
+    for ax in batch_axes(mesh):
+        n *= shape[ax]
+    return n
 
 
 def mesh_chips(mesh) -> int:

@@ -237,6 +237,46 @@ def test_run_fleet_baseline_and_reduced_cohort(fleet_setup):
     assert hist.method == "fleet-salf"
 
 
+def test_run_fleet_backend_equivalence(fleet_setup):
+    """The same fleet run under dense vs chunked execution: identical clock,
+    near-identical learning trajectory (float summation order only)."""
+    fleet, data = fleet_setup
+    model = make_mlp()
+    hists = {}
+    for backend in ("dense", "chunked"):
+        avail = make_availability("bernoulli", 200, seed=2, rate=0.5)
+        _, hists[backend] = run_fleet(model, fleet, avail, data,
+                                      method="salf", rounds=4,
+                                      cohort_size=12, chunk_size=5,
+                                      backend=backend, seed=0)
+    a, b = hists["dense"], hists["chunked"]
+    assert a.rounds == b.rounds and a.available == b.available
+    np.testing.assert_allclose(a.times, b.times, rtol=1e-6)
+    np.testing.assert_allclose(a.accuracy, b.accuracy, atol=0.015)
+
+
+def test_run_fleet_heterofl_width_masks(fleet_setup):
+    """HeteroFL now runs at fleet scale: per-cohort width ratios flow
+    through the chunked backend's width-overlap mean."""
+    fleet, data = fleet_setup
+    model = make_mlp()
+    avail = make_availability("markov", 200, seed=0, p_off_to_on=0.4,
+                              p_on_to_off=0.1)
+    _, hist = run_fleet(model, fleet, avail, data, method="heterofl",
+                        rounds=6, cohort_size=16, chunk_size=8, seed=0,
+                        eta0=1.0)
+    assert hist.method == "fleet-heterofl"
+    assert len(hist.accuracy) >= 3
+    assert hist.train_loss[-1] < hist.train_loss[0], hist.train_loss
+
+
+def test_heterofl_scenario_registered():
+    from repro.fleet.scenarios import SCENARIOS
+    scn = SCENARIOS["bimodal-edge-heterofl"]
+    assert scn.method == "heterofl"
+    assert scn.fleet.preset == "bimodal-edge"
+
+
 def test_reference_config_spans_fleet():
     fleet = make_fleet("longtail-mobile", 500, seed=0)
     ref = reference_config(fleet, U=32, L=4, R=10, T_max=20.0)
