@@ -11,7 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.baselines import make_policy
-from repro.core.scheduler import constant_schedule, solve
+from repro.core.scheduler import solve
 from repro.core.types import AnalysisConfig
 from repro.data.synthetic import make_image_dataset
 from repro.fl.partition import dirichlet_partition, iid_partition, stack_clients
@@ -21,9 +21,17 @@ OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                        "results")
 
 
+def out_dir() -> str:
+    """Where suite JSONs are written: ``REPRO_BENCH_OUT`` when set (the
+    regression gate redirects fresh results away from the committed
+    baselines it compares against), else the committed results dir."""
+    return os.environ.get("REPRO_BENCH_OUT") or OUT_DIR
+
+
 def save_result(name: str, payload: dict) -> str:
-    os.makedirs(OUT_DIR, exist_ok=True)
-    path = os.path.join(OUT_DIR, f"{name}.json")
+    d = out_dir()
+    os.makedirs(d, exist_ok=True)
+    path = os.path.join(d, f"{name}.json")
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
     return path
@@ -38,7 +46,7 @@ def cached_result(name: str) -> dict | None:
     """
     if os.environ.get("REPRO_BENCH_FORCE"):
         return None
-    path = os.path.join(OUT_DIR, f"{name}.json")
+    path = os.path.join(out_dir(), f"{name}.json")
     if not os.path.exists(path):
         return None
     with open(path) as f:

@@ -1,0 +1,72 @@
+"""Replan sweep — static offline schedule vs online re-planning triggers.
+
+Runs the ``longtail-mobile-diurnal-replan`` scenario (one dominant time
+zone: the reachable count swings to ~0 and night rounds skip entirely)
+under the same ``T_max`` with the three ``repro.core.replan`` triggers:
+
+* ``never``   — the static offline Problem-2 schedule (skipped rounds
+                strand their deadline budget),
+* ``every-k`` — periodic remaining-horizon re-solves,
+* ``drift``   — re-solves when the reachable count moves past the
+                threshold (the scenario's own default).
+
+plus ``bimodal-edge-markov-replan`` (sticky Markov churn, every-k) in the
+full pass. Emits ``experiments/results/replan_sweep.json``, rendered by
+``benchmarks/report.py``; the CI regression gate checks the recorded
+per-trigger final accuracies and wall-clocks stay put.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import cached_result, save_result
+from repro.core.replan import TRIGGERS
+
+
+def _run_scenario_triggers(name: str, *, fleet_size: int, rounds: int,
+                           n_train: int, solver_steps: int) -> dict:
+    from repro.fleet.scenarios import get_scenario, run_scenario
+
+    scn = get_scenario(name)
+    scn = dataclasses.replace(scn, n_train=n_train, n_test=400)
+    row = {}
+    for trigger in TRIGGERS:
+        hist = run_scenario(scn, rounds=rounds, fleet_size=fleet_size,
+                            replan=trigger, solver_steps=solver_steps,
+                            eval_every=2, verbose=False)
+        acc = hist["accuracy"][-1] if hist["accuracy"] else 0.0
+        used = hist["times"][-1] if hist["times"] else 0.0
+        print(f"  [{trigger:8s}] final_acc={acc:.4f} "
+              f"budget_used={used:.1f} replans={len(hist['replans'])} "
+              f"wall={hist['wall_s']:.1f}s")
+        row[trigger] = hist
+    return row
+
+
+def run(quick: bool = False) -> dict:
+    cached = cached_result("replan_sweep")
+    if cached is not None:
+        return cached
+
+    # rounds stays 14 even in quick mode: the scenario's diurnal period is
+    # 14, and shortening the horizon parks the trough at the end of the run
+    # where no recovery rounds remain to reclaim the stranded budget
+    settings = dict(fleet_size=200 if quick else 300,
+                    rounds=14,
+                    n_train=1200 if quick else 2500,
+                    solver_steps=400 if quick else 600)
+    names = ["longtail-mobile-diurnal-replan"]
+    if not quick:
+        names.append("bimodal-edge-markov-replan")
+
+    result = {}
+    for name in names:
+        print(f"[replan_sweep] {name}: fleet={settings['fleet_size']} "
+              f"rounds={settings['rounds']}")
+        result[name] = _run_scenario_triggers(name, **settings)
+    save_result("replan_sweep", result)
+    return result
+
+
+if __name__ == "__main__":
+    run()

@@ -11,7 +11,6 @@ import glob
 import json
 import os
 
-from repro.configs import ARCHS
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "experiments")
 
@@ -99,6 +98,41 @@ def section_backend_sweep() -> str:
     return "\n".join(out)
 
 
+def section_replan_sweep() -> str:
+    """Static offline schedule vs online re-planning triggers
+    (repro.core.replan) under the same T_max."""
+    fn = os.path.join(RESULTS, "results", "replan_sweep.json")
+    if not os.path.exists(fn):
+        return ""
+    with open(fn) as f:
+        res = json.load(f)
+    out = ["### replan_sweep (final accuracy under the same T_max)\n",
+           "| scenario | never | every-k | drift | re-solves (e-k/drift) | "
+           "budget used (never) |",
+           "|---|---|---|---|---|---|"]
+    for scn, row in sorted(res.items()):
+        if not isinstance(row, dict):
+            continue
+        cells, resolves = [], []
+        for trig in ("never", "every-k", "drift"):
+            d = row.get(trig)
+            if isinstance(d, dict) and d.get("accuracy"):
+                cells.append(f"{d['accuracy'][-1]:.3f}")
+                if trig != "never":
+                    resolves.append(str(len(d.get("replans", []))))
+            else:
+                cells.append("—")
+                if trig != "never":
+                    resolves.append("—")
+        never = row.get("never", {})
+        used = (f"{never['times'][-1]:.1f}"
+                if isinstance(never, dict) and never.get("times") else "—")
+        out.append(f"| {scn} | " + " | ".join(cells)
+                   + f" | {'/'.join(resolves)} | {used} |")
+    out.append("")
+    return "\n".join(out)
+
+
 def section_repro() -> str:
     out = []
     for name in ("fig2_mnist", "fig3_cifar", "fig4_robustness",
@@ -129,6 +163,9 @@ def section_repro() -> str:
     sweep = section_backend_sweep()
     if sweep:
         out.append(sweep)
+    replan = section_replan_sweep()
+    if replan:
+        out.append(replan)
     return "\n".join(out)
 
 

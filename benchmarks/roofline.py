@@ -16,7 +16,7 @@ import glob
 import json
 import os
 
-from repro.configs import ARCHS, INPUT_SHAPES
+from repro.configs import ARCHS
 
 DRYRUN_DIRS = ["experiments/dryrun", "experiments/dryrun_multipod"]
 
@@ -26,7 +26,6 @@ def model_flops(arch: str, shape_name: str, meta: dict, chips: int) -> float:
     cfg = ARCHS[arch.removesuffix("-swa4096")] if arch not in ARCHS else ARCHS[arch]
     n = cfg.active_param_count() - (cfg.padded_vocab * cfg.d_model *
                                     (1 if cfg.tie_embeddings else 2))
-    shape = INPUT_SHAPES[shape_name]
     if meta.get("step") == "train_step":
         tokens = meta["U"] * meta["client_batch"] * meta["seq"]
         return 6.0 * n * tokens

@@ -1,26 +1,43 @@
 """Benchmark orchestrator — one entry per paper table/figure + roofline.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig2_mnist]
+    PYTHONPATH=src python -m benchmarks.run --quick \
+        --only fleet_smoke,backend_sweep,replan_sweep \
+        --check-against experiments/results
 
 Prints a ``name,wall_s,derived`` CSV summary at the end.
+
+``--check-against DIR`` is the CI benchmark-regression gate: every selected
+suite is recomputed (the results cache is bypassed) and compared against
+the committed baseline JSON in ``DIR``. Wall-clock fields may grow by at
+most ``--time-tolerance`` (default 2.5x — shared runners are slow and
+noisy), accuracy fields must stay within ``--acc-tolerance`` (default
+0.035 absolute — runs are seeded, so only platform float drift remains);
+any regression fails the run with a non-zero exit code. Metrics whose
+shape changed (e.g. a quick pass checked against a full baseline) are
+reported as skipped, not failed.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
+SUITE_NAMES = ("fig2_mnist", "fig3_cifar", "fig4_robustness",
+               "table2_budgets", "roofline", "fleet_smoke",
+               "backend_sweep", "replan_sweep")
 
-def main(argv=None) -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--quick", action="store_true",
-                    help="reduced rounds/data for a fast pass")
-    ap.add_argument("--only", default=None)
-    args = ap.parse_args(argv)
+# metric-field classification for the regression gate
+_TIME_KEYS = ("wall_s", "wall_per_round_s")
+_ACC_KEYS = ("final_acc",)
 
+
+def _suites() -> dict:
     from benchmarks import (backend_sweep, fig2_mnist, fig3_cifar,
-                            fig4_robustness, fleet_smoke, roofline,
-                            table2_budgets)
-    suites = {
+                            fig4_robustness, fleet_smoke, replan_sweep,
+                            roofline, table2_budgets)
+    return {
         "fig2_mnist": fig2_mnist.run,
         "fig3_cifar": fig3_cifar.run,
         "fig4_robustness": fig4_robustness.run,
@@ -28,22 +45,155 @@ def main(argv=None) -> None:
         "roofline": roofline.run,
         "fleet_smoke": fleet_smoke.run,
         "backend_sweep": backend_sweep.run,
+        "replan_sweep": replan_sweep.run,
     }
-    if args.only:
-        suites = {args.only: suites[args.only]}
 
-    rows = []
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced rounds/data for a fast pass")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite subset "
+                         f"(known: {', '.join(SUITE_NAMES)})")
+    ap.add_argument("--check-against", default=None, metavar="DIR",
+                    help="benchmark-regression gate: recompute the selected "
+                         "suites and fail on regression vs the baseline "
+                         "JSONs in DIR")
+    ap.add_argument("--time-tolerance", type=float, default=2.5,
+                    help="max fresh/baseline wall-clock ratio (gate)")
+    ap.add_argument("--time-slack", type=float, default=0.5,
+                    help="absolute wall-clock slack in seconds added on "
+                         "top of the ratio, so sub-second baselines don't "
+                         "flake on scheduler hiccups (gate)")
+    ap.add_argument("--acc-tolerance", type=float, default=0.035,
+                    help="max |fresh - baseline| accuracy drift (gate)")
+    args = ap.parse_args(argv)
+
+    if args.check_against:
+        # the gate must measure fresh numbers, never replay the cache —
+        # and must never overwrite the baselines it compares against
+        # (otherwise a failing local run replaces the baseline and the
+        # retry "passes" against its own regression)
+        os.environ["REPRO_BENCH_FORCE"] = "1"
+        fresh_dir = os.path.join(args.check_against, "fresh")
+        os.environ["REPRO_BENCH_OUT"] = fresh_dir
+        print(f"[gate] fresh results -> {fresh_dir} "
+              f"(baselines in {args.check_against} untouched)")
+
+    suites = _suites()
+    assert set(suites) == set(SUITE_NAMES), \
+        "SUITE_NAMES out of sync with _suites()"
+    if args.only:
+        picked = [n.strip() for n in args.only.split(",") if n.strip()]
+        unknown = [n for n in picked if n not in suites]
+        if unknown:
+            ap.error(f"unknown suite(s) {unknown}; "
+                     f"known: {', '.join(SUITE_NAMES)}")
+        suites = {name: suites[name] for name in picked}
+
+    rows, violations, skipped = [], [], []
     for name, fn in suites.items():
         print(f"\n===== {name} =====")
+        baseline = None
+        if args.check_against:
+            baseline = _load_baseline(args.check_against, name)
+            if baseline is None:
+                skipped.append(f"{name}: no baseline in "
+                               f"{args.check_against} (suite not gated)")
         t0 = time.time()
         result = fn(quick=args.quick)
         wall = time.time() - t0
         derived = _derive(name, result)
         rows.append((name, wall, derived))
+        if baseline is not None:
+            v, s = check_result(name, result, baseline,
+                                time_tol=args.time_tolerance,
+                                time_slack=args.time_slack,
+                                acc_tol=args.acc_tolerance)
+            violations += v
+            skipped += s
 
     print("\nname,wall_s,derived")
     for name, wall, derived in rows:
         print(f"{name},{wall:.1f},{derived}")
+
+    if args.check_against:
+        _gate_report(violations, skipped)
+
+
+def _load_baseline(dirname: str, name: str) -> dict | None:
+    path = os.path.join(dirname, f"{name}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def _gate_report(violations: list, skipped: list) -> None:
+    print("\n===== benchmark-regression gate =====")
+    for s in skipped:
+        print(f"  [skip] {s}")
+    if violations:
+        for v in violations:
+            print(f"  [FAIL] {v}")
+        raise SystemExit(
+            f"benchmark-regression gate: {len(violations)} regression(s)")
+    print("  gate PASSED (no regressions vs baseline)")
+
+
+def _iter_pairs(base, fresh, path=()):
+    """Yield (path, baseline_value, fresh_value|None) for every baseline
+    leaf; fresh_value is None when the fresh result lacks the path."""
+    if isinstance(base, dict):
+        for k, v in base.items():
+            sub = fresh.get(k) if isinstance(fresh, dict) else None
+            yield from _iter_pairs(v, sub, path + (str(k),))
+    else:
+        yield path, base, fresh
+
+
+def check_result(name: str, fresh: dict, baseline: dict, *,
+                 time_tol: float, acc_tol: float,
+                 time_slack: float = 0.5) -> tuple[list, list]:
+    """Compare one suite's fresh result against its committed baseline.
+
+    Returns ``(violations, skipped)`` message lists. Wall-clock leaves may
+    regress by at most ``time_tol`` x plus ``time_slack`` seconds absolute
+    (getting faster is never flagged, and a millisecond-scale baseline
+    can't flake the gate on one scheduler hiccup); accuracy leaves must
+    stay within ``acc_tol`` absolute. ``accuracy`` trajectory lists are
+    compared by final value, and only when the baseline and fresh
+    trajectories have the same length (a --quick run checked against a
+    full baseline legitimately differs in shape).
+    """
+    viol, skip = [], []
+    for path, bval, fval in _iter_pairs(baseline, fresh):
+        key = path[-1]
+        where = f"{name}:{'/'.join(path)}"
+        if key in _TIME_KEYS and isinstance(bval, (int, float)):
+            if not isinstance(fval, (int, float)):
+                skip.append(f"{where}: missing in fresh result")
+            elif bval > 0 and fval > bval * time_tol + time_slack:
+                viol.append(f"{where}: {fval:.3f}s vs baseline "
+                            f"{bval:.3f}s (> {time_tol:.1f}x + "
+                            f"{time_slack:.1f}s)")
+        elif key in _ACC_KEYS and isinstance(bval, (int, float)):
+            if not isinstance(fval, (int, float)):
+                skip.append(f"{where}: missing in fresh result")
+            elif abs(fval - bval) > acc_tol:
+                viol.append(f"{where}: {fval:.4f} vs baseline {bval:.4f} "
+                            f"(|diff| > {acc_tol})")
+        elif key == "accuracy" and isinstance(bval, list) and bval:
+            if not (isinstance(fval, list) and fval):
+                skip.append(f"{where}: missing in fresh result")
+            elif len(fval) != len(bval):
+                skip.append(f"{where}: shape {len(fval)} vs baseline "
+                            f"{len(bval)} (quick/full mismatch?)")
+            elif abs(fval[-1] - bval[-1]) > acc_tol:
+                viol.append(f"{where}[-1]: {fval[-1]:.4f} vs baseline "
+                            f"{bval[-1]:.4f} (|diff| > {acc_tol})")
+    return viol, skip
 
 
 def _derive(name: str, result: dict) -> str:
@@ -62,6 +212,14 @@ def _derive(name: str, result: dict) -> str:
                                  if b in row)
                 pieces.append(f"{setting.removeprefix('cohort_')}:{walls}s")
             return "dense/chunked/shard " + " ".join(pieces)
+        if name == "replan_sweep":
+            pieces = []
+            for scn, row in result.items():
+                accs = "/".join(
+                    f"{row[t]['accuracy'][-1]:.3f}"
+                    for t in ("never", "every-k", "drift") if t in row)
+                pieces.append(f"{scn.split('-')[0]}:{accs}")
+            return "never/every-k/drift " + " ".join(pieces)
         if name == "table2_budgets":
             accs = []
             for k, v in result.items():

@@ -11,8 +11,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+from repro.core.replan import ReplanConfig
+
 __all__ = ["ArchConfig", "FleetConfig", "InputShape", "INPUT_SHAPES",
-           "pad_vocab"]
+           "ReplanConfig", "pad_vocab"]
 
 
 def pad_vocab(v: int, multiple: int = 512) -> int:
@@ -226,6 +228,10 @@ class FleetConfig:
     cohort_strategy: str = "uniform"   # uniform | power-of-choice | stratified
     backend: str = "chunked"       # fl.backends: dense | chunked | shard_map
     chunk_size: int = 16           # client-shard axis chunk (chunked backend)
+    # online re-planning block (repro.core.replan): trigger "never" keeps
+    # the static offline schedule; "every-k" / "drift" re-solve the
+    # remaining-horizon Problem 2 against the reachable population
+    replan: ReplanConfig = ReplanConfig()
     seed: int = 0
 
     def availability_dict(self) -> dict:

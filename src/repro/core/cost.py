@@ -25,23 +25,39 @@ __all__ = ["b_term", "c_term", "p1_round", "theorem1_bound", "objective_and_pena
 _EPS = 1e-6
 
 
+def _u_vec(cfg: AnalysisConfig) -> jnp.ndarray:
+    """Per-round contributor count, shape (R,): ``U_round`` when the config
+    carries an availability forecast, else the static ``U``."""
+    if cfg.U_round is None:
+        return jnp.full((cfg.R,), float(cfg.U))
+    return jnp.asarray(cfg.U_round)
+
+
 def b_term(T: jnp.ndarray, m: jnp.ndarray, cfg: AnalysisConfig) -> jnp.ndarray:
-    """Stochastic-gradient variance term B_t. T: (R,) -> (R,)."""
+    """Stochastic-gradient variance term B_t. T: (R,) -> (R,).
+
+    With a ``U_round`` forecast, round t averages ~U_round[t] clients drawn
+    from the U-sized representative spread: (1/U_t^2) sum over the round's
+    cohort ~= sum over the representative spread / (U_t * U).
+    """
     P = jnp.asarray(cfg.P)          # (U,)
     B = jnp.asarray(cfg.B)          # (U,)
     s2 = jnp.asarray(cfg.sigma2)    # (U,)
     frac = (T[:, None] - B[None, :]) / jnp.maximum(T[:, None], _EPS)   # (R, U)
     denom = m * P[None, :] * frac - 1.0                                 # (R, U)
     denom = jnp.maximum(denom, _EPS)  # feasibility enforced by the solver's penalty
-    return (s2[None, :] / denom).sum(-1) / (cfg.U ** 2) + 6.0 * cfg.rho_s * cfg.het_gap
+    u = _u_vec(cfg)                                                     # (R,)
+    return (s2[None, :] / denom).sum(-1) / (u * cfg.U) \
+        + 6.0 * cfg.rho_s * cfg.het_gap
 
 
 def _log_qU(T: jnp.ndarray, m: jnp.ndarray, cfg: AnalysisConfig) -> jnp.ndarray:
-    """U * log Q(L+1-l, T_t/m) for l = 1..L; shape (R, L) (layer l at index l-1)."""
+    """U_t * log Q(L+1-l, T_t/m) for l = 1..L; shape (R, L) (layer l at
+    index l-1). U_t is per-round under a ``U_round`` forecast."""
     x = T / jnp.maximum(m, _EPS)                     # (R,)
     logq = log_q_gamma_all(cfg.L, x)                 # (R, L); [..., s-1] = log Q(s, x)
     logq = jnp.flip(logq, axis=-1)                   # layer l -> Q(L+1-l, x)
-    return cfg.U * logq
+    return _u_vec(cfg)[:, None] * logq
 
 
 def c_term(T: jnp.ndarray, m: jnp.ndarray, cfg: AnalysisConfig) -> jnp.ndarray:
@@ -49,7 +65,8 @@ def c_term(T: jnp.ndarray, m: jnp.ndarray, cfg: AnalysisConfig) -> jnp.ndarray:
     qU = jnp.exp(_log_qU(T, m, cfg))                 # (R, L)
     denom = jnp.maximum(1.0 - 5.0 * qU, _EPS)        # valid iff p_t^1 < 0.2 (solver constraint)
     ratio = (1.0 + qU) / denom
-    return cfg.G2 * (4.0 * cfg.U / (cfg.U - 1.0)) * ratio.sum(-1)
+    u = _u_vec(cfg)                                  # (R,)
+    return cfg.G2 * (4.0 * u / (u - 1.0)) * ratio.sum(-1)
 
 
 def p1_round(T: jnp.ndarray, m: jnp.ndarray, cfg: AnalysisConfig) -> jnp.ndarray:

@@ -25,7 +25,7 @@ from .gamma import q_inv
 from .types import AnalysisConfig, Schedule
 
 __all__ = ["solve_adam", "solve_trust_region", "solve", "solve_rounds",
-           "constant_schedule"]
+           "constant_schedule", "invert_schedule"]
 
 
 # ---------------------------------------------------------------------------
@@ -38,13 +38,31 @@ __all__ = ["solve_adam", "solve_trust_region", "solve", "solve_rounds",
 
 def _x_min(cfg: AnalysisConfig, p1_cap: float = 0.2,
            margin: float = 0.9) -> float:
-    return q_inv(cfg.L, (margin * p1_cap) ** (1.0 / cfg.U))
+    # Lemma-3 validity floor x >= q_inv(L, cap^(1/U)). Under a per-round
+    # availability forecast (cfg.U_round) the SMALLEST expected cohort
+    # binds: fewer contributors need deeper per-client completion to keep
+    # the all-miss probability Q(L, x)^U below the cap, so that round's
+    # floor is the largest — applying it to every round keeps the whole
+    # nonincreasing-by-construction schedule feasible.
+    U_eff = cfg.U if cfg.U_round is None else float(np.min(cfg.U_round))
+    return q_inv(cfg.L, (margin * p1_cap) ** (1.0 / U_eff))
+
+
+def _m_cap(cfg: AnalysisConfig, x_min: float, m_max: float | None) -> float:
+    """Upper bound for m: the structural floor-fits-budget cap, optionally
+    tightened by an executable-batch bound (``m_max`` — e.g. the runtime's
+    probed ``s_max`` divided by the fastest plannable rate, so a mid-run
+    re-solve never plans batches the executor would silently clip)."""
+    cap = cfg.T_max / (cfg.R * max(x_min, 1e-9)) if x_min > 0 else np.inf
+    if m_max is not None:
+        cap = min(cap, float(m_max))
+    return cap
 
 
 def _theta_to_Tm(theta: jnp.ndarray, cfg: AnalysisConfig, m_min: float = 1.0,
-                 x_min: float = 0.0):
+                 x_min: float = 0.0, m_max: float | None = None):
     # m in (m_min, m_cap]: sigmoid-bounded so R * m * x_min <= T_max
-    m_cap = cfg.T_max / (cfg.R * max(x_min, 1e-9)) if x_min > 0 else np.inf
+    m_cap = _m_cap(cfg, x_min, m_max)
     if np.isfinite(m_cap) and m_cap > m_min:
         m = m_min + (m_cap - m_min) * jax.nn.sigmoid(theta[cfg.R])
     else:  # budget too tight for the cap at m_min: pin m (degenerate corner)
@@ -60,16 +78,26 @@ def _theta_to_Tm(theta: jnp.ndarray, cfg: AnalysisConfig, m_min: float = 1.0,
     return T, m
 
 
-def _init_theta(cfg: AnalysisConfig, m0: float, m_min: float = 1.0,
-                x_min: float = 0.0) -> jnp.ndarray:
-    # start from the naive uniform allocation T_t = T_max / R and m = m0
-    theta_T = jnp.full((cfg.R,), np.log(np.expm1(1.0)), jnp.float32)
-    m_cap = cfg.T_max / (cfg.R * max(x_min, 1e-9)) if x_min > 0 else np.inf
+def _invert_m(m: float, m_min: float, m_cap: float) -> tuple[np.ndarray, float]:
+    """theta_m reproducing ``m`` under the sigmoid bound of
+    :func:`_theta_to_Tm`, plus the m the parameterization will actually
+    realize (``m`` clipped into ``(m_min, m_cap]``; pinned at ``m_min``
+    in the degenerate budget-too-tight corner)."""
     if np.isfinite(m_cap) and m_cap > m_min:
-        frac = np.clip((m0 - m_min) / (m_cap - m_min), 1e-4, 1 - 1e-4)
+        frac = np.clip((m - m_min) / (m_cap - m_min), 1e-4, 1 - 1e-4)
         theta_m = np.asarray([np.log(frac / (1 - frac))], np.float32)
+        m_eff = m_min + (m_cap - m_min) * float(frac)
     else:
         theta_m = np.zeros((1,), np.float32)
+        m_eff = m_min
+    return theta_m, m_eff
+
+
+def _init_theta(cfg: AnalysisConfig, m0: float, m_min: float = 1.0,
+                x_min: float = 0.0, m_max: float | None = None) -> jnp.ndarray:
+    # start from the naive uniform allocation T_t = T_max / R and m = m0
+    theta_T = jnp.full((cfg.R,), np.log(np.expm1(1.0)), jnp.float32)
+    theta_m, _ = _invert_m(m0, m_min, _m_cap(cfg, x_min, m_max))
     return jnp.concatenate([theta_T, jnp.asarray(theta_m)])
 
 
@@ -85,16 +113,46 @@ def _default_m_min(cfg: AnalysisConfig) -> float:
     return 2.0 / float(cfg.P.min())
 
 
+def invert_schedule(cfg: AnalysisConfig, T, m: float, *,
+                    m_min: float | None = None,
+                    m_max: float | None = None) -> jnp.ndarray:
+    """Map a target ``(T, m)`` onto the solver's theta parameterization.
+
+    The returned theta reproduces ``T`` (rescaled onto ``cfg.T_max`` — only
+    the ratios of ``T_t`` above the feasibility floor matter) and ``m``
+    (clipped into ``(m_min, m_cap]``) under :func:`_theta_to_Tm`, so a
+    mid-run re-solve can warm-start ``solve_adam`` from the tail of a
+    previous schedule instead of the uniform initialization.
+    """
+    m_min = _default_m_min(cfg) if m_min is None else m_min
+    x_min = _x_min(cfg)
+    T = np.asarray(T, np.float64)
+    assert T.shape == (cfg.R,), (T.shape, cfg.R)
+    theta_m, m_eff = _invert_m(m, m_min, _m_cap(cfg, x_min, m_max))
+    # T component: T = floor + extra * b / sum(b) with b the reversed cumsum
+    # of e = softplus(theta). Only the ratios of b matter, so normalize the
+    # above-floor mass to sum R (keeps e, theta O(1) for Adam).
+    floor = min(m_eff * x_min, cfg.T_max / cfg.R)
+    b = np.maximum(T - floor, 1e-6)
+    b = np.maximum.accumulate(b[::-1])[::-1]        # enforce nonincreasing T
+    b = b / b.sum() * cfg.R
+    e = np.maximum(b - np.concatenate([b[1:], [0.0]]), 1e-4)
+    theta_T = np.log(np.expm1(e)).astype(np.float32)
+    return jnp.concatenate([jnp.asarray(theta_T), jnp.asarray(theta_m)])
+
+
 def solve_adam(cfg: AnalysisConfig, *, steps: int = 3000, lr: float = 3e-2,
                m0: float | None = None, m_min: float | None = None,
-               seed: int = 0) -> Schedule:
+               seed: int = 0, theta0: jnp.ndarray | None = None,
+               m_max: float | None = None) -> Schedule:
     m0 = _default_m0(cfg) if m0 is None else m0
     m_min = _default_m_min(cfg) if m_min is None else m_min
     x_min = _x_min(cfg)
-    theta = _init_theta(cfg, m0, m_min, x_min)
+    theta = (_init_theta(cfg, m0, m_min, x_min, m_max) if theta0 is None
+             else jnp.asarray(theta0, jnp.float32))
 
     def loss_fn(th):
-        T, m = _theta_to_Tm(th, cfg, m_min, x_min)
+        T, m = _theta_to_Tm(th, cfg, m_min, x_min, m_max)
         val, (obj, p1) = objective_and_penalty(T, m, cfg)
         return val, (obj, p1)
 
@@ -122,7 +180,7 @@ def solve_adam(cfg: AnalysisConfig, *, steps: int = 3000, lr: float = 3e-2,
         if v < best[0]:
             best = (v, theta)
     theta = best[1]
-    T, m = _theta_to_Tm(theta, cfg, m_min, x_min)
+    T, m = _theta_to_Tm(theta, cfg, m_min, x_min, m_max)
     T = np.asarray(T, np.float64)
     m = float(m)
     p1 = np.asarray(p1_round(jnp.asarray(T, jnp.float32), jnp.float32(m), cfg))

@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Optional
 
 import numpy as np
 
@@ -27,6 +27,13 @@ class AnalysisConfig:
     P: np.ndarray               # per-user compute capability P_u, shape (U,) (B1)
     B: np.ndarray               # per-user communication time B_u, shape (U,) (B2)
     delta1: float = 1.0         # Delta_1 = E||w_1 - w_opt||^2
+    # Availability-aware planning (beyond-paper, repro.core.replan): the
+    # EXPECTED plannable cohort size per round, shape (R,). When set, the
+    # Theorem-1 terms evaluate round t at U_round[t] contributors (C_t's
+    # Q^U truncation, B_t's 1/U^2 averaging) while P/B/sigma2 keep
+    # describing a U-sized representative capability spread. None keeps the
+    # paper's static-U objective exactly.
+    U_round: Optional[np.ndarray] = None
 
     def __post_init__(self):
         object.__setattr__(self, "eta", np.asarray(self.eta, np.float32))
@@ -37,6 +44,11 @@ class AnalysisConfig:
         assert self.sigma2.shape == (self.U,)
         assert self.P.shape == (self.U,)
         assert self.B.shape == (self.U,)
+        if self.U_round is not None:
+            u = np.asarray(self.U_round, np.float32)
+            object.__setattr__(self, "U_round", u)
+            assert u.shape == (self.R,), (u.shape, self.R)
+            assert float(u.min()) >= 2.0, "per-round cohorts need >= 2 users"
 
     @staticmethod
     def default(U: int, L: int, R: int, T_max: float, *,

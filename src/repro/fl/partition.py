@@ -27,7 +27,6 @@ def dirichlet_partition(labels: np.ndarray, U: int, alpha: float = 0.5,
         for u, part in enumerate(np.split(idx, cuts)):
             client_idx[u].extend(part.tolist())
     # guarantee a minimum per client (move from the largest donors)
-    sizes = [len(ci) for ci in client_idx]
     for u in range(U):
         while len(client_idx[u]) < min_per_client:
             donor = int(np.argmax([len(ci) for ci in client_idx]))

@@ -33,7 +33,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.baselines import Policy, RoundPlan
-from repro.fl.backends import ExecutionBackend, make_backend
+from repro.core.replan import Replanner, make_replan
+from repro.fl.backends import make_backend
 from repro.fl.client import sample_client_batches
 
 PyTree = Any
@@ -65,6 +66,9 @@ class History:
     train_loss: list = dataclasses.field(default_factory=list)
     # fleet runs only: reachable-device count per executed round
     available: list = dataclasses.field(default_factory=list)
+    # online re-planning only: one record per mid-run re-solve
+    # (round, reachable N, re-estimated U, new T tail, new m, ...)
+    replans: list = dataclasses.field(default_factory=list)
     method: str = ""
 
     def as_dict(self):
@@ -209,13 +213,30 @@ class RoundRuntime:
     # ------------------------------------------------------------------
     def run(self, source, *, rounds: int, T_max: float, eta, s_max: int,
             key: jax.Array, test_x, test_y, eval_every: int = 1,
-            verbose: bool = False, method: str = "") -> tuple[PyTree, History]:
+            verbose: bool = False, method: str = "",
+            replan=None) -> tuple[PyTree, History]:
         """Run up to ``rounds`` rounds, stopping when the simulated clock
-        exceeds ``T_max``; returns ``(params, History)``."""
+        exceeds ``T_max``; returns ``(params, History)``.
+
+        ``replan`` (None | trigger name | :class:`repro.core.replan.
+        ReplanConfig`) enables online re-solving of the remaining-horizon
+        Problem 2 when churn shifts the reachable population: the trigger is
+        evaluated before each round against the cohort source's reachable
+        count, the re-solve warm-starts from the incumbent schedule tail,
+        and each event is appended to ``History.replans``. Sources may
+        expose ``replan_view(t, budget_left, eta_tail)`` to re-estimate the
+        population view (the fleet source does); without it the policy's
+        static config is restricted to the remaining horizon.
+        """
         model, policy, backend = self.model, self.policy, self.backend
         if getattr(policy, "name", "") == "heterofl" and \
                 model.width_masks is None:
             raise ValueError("model does not support HeteroFL width masks")
+        replan = make_replan(replan)
+        replanner = (Replanner(replan, policy, rounds, eta, s_max=s_max,
+                               rate_max=getattr(source, "plan_rate_max",
+                                                None))
+                     if replan is not None and replan.active else None)
         key, k_init = jax.random.split(key)
         params = model.init(k_init)
         U_pad = backend.cohort_pad(source.cohort_size)
@@ -226,6 +247,23 @@ class RoundRuntime:
             cohort = source.round_cohort(t)
             if cohort is None:
                 continue  # nobody reachable: the round never starts
+            if replanner is not None:
+                reachable = (cohort.available if cohort.available is not None
+                             else source.cohort_size)
+                if replanner.should_replan(t, reachable):
+                    view = None
+                    budget_left = max(T_max - elapsed, 1e-6)
+                    view_fn = getattr(source, "replan_view", None)
+                    if view_fn is not None:
+                        view = view_fn(t, budget_left, eta[t:rounds])
+                    ev = replanner.replan(t, budget_left, reachable, view)
+                    hist.replans.append(ev.as_dict())
+                    if verbose:
+                        print(f"[{hist.method}] replan @ round {t+1}: "
+                              f"reachable {reachable} -> U_est {ev.U_est}, "
+                              f"m {ev.m:.2f}, "
+                              f"T_tail[{len(ev.T_tail)}] sum "
+                              f"{sum(ev.T_tail):.2f}")
             key, k_round, k_batch = jax.random.split(key, 3)
             plan: RoundPlan = policy.round(k_round, t, view=cohort.view)
             if elapsed + plan.elapsed > T_max * (1 + 1e-6):

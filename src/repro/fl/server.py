@@ -36,8 +36,15 @@ def run_federated(model: ModelAPI, policy: Policy, cfg: AnalysisConfig,
                   l2: float = 0.0, s_max: int | None = None,
                   eval_every: int = 1, verbose: bool = False,
                   backend="dense", chunk_size: int = 16,
-                  mesh=None) -> tuple[PyTree, History]:
-    """Run up to R rounds, stopping when the simulated clock exceeds T_max."""
+                  mesh=None, replan=None) -> tuple[PyTree, History]:
+    """Run up to R rounds, stopping when the simulated clock exceeds T_max.
+
+    ``replan`` (None | trigger name | ``repro.core.replan.ReplanConfig``)
+    enables online remaining-horizon re-solves of Problem 2 (ADEL policy
+    only); the static population never drifts, so ``every-k`` is the only
+    trigger that fires here — it re-solves the tail against the same
+    constants with the exact un-spent budget.
+    """
     eta = cfg.eta if eta is None else np.asarray(eta, np.float32)
     if s_max is None:
         # largest batch any client can be assigned under the policy
@@ -50,4 +57,4 @@ def run_federated(model: ModelAPI, policy: Policy, cfg: AnalysisConfig,
     return runtime.run(source, rounds=cfg.R, T_max=cfg.T_max, eta=eta,
                        s_max=s_max, key=key, test_x=test_x, test_y=test_y,
                        eval_every=eval_every, verbose=verbose,
-                       method=policy.name)
+                       method=policy.name, replan=replan)

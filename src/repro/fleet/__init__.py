@@ -33,7 +33,13 @@ against realistic populations:
 
   emitting History dicts consumable by ``benchmarks/report.py``.
 
-The population block lives in :class:`repro.configs.FleetConfig`.
+The population block lives in :class:`repro.configs.FleetConfig`, whose
+``replan`` field (a :class:`repro.core.replan.ReplanConfig`) turns on
+availability-aware online re-planning: the availability models expose
+``reachable_probs``/``expected_reachable`` forecasts, and
+:meth:`repro.fleet.engine.FleetCohortSource.replan_view` re-estimates the
+remaining-horizon Problem-2 view from the currently-reachable population
+(see the ``*-replan`` scenarios and ``benchmarks/replan_sweep.py``).
 """
 from repro.fleet.availability import (AVAILABILITY, AvailabilityModel,
                                       make_availability)

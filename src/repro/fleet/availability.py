@@ -11,10 +11,21 @@ deterministic given their seed and the sequence of ``step`` calls;
 * ``diurnal``    — sine-wave day/night cycle: availability probability
                    ``mean + amplitude * sin(2 pi t / period + phase_u)``
                    with a per-device phase (devices live in time zones).
+                   ``phase_spread`` narrows the time-zone spread: at the
+                   default ``2 pi`` phases wash out fleet-wide, while small
+                   spreads synchronize the population (one dominant time
+                   zone) so the REACHABLE COUNT itself oscillates — the
+                   churn regime online deadline re-planning targets.
 * ``markov``     — per-device on/off Markov chain with transition probs
                    ``p_off_to_on`` / ``p_on_to_off``; stationary availability
                    is ``p_off_to_on / (p_off_to_on + p_on_to_off)``, and
                    outages are temporally correlated (sticky churn).
+
+Every model also exposes the expected-reachable distribution consumed by
+the re-planning subsystem (:mod:`repro.core.replan`): ``reachable_probs(t)``
+gives each device's marginal reachability probability in a future round
+``t`` conditioned on the model's current state, and ``expected_reachable(t0,
+horizon)`` the expected reachable counts for the next ``horizon`` rounds.
 """
 from __future__ import annotations
 
@@ -45,6 +56,20 @@ class AvailabilityModel:
         """Reachability of every device in round ``t`` -> bool (n,)."""
         raise NotImplementedError
 
+    def reachable_probs(self, t: int) -> np.ndarray:  # pragma: no cover
+        """Per-device probability of being reachable in round ``t`` given
+        the model's current state -> float (n,)."""
+        raise NotImplementedError
+
+    def expected_reachable(self, t0: int, horizon: int = 1) -> np.ndarray:
+        """Expected reachable-device count for rounds ``t0..t0+horizon-1``.
+
+        The population estimator behind availability-aware deadline
+        re-planning: ``sum_u P(device u reachable in round t)`` per round.
+        """
+        return np.asarray([float(self.reachable_probs(t0 + k).sum())
+                           for k in range(horizon)])
+
     def describe(self) -> dict:
         return {"name": self.name, "n": self.n}
 
@@ -54,6 +79,9 @@ class AlwaysOn(AvailabilityModel):
 
     def step(self, t: int) -> np.ndarray:
         return np.ones(self.n, bool)
+
+    def reachable_probs(self, t: int) -> np.ndarray:
+        return np.ones(self.n)
 
 
 class Bernoulli(AvailabilityModel):
@@ -66,6 +94,9 @@ class Bernoulli(AvailabilityModel):
     def step(self, t: int) -> np.ndarray:
         return self._rng.random(self.n) < self.rate
 
+    def reachable_probs(self, t: int) -> np.ndarray:
+        return np.full(self.n, self.rate)
+
     def describe(self) -> dict:
         return {"name": self.name, "n": self.n, "rate": self.rate}
 
@@ -74,14 +105,16 @@ class Diurnal(AvailabilityModel):
     name = "diurnal"
 
     def __init__(self, n: int, seed: int = 0, mean: float = 0.65,
-                 amplitude: float = 0.3, period: float = 24.0):
+                 amplitude: float = 0.3, period: float = 24.0,
+                 phase_spread: float = 2.0 * np.pi):
         self.mean = float(mean)
         self.amplitude = float(amplitude)
         self.period = float(period)
+        self.phase_spread = float(phase_spread)
         super().__init__(n, seed)
 
     def _init_state(self) -> None:
-        self.phase = self._rng.uniform(0.0, 2.0 * np.pi, self.n)
+        self.phase = self._rng.uniform(0.0, self.phase_spread, self.n)
 
     def prob(self, t: int) -> np.ndarray:
         raw = self.mean + self.amplitude * np.sin(
@@ -91,9 +124,13 @@ class Diurnal(AvailabilityModel):
     def step(self, t: int) -> np.ndarray:
         return self._rng.random(self.n) < self.prob(t)
 
+    def reachable_probs(self, t: int) -> np.ndarray:
+        return self.prob(t)
+
     def describe(self) -> dict:
         return {"name": self.name, "n": self.n, "mean": self.mean,
-                "amplitude": self.amplitude, "period": self.period}
+                "amplitude": self.amplitude, "period": self.period,
+                "phase_spread": round(self.phase_spread, 4)}
 
 
 class Markov(AvailabilityModel):
@@ -112,11 +149,21 @@ class Markov(AvailabilityModel):
     def _init_state(self) -> None:
         # start from the stationary distribution so rates hold from round 0
         self.state = self._rng.random(self.n) < self.stationary
+        self._t = -1          # round of the last step() (state's timestamp)
 
     def step(self, t: int) -> np.ndarray:
         u = self._rng.random(self.n)
         self.state = np.where(self.state, u >= self.p_down, u < self.p_up)
+        self._t = int(t)
         return self.state.copy()
+
+    def reachable_probs(self, t: int) -> np.ndarray:
+        """k-step-ahead marginal: geometric relaxation of the current state
+        toward the stationary rate with factor (1 - p_up - p_down)^k."""
+        k = max(int(t) - self._t, 0)
+        lam = (1.0 - self.p_up - self.p_down) ** k
+        return self.stationary + (self.state.astype(float)
+                                  - self.stationary) * lam
 
     def describe(self) -> dict:
         return {"name": self.name, "n": self.n, "p_off_to_on": self.p_up,

@@ -33,8 +33,7 @@ from repro.core.baselines import Policy, make_policy
 from repro.core.scheduler import solve
 from repro.core.types import AnalysisConfig
 from repro.fl.partition import dirichlet_partition, iid_partition, stack_clients
-from repro.fl.runtime import (Cohort, History, ModelAPI, RoundRuntime,
-                              probe_s_max)
+from repro.fl.runtime import Cohort, ModelAPI, RoundRuntime, probe_s_max
 from repro.fleet.availability import AvailabilityModel
 from repro.fleet.cohort import cohort_view, sample_cohort
 from repro.fleet.profiles import Fleet
@@ -103,10 +102,19 @@ class FleetCohortSource:
         self.cohort_size = int(cohort_size)
         self.strategy = strategy
         self.rng = np.random.default_rng([2077, seed])
+        self._last_avail: Optional[np.ndarray] = None
         availability.reset()
+
+    @property
+    def plan_rate_max(self) -> float:
+        """Fastest compute rate any cohort can plan for — bounds a
+        re-solve's m so batches stay within the probed ``s_max`` even when
+        the fleet's fastest devices were offline at re-plan time."""
+        return float(self.fleet.P.max())
 
     def round_cohort(self, t: int) -> Optional[Cohort]:
         avail = self.availability.step(t)
+        self._last_avail = avail
         idx = sample_cohort(self.rng, avail, self.fleet, self.cohort_size,
                             self.strategy)
         if len(idx) == 0:
@@ -118,6 +126,42 @@ class FleetCohortSource:
         return Cohort(x=xs, y=ys, counts=counts, view=view,
                       available=int(avail.sum()))
 
+    # ------------------------------------------------------------------
+    def replan_view(self, t: int, budget_left: float,
+                    eta_tail) -> AnalysisConfig:
+        """Remaining-horizon planning config re-estimated from the fleet's
+        currently-reachable population (the online re-planning hook).
+
+        ``U_round`` carries the availability model's expected-reachable
+        forecast for every remaining round (clipped to the plannable cohort
+        size), so the re-solve steers deadline budget into the rounds that
+        will run with few contributors; ``U`` is its mean, and ``P``/``B``
+        are quantile-spaced over the devices reachable in the current round
+        (falling back to the whole fleet before the first draw) — tracking
+        both how MANY devices the rounds can plan for and WHICH compute-rate
+        spread they bring.
+        """
+        eta_tail = np.asarray(eta_tail, np.float32)
+        rounds_left = len(eta_tail)
+        exp = self.availability.expected_reachable(t, rounds_left)
+        U_round = np.clip(np.round(exp), 2.0,
+                          float(self.cohort_size)).astype(np.float32)
+        U_est = int(np.clip(round(float(U_round.mean())), 2,
+                            self.cohort_size))
+        pool = (np.flatnonzero(self._last_avail)
+                if self._last_avail is not None and self._last_avail.any()
+                else np.arange(self.fleet.size))
+        q = (np.arange(U_est) + 0.5) / U_est
+        order = pool[np.argsort(self.fleet.P[pool])]
+        pick = order[np.clip((q * len(order)).astype(int), 0,
+                             len(order) - 1)]
+        sigma2 = np.full((U_est,), float(np.mean(self.ref.sigma2)),
+                         np.float32)
+        return dataclasses.replace(
+            self.ref, U=U_est, R=rounds_left, T_max=float(budget_left),
+            eta=eta_tail, P=self.fleet.P[pick].copy(),
+            B=self.fleet.B[pick].copy(), sigma2=sigma2, U_round=U_round)
+
 
 def run_fleet(model: ModelAPI, fleet: Fleet, availability: AvailabilityModel,
               data: FleetData, *, method: str = "adel", rounds: int = 20,
@@ -128,13 +172,19 @@ def run_fleet(model: ModelAPI, fleet: Fleet, availability: AvailabilityModel,
               solver: str = "adam", solver_steps: int = 600,
               local_iters: int = 1, l2: float = 0.0,
               s_max: Optional[int] = None, eval_every: int = 1,
-              seed: int = 0, verbose: bool = False) -> tuple:
+              seed: int = 0, verbose: bool = False,
+              replan=None) -> tuple:
     """Run up to ``rounds`` federated rounds against a simulated fleet.
 
     Returns ``(params, History)``; the History carries the same fields as
     :func:`repro.fl.server.run_federated` plus per-round reachable-device
     counts, so ``benchmarks/report.py`` consumes it unchanged. ``backend``
     selects the execution backend (``"chunked" | "dense" | "shard_map"``).
+    ``replan`` (None | trigger name | ``repro.core.replan.ReplanConfig``)
+    enables availability-aware online re-solving of the remaining-horizon
+    Problem 2 (``method="adel"`` only): the trigger watches the reachable
+    count, and each re-solve re-estimates ``(U, P, B)`` from the currently-
+    reachable population via :meth:`FleetCohortSource.replan_view`.
     """
     if fleet.size != len(data.parts):
         raise ValueError(f"fleet size {fleet.size} != data shards "
@@ -185,4 +235,4 @@ def run_fleet(model: ModelAPI, fleet: Fleet, availability: AvailabilityModel,
                        test_x=jnp.asarray(data.x_test),
                        test_y=jnp.asarray(data.y_test),
                        eval_every=eval_every, verbose=verbose,
-                       method=f"fleet-{policy.name}")
+                       method=f"fleet-{policy.name}", replan=replan)

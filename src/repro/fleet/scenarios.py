@@ -19,9 +19,8 @@ import os
 import time
 from typing import Optional
 
-import numpy as np
-
-from repro.configs.base import FleetConfig
+from repro.configs.base import FleetConfig, ReplanConfig
+from repro.core.replan import TRIGGERS
 from repro.data.synthetic import make_image_dataset
 from repro.fleet.availability import make_availability
 from repro.fleet.engine import partition_fleet, run_fleet
@@ -49,12 +48,14 @@ class Scenario:
 
 
 def _scn(name, preset, size, availability, akw=(), method="adel",
-         strategy="uniform", alpha=0.5, note="", **kw) -> Scenario:
+         strategy="uniform", alpha=0.5, note="", cohort=32,
+         replan=ReplanConfig(), **kw) -> Scenario:
     return Scenario(
         name=name, method=method, alpha=alpha, note=note,
         fleet=FleetConfig(preset=preset, size=size, availability=availability,
                           availability_kwargs=tuple(akw),
-                          cohort_strategy=strategy),
+                          cohort_strategy=strategy, cohort_size=cohort,
+                          replan=replan),
         **kw)
 
 
@@ -81,6 +82,23 @@ SCENARIOS = {s.name: s for s in [
          strategy="power-of-choice",
          note="same population as longtail-mobile-diurnal, capability-biased "
               "cohort selection"),
+    _scn("longtail-mobile-diurnal-replan", "longtail-mobile", 300, "diurnal",
+         akw=(("mean", 0.42), ("amplitude", 0.5), ("period", 14.0),
+              ("phase_spread", 0.5)),
+         cohort=48, rounds=14,
+         replan=ReplanConfig(trigger="drift", drift_threshold=0.3,
+                             steps=300),
+         note="one dominant time zone: the reachable count itself swings "
+              "274 -> ~0 -> back, night rounds skip entirely; drift-"
+              "triggered re-planning re-solves the remaining horizon and "
+              "reclaims the stranded deadline budget"),
+    _scn("bimodal-edge-markov-replan", "bimodal-edge", 500, "markov",
+         akw=(("p_off_to_on", 0.35), ("p_on_to_off", 0.12)),
+         strategy="stratified", cohort=32, rounds=14,
+         replan=ReplanConfig(trigger="every-k", every=4, steps=300),
+         note="same sticky-outage edge fleet as bimodal-edge-markov with "
+              "periodic every-k re-solves tracking the un-spent budget and "
+              "the Markov-relaxed reachable forecast"),
 ]}
 
 
@@ -93,12 +111,16 @@ def get_scenario(name: str) -> Scenario:
 def run_scenario(scn: Scenario, *, rounds: Optional[int] = None,
                  fleet_size: Optional[int] = None,
                  cohort_size: Optional[int] = None,
-                 backend: Optional[str] = None, seed: int = 0,
+                 backend: Optional[str] = None,
+                 replan=None, replan_every: Optional[int] = None,
+                 seed: int = 0,
                  solver_steps: int = 600, eval_every: int = 1,
                  verbose: bool = True) -> dict:
     """Run one scenario; returns the History dict (+ fleet/availability
     descriptions) consumable by ``benchmarks/report.py``. ``backend``
-    overrides the FleetConfig's execution backend (dense/chunked/shard_map)."""
+    overrides the FleetConfig's execution backend (dense/chunked/shard_map);
+    ``replan`` (trigger name or ``ReplanConfig``) and ``replan_every``
+    override the FleetConfig's online re-planning block."""
     fc = scn.fleet
     if fleet_size is not None:
         fc = dataclasses.replace(fc, size=fleet_size)
@@ -106,6 +128,13 @@ def run_scenario(scn: Scenario, *, rounds: Optional[int] = None,
         fc = dataclasses.replace(fc, cohort_size=cohort_size)
     if backend is not None:
         fc = dataclasses.replace(fc, backend=backend)
+    if replan is not None:
+        rp = (replan if isinstance(replan, ReplanConfig)
+              else dataclasses.replace(fc.replan, trigger=replan))
+        fc = dataclasses.replace(fc, replan=rp)
+    if replan_every is not None:
+        fc = dataclasses.replace(
+            fc, replan=dataclasses.replace(fc.replan, every=replan_every))
     rounds = scn.rounds if rounds is None else rounds
 
     fleet = fleet_from_config(fc)
@@ -124,7 +153,7 @@ def run_scenario(scn: Scenario, *, rounds: Optional[int] = None,
         cohort_size=fc.cohort_size, cohort_strategy=fc.cohort_strategy,
         backend=fc.backend, chunk_size=fc.chunk_size, eta0=scn.eta0,
         solver_steps=solver_steps, eval_every=eval_every, seed=seed,
-        verbose=verbose)
+        verbose=verbose, replan=fc.replan)
     out = hist.as_dict()
     out["wall_s"] = round(time.time() - t0, 2)
     out["scenario"] = scn.name
@@ -132,6 +161,7 @@ def run_scenario(scn: Scenario, *, rounds: Optional[int] = None,
     out["availability"] = avail.describe()
     out["cohort"] = {"size": fc.cohort_size, "strategy": fc.cohort_strategy}
     out["backend"] = fc.backend
+    out["replan"] = dataclasses.asdict(fc.replan)
     return out
 
 
@@ -161,6 +191,12 @@ def main(argv=None) -> None:
     ap.add_argument("--backend", default=None,
                     choices=["dense", "chunked", "shard_map"],
                     help="execution backend override (repro.fl.backends)")
+    ap.add_argument("--replan", default=None, choices=list(TRIGGERS),
+                    help="online re-planning trigger override "
+                         "(repro.core.replan; scenarios carry their own "
+                         "default in FleetConfig.replan)")
+    ap.add_argument("--replan-every", type=int, default=None,
+                    help="every-k re-plan period override")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--solver-steps", type=int, default=600)
     ap.add_argument("--save", action="store_true",
@@ -171,13 +207,13 @@ def main(argv=None) -> None:
 
     if args.list or not args.run:
         print(f"{'scenario':38s} {'fleet':28s} {'avail':10s} "
-              f"{'cohort':22s} method")
+              f"{'cohort':22s} {'method':9s} replan")
         for s in SCENARIOS.values():
             fc = s.fleet
             print(f"{s.name:38s} {fc.preset + ' x' + str(fc.size):28s} "
                   f"{fc.availability:10s} "
                   f"{str(fc.cohort_size) + ' ' + fc.cohort_strategy:22s} "
-                  f"{s.method}")
+                  f"{s.method:9s} {fc.replan.trigger}")
             if s.note:
                 print(f"    {s.note}")
         return
@@ -188,6 +224,7 @@ def main(argv=None) -> None:
         ap.error(str(e.args[0]))
     res = run_scenario(scn, rounds=args.rounds, fleet_size=args.fleet_size,
                        cohort_size=args.cohort, backend=args.backend,
+                       replan=args.replan, replan_every=args.replan_every,
                        seed=args.seed, solver_steps=args.solver_steps,
                        verbose=not args.quiet)
     acc = res["accuracy"][-1] if res["accuracy"] else float("nan")
@@ -197,6 +234,9 @@ def main(argv=None) -> None:
           f"wall={res['wall_s']:.1f}s")
     print(f"  avail/round: {res['available']}")
     print(f"  deadlines:   {[round(d, 3) for d in res['deadlines']]}")
+    if res["replans"]:
+        print(f"  replans:     "
+              f"{[(r['round'], r['U_est'], round(r['m'], 2)) for r in res['replans']]}")
     if args.save:
         path = save_scenario_result(scn.name, scn.method, res)
         print(f"  saved -> {path}")

@@ -6,7 +6,6 @@ drop-in compatible with the pure-jnp path it accelerates.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

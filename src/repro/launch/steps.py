@@ -19,8 +19,7 @@ Two client layouts:
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

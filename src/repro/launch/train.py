@@ -27,7 +27,6 @@ from repro.core.types import AnalysisConfig
 from repro.data.synthetic import make_lm_dataset
 from repro.launch.steps import make_train_step
 from repro.models import transformer as tr
-from repro.optim import inverse_decay
 
 
 def run_training(arch: str, *, method: str = "adel", rounds: int = 40,

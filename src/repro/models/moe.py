@@ -41,7 +41,6 @@ def moe_ffn(x2d: jnp.ndarray, p: dict, *, top_k: int,
     """
     N, D = x2d.shape
     E = p["router"].shape[1]
-    F = p["wg"].shape[-1]
     K = top_k
     C = max(int(N * K * capacity_factor / E), 1)
 

@@ -10,7 +10,6 @@ container (DESIGN.md §6); HeteroFL width masks are provided for all models.
 """
 from __future__ import annotations
 
-import functools
 from typing import Sequence
 
 import jax
@@ -35,7 +34,6 @@ def _hidden_width_masks(params, ratios: np.ndarray):
     Output layer's units are never width-masked (all clients share the head's
     output dim); its input dim follows the previous layer's kept units.
     """
-    U = len(ratios)
     L = len(params)
 
     def mask_for(r):

@@ -20,7 +20,6 @@ dtype (f32 for training, bf16 for serving).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple, Optional
 
 import jax

@@ -9,7 +9,9 @@ subset the suite actually uses (``integers``, ``floats``) is implemented.
 from __future__ import annotations
 
 try:  # pragma: no cover - exercised only when hypothesis is installed
-    from hypothesis import given, settings
+    # redundant aliases mark the re-export (ruff F401)
+    from hypothesis import given as given
+    from hypothesis import settings as settings
     from hypothesis import strategies as st
 
     HAVE_HYPOTHESIS = True

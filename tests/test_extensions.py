@@ -1,11 +1,8 @@
 """Beyond-paper extensions: R-optimization (paper §III-D) and pilot-round
 constant calibration."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.gamma import q_gamma, q_inv
 from repro.core.scheduler import solve, solve_rounds

@@ -1,6 +1,5 @@
 """Fleet subsystem: profiles, availability, cohort sampling, chunked
 aggregation equivalence, and an end-to-end 200-device run_fleet smoke."""
-import dataclasses
 import os
 
 import jax

@@ -9,7 +9,6 @@ from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ops import (adel_aggregate_pallas, gqa_flash,
                                ssd_chunked_pallas)
 from repro.kernels.ref import adel_agg_ref, flash_attention_ref, ssd_scan_ref
-from repro.kernels.ssd_scan import ssd_scan
 
 
 def _qs(shape, seed, dtype=jnp.float32):

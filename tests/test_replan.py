@@ -1,0 +1,276 @@
+"""Online re-planning (repro.core.replan): warm-start fidelity, re-solved
+tail feasibility (nonincreasing / budget-exact / p_t^1 <= 0.2), trigger
+behavior, the availability estimators behind the population view, and
+``replan="never"`` bit-for-bit equivalence with the static runtime on all
+three execution backends."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.baselines import make_policy
+from repro.core.replan import (ReplanConfig, Replanner, make_replan,
+                               remaining_horizon)
+from repro.core.scheduler import (_default_m_min, _theta_to_Tm, _x_min,
+                                  invert_schedule, solve_adam)
+from repro.core.types import AnalysisConfig
+from repro.data.synthetic import make_image_dataset
+from repro.fl.partition import dirichlet_partition, stack_clients
+from repro.fl.server import run_federated
+from repro.fleet.availability import make_availability
+from repro.fleet.engine import partition_fleet, run_fleet
+from repro.fleet.profiles import make_fleet
+from repro.models.paper_models import make_mlp
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return AnalysisConfig.default(U=10, L=8, R=12, T_max=120.0, seed=1)
+
+
+@pytest.fixture(scope="module")
+def schedule(cfg):
+    return solve_adam(cfg, steps=600)
+
+
+# ---------------------------------------------------------------------------
+# warm start
+# ---------------------------------------------------------------------------
+
+def test_invert_schedule_roundtrip(cfg, schedule):
+    """theta = invert(T, m) reproduces (T, m) exactly under the solver's
+    parameterization — the warm start begins at the incumbent tail."""
+    theta = invert_schedule(cfg, schedule.T, schedule.m)
+    T2, m2 = _theta_to_Tm(theta, cfg, _default_m_min(cfg), _x_min(cfg))
+    np.testing.assert_allclose(np.asarray(T2), schedule.T, rtol=1e-5)
+    assert abs(float(m2) - schedule.m) < 1e-5 * max(schedule.m, 1.0)
+
+
+def test_warm_start_matches_cold_start(cfg, schedule):
+    """A few hundred warm-started steps reach the 3000-step cold solve."""
+    t = 5
+    rem = remaining_horizon(cfg, t, float(schedule.T[t:].sum()), cfg.eta[t:])
+    theta0 = invert_schedule(rem, schedule.T[t:], schedule.m)
+    warm = solve_adam(rem, steps=300, theta0=theta0)
+    cold = solve_adam(rem, steps=3000)
+    assert warm.objective <= cold.objective * 1.01, \
+        (warm.objective, cold.objective)
+
+
+# ---------------------------------------------------------------------------
+# re-solved tail feasibility (Lemma-3 construction preserved)
+# ---------------------------------------------------------------------------
+
+def test_replanned_tail_feasible(cfg, schedule):
+    policy = make_policy("adel", cfg, schedule=schedule)
+    rp = Replanner(ReplanConfig(trigger="every-k", steps=250), policy,
+                   cfg.R, cfg.eta)
+    t = 4
+    elapsed = float(schedule.T[:t].sum())
+    budget_left = cfg.T_max - elapsed
+    ev = rp.replan(t, budget_left, reachable=cfg.U)
+    tail = np.asarray(ev.T_tail)
+    assert tail.shape == (cfg.R - t,)
+    # nonincreasing, positive, budget used exactly
+    assert np.all(tail > 0)
+    assert np.all(np.diff(tail) <= 1e-5)
+    np.testing.assert_allclose(tail.sum(), budget_left, rtol=1e-4)
+    # spliced schedule: history head untouched, new tail live, p1 capped
+    sch = policy.schedule
+    np.testing.assert_array_equal(sch.T[:t], schedule.T[:t])
+    np.testing.assert_allclose(sch.T[t:], tail, rtol=1e-6)
+    assert np.all(sch.p1[t:] < 0.2 + 1e-6)
+    assert sch.solver.endswith("-replan")
+    assert rp.events == [ev]
+
+
+def test_replan_view_tail_feasible_under_shrunken_fleet():
+    """Fleet-style view with a U_round forecast: the re-solved tail keeps
+    the Lemma-3 feasibility construction (budget exact, nonincreasing,
+    p_t^1 <= 0.2 at the SMALLEST forecast cohort)."""
+    cfg = AnalysisConfig.default(U=16, L=6, R=10, T_max=60.0, seed=0)
+    schedule = solve_adam(cfg, steps=400)
+    policy = make_policy("adel", cfg, schedule=schedule)
+    rp = Replanner(ReplanConfig(trigger="drift", steps=250), policy,
+                   cfg.R, cfg.eta)
+    t = 3
+    budget_left = float(schedule.T[t:].sum())
+    u_fore = np.asarray([16, 9, 4, 2, 2, 5, 12], np.float32)
+    view = dataclasses.replace(
+        cfg, R=cfg.R - t, T_max=budget_left, eta=cfg.eta[t:],
+        U_round=u_fore)
+    ev = rp.replan(t, budget_left, reachable=5, view=view)
+    tail = np.asarray(ev.T_tail)
+    assert np.all(np.diff(tail) <= 1e-5)
+    np.testing.assert_allclose(tail.sum(), budget_left, rtol=1e-4)
+    assert np.all(np.asarray(policy.schedule.p1[t:]) < 0.2 + 1e-6)
+    assert ev.U_est == view.U and ev.reachable == 5
+
+
+# ---------------------------------------------------------------------------
+# triggers
+# ---------------------------------------------------------------------------
+
+def test_make_replan_normalization():
+    assert make_replan(None) is None
+    assert make_replan("drift").trigger == "drift"
+    rc = ReplanConfig(trigger="every-k", every=7)
+    assert make_replan(rc) is rc
+    with pytest.raises(ValueError):
+        ReplanConfig(trigger="sometimes")
+    with pytest.raises(TypeError):
+        make_replan(3)
+
+
+def test_should_replan_triggers(cfg, schedule):
+    policy = make_policy("adel", cfg, schedule=schedule)
+    ek = Replanner(ReplanConfig(trigger="every-k", every=3), policy,
+                   cfg.R, cfg.eta)
+    assert not ek.should_replan(0, 100)          # round-0 plan reference
+    fired = [t for t in range(1, cfg.R) if ek.should_replan(t, 100)]
+    assert fired == [3, 6, 9]                    # R-1=11 past min_rounds_left
+
+    dr = Replanner(ReplanConfig(trigger="drift", drift_threshold=0.25),
+                   policy, cfg.R, cfg.eta)
+    assert not dr.should_replan(0, 200)          # sets the reference
+    assert not dr.should_replan(1, 180)          # -10%: below threshold
+    assert dr.should_replan(2, 120)              # -40%: drift
+    assert not dr.should_replan(cfg.R - 1, 10)   # tail too short to re-plan
+
+
+def test_replanner_requires_schedule_policy(cfg):
+    with pytest.raises(ValueError, match="adel"):
+        Replanner(ReplanConfig(trigger="drift"),
+                  make_policy("salf", cfg), cfg.R, cfg.eta)
+
+
+# ---------------------------------------------------------------------------
+# availability estimators (the population side of the re-plan view)
+# ---------------------------------------------------------------------------
+
+def test_expected_reachable_estimators():
+    always = make_availability("always-on", 50)
+    np.testing.assert_allclose(always.expected_reachable(0, 3), [50, 50, 50])
+
+    bern = make_availability("bernoulli", 400, seed=0, rate=0.7)
+    np.testing.assert_allclose(bern.expected_reachable(5, 2), [280, 280])
+
+    diu = make_availability("diurnal", 300, seed=0, mean=0.5, amplitude=0.4,
+                            period=8.0, phase_spread=0.3)
+    exp = diu.expected_reachable(0, 8)
+    assert exp.max() > 1.5 * exp.min()           # synchronized wave swings
+    # the forecast tracks the realized counts in expectation
+    real = np.asarray([diu.step(t).sum() for t in range(8)])
+    assert np.corrcoef(exp, real)[0, 1] > 0.9
+
+    mk = make_availability("markov", 500, seed=0, p_off_to_on=0.3,
+                           p_on_to_off=0.1)
+    mk.step(0)
+    now = mk.expected_reachable(0, 1)[0]
+    assert now == mk.state.sum()                 # k=0: the drawn state
+    far = mk.expected_reachable(0, 40)[-1]
+    assert abs(far - 0.75 * 500) < 1.0           # k->inf: stationary rate
+
+
+def test_diurnal_phase_spread_controls_population_swing():
+    washed = make_availability("diurnal", 400, seed=0, mean=0.5,
+                               amplitude=0.4, period=8.0)
+    synced = make_availability("diurnal", 400, seed=0, mean=0.5,
+                               amplitude=0.4, period=8.0, phase_spread=0.3)
+    swing = lambda m: (lambda e: float(e.max() - e.min()))(
+        m.expected_reachable(0, 8))
+    assert swing(synced) > 4 * swing(washed)
+
+
+# ---------------------------------------------------------------------------
+# runtime integration
+# ---------------------------------------------------------------------------
+
+R = 5
+U = 8
+
+
+@pytest.fixture(scope="module")
+def fl_setup():
+    x_tr, y_tr, x_te, y_te = make_image_dataset(
+        "mnist", n_train=600, n_test=200, seed=0, noise_std=1.0)
+    parts = dirichlet_partition(y_tr, U, alpha=0.5, seed=0)
+    cx, cy, counts = stack_clients(x_tr, y_tr, parts)
+    model = make_mlp()
+    cfg = AnalysisConfig.default(U=U, L=model.L, R=R, T_max=R * model.L * 0.5,
+                                 eta0=2.0, seed=0)
+    data = (jnp.asarray(cx), jnp.asarray(cy), jnp.asarray(counts),
+            jnp.asarray(x_te), jnp.asarray(y_te))
+    schedule = solve_adam(cfg, steps=150)
+    return model, cfg, data, schedule
+
+
+def _run_static(fl_setup, backend, replan):
+    model, cfg, data, schedule = fl_setup
+    policy = make_policy("adel", cfg, schedule=schedule)
+    _, hist = run_federated(model, policy, cfg, *data,
+                            key=jax.random.PRNGKey(0), backend=backend,
+                            chunk_size=3, replan=replan)
+    return hist
+
+
+@pytest.mark.parametrize("backend", ["dense", "chunked", "shard_map"])
+def test_replan_never_bit_for_bit(fl_setup, backend):
+    """trigger="never" must not perturb the run AT ALL: identical History
+    (every field, exact floats) to a run without the replan machinery."""
+    base = _run_static(fl_setup, backend, None)
+    never = _run_static(fl_setup, backend, ReplanConfig())
+    assert base.as_dict() == never.as_dict()
+    assert never.replans == []
+
+
+def test_every_k_static_run_respects_budget(fl_setup):
+    model, cfg, data, schedule = fl_setup
+    hist = _run_static(fl_setup, "dense",
+                       ReplanConfig(trigger="every-k", every=2, steps=150))
+    assert len(hist.replans) >= 1
+    for ev in hist.replans:
+        assert set(ev) >= {"round", "reachable", "U_est", "T_tail", "m",
+                           "objective", "budget_left"}
+        assert ev["reachable"] == U            # static population
+    # the re-solved schedule still lands exactly on the R2 budget
+    np.testing.assert_allclose(hist.times[-1], cfg.T_max, rtol=1e-4)
+
+
+def test_fleet_drift_replan_records_and_respects_budget():
+    n = 120
+    fleet = make_fleet("longtail-mobile", n, seed=0)
+    x_tr, y_tr, x_te, y_te = make_image_dataset(
+        "mnist", n_train=800, n_test=200, seed=0, noise_std=1.0)
+    data = partition_fleet(x_tr, y_tr, x_te, y_te, n, alpha=0.5, seed=0)
+    avail = make_availability("diurnal", n, seed=0, mean=0.45, amplitude=0.4,
+                              period=8.0, phase_spread=0.5)
+    rounds = 8
+    model = make_mlp()
+    _, hist = run_fleet(model, fleet, avail, data, method="adel",
+                        rounds=rounds, cohort_size=24, chunk_size=12,
+                        solver_steps=200, seed=0,
+                        replan=ReplanConfig(trigger="drift",
+                                            drift_threshold=0.3, steps=150))
+    assert len(hist.replans) >= 1
+    for ev in hist.replans:
+        assert 2 <= ev["U_est"] <= 24
+        tail = np.asarray(ev["T_tail"])
+        assert np.all(np.diff(tail) <= 1e-5)
+        np.testing.assert_allclose(tail.sum(), ev["budget_left"], rtol=1e-4)
+    # replanning must never overdraw the R2 budget
+    assert hist.times[-1] <= rounds * model.L * 0.5 * 1.001
+
+
+def test_fleet_replan_requires_adel():
+    n = 60
+    fleet = make_fleet("uniform", n, seed=0)
+    x_tr, y_tr, x_te, y_te = make_image_dataset(
+        "mnist", n_train=300, n_test=100, seed=0, noise_std=1.0)
+    data = partition_fleet(x_tr, y_tr, x_te, y_te, n, alpha=None, seed=0)
+    avail = make_availability("always-on", n)
+    with pytest.raises(ValueError, match="adel"):
+        run_fleet(make_mlp(), fleet, avail, data, method="salf", rounds=2,
+                  cohort_size=8, replan="drift", seed=0)

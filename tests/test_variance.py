@@ -20,7 +20,6 @@ def test_variance_bound_single_round():
     G2 = 1.0
 
     T_d, m = 8.0, 1.0
-    cfg = AnalysisConfig.default(U=U, L=L, R=4, T_max=32.0, seed=0)
     lam_uniform = jnp.full((U,), T_d / m)          # B1 with equal rates
     p = exact_p_layers(lam_uniform, L)
     assert float(p[0]) < 0.2, "test setup must satisfy p_t^1 < 0.2"
