@@ -1,13 +1,20 @@
-"""Backend sweep — wall-clock per round for the three execution backends
-(dense / chunked / shard_map) across cohort sizes {16, 64, 256}.
+"""Backend sweep — wall-clock per round for the four execution backends
+(dense / chunked / shard_map / temporal) across cohort sizes {16, 64, 256},
+plus the compile-time memory effect of params-buffer donation.
 
 Drives :class:`repro.fl.runtime.RoundRuntime` directly: one warmup pass
 compiles each backend's round step, then a timed pass measures steady-state
 seconds per round (eval excluded from the loop via a final-round-only
 cadence). On a single-device host the shard_map mesh has one shard; set
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before running to
-sweep a real N-way client mesh. Emits ``experiments/results/
-backend_sweep.json`` consumed by ``benchmarks/report.py``.
+sweep a real N-way client mesh.
+
+The ``donation`` section lowers the dense and temporal round steps with
+``donate_argnums`` on and off and reports XLA's compiled memory analysis:
+``peak_bytes = argument + output + temp - aliased`` — donated params alias
+the updated params in place, so the donated peak drops by ~one parameter
+buffer. Emits ``experiments/results/backend_sweep.json`` consumed by
+``benchmarks/report.py``.
 """
 from __future__ import annotations
 
@@ -16,7 +23,8 @@ import time
 from benchmarks.common import cached_result, save_result
 
 COHORTS = (16, 64, 256)
-BACKENDS = ("dense", "chunked", "shard_map")
+BACKENDS = ("dense", "chunked", "shard_map", "temporal")
+DONATION_BACKENDS = ("dense", "temporal")
 
 
 def _sweep_one(U: int, backend: str, *, rounds: int, chunk_size: int,
@@ -69,6 +77,69 @@ def _sweep_one(U: int, backend: str, *, rounds: int, chunk_size: int,
     }
 
 
+def _donation_memory(*, U: int = 4, s_max: int = 8, seq: int = 32,
+                     arch: str = "qwen1.5-4b") -> dict:
+    """Compiled-memory comparison of the LM round step with and without
+    params donation, per single-jit-per-round backend.
+
+    ``peak_bytes = argument + output + temp - aliased``: with donation the
+    params argument aliases the updated-params output in place, so one
+    full parameter buffer (``alias_bytes == param_bytes``) comes off the
+    peak. On the reduced CPU arch the gradient activations dominate the
+    peak, so the ratio is modest; on the parameter-dominated full configs
+    the same aliasing removes the dominant term. Returns {} when the
+    platform's compiler exposes no memory analysis.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.fl.backends import make_backend
+    from repro.fl.tasks import make_lm_model
+
+    cfg = get_config(arch).reduced()
+    model = make_lm_model(cfg)
+    L = model.L
+    params = jax.eval_shape(model.init,
+                            jax.ShapeDtypeStruct((2,), np.uint32))
+    param_bytes = int(sum(np.prod(leaf.shape) * leaf.dtype.itemsize
+                          for leaf in jax.tree_util.tree_leaves(params)))
+    sds = jax.ShapeDtypeStruct
+    args = (params,
+            sds((U, s_max, seq + 1), jnp.int32),       # xb (token rows)
+            sds((U, s_max), jnp.int32),                # yb (unused for LM)
+            sds((U, s_max), jnp.float32),              # wb
+            sds((U, L), jnp.float32),                  # mask
+            sds((L,), jnp.float32),                    # p
+            sds((), jnp.float32),                      # eta
+            None)                                      # wmasks
+    out = {}
+    for name in DONATION_BACKENDS:
+        row = {"arch": cfg.name, "param_bytes": param_bytes}
+        for donate in (True, False):
+            bk = make_backend(name, model, donate=donate)
+            step = bk._step(True, False)
+            try:
+                ma = step.lower(*args).compile().memory_analysis()
+            except Exception as e:                      # pragma: no cover
+                row[f"{'donated' if donate else 'undonated'}_error"] = str(e)
+                continue
+            if ma is None:                              # pragma: no cover
+                continue
+            peak = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                    + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+            key = "donated" if donate else "undonated"
+            row[f"{key}_peak_bytes"] = int(peak)
+            row[f"{key}_alias_bytes"] = int(ma.alias_size_in_bytes)
+        if ("donated_peak_bytes" in row and "undonated_peak_bytes" in row
+                and row["undonated_peak_bytes"] > 0):
+            row["peak_ratio"] = round(row["donated_peak_bytes"]
+                                      / row["undonated_peak_bytes"], 4)
+            out[name] = row
+    return out
+
+
 def run(quick: bool = False) -> dict:
     cached = cached_result("backend_sweep")
     if cached is not None:
@@ -87,6 +158,15 @@ def run(quick: bool = False) -> dict:
                   f"{rec['wall_per_round_s']:8.3f}s/round "
                   f"(pad {rec['U_pad']}, {rec['devices']} dev)")
         result[f"cohort_{U}"] = row
+    donation = _donation_memory()
+    if donation:
+        result["donation"] = donation
+        for name, row in donation.items():
+            print(f"[backend_sweep] donation {name:9s} peak "
+                  f"{row['donated_peak_bytes']:,} vs "
+                  f"{row['undonated_peak_bytes']:,} bytes "
+                  f"(x{row['peak_ratio']}, aliases "
+                  f"{row['donated_alias_bytes']:,} param bytes in place)")
     save_result("backend_sweep", result)
     return result
 

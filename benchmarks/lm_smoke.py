@@ -1,0 +1,58 @@
+"""LM smoke — the reduced-arch federated LM driver end-to-end on the
+unified round runtime, timed per backend.
+
+Covers the LM path in the CI benchmark-regression gate: ``run_training``
+(Problem-2 schedule -> straggler draws -> Eq. 5 aggregation on synthetic
+token streams) runs on the ``dense`` and ``temporal`` (grad-accumulation)
+backends with donated params buffers; the gate tracks wall-clock and the
+final next-token accuracy. Emits ``experiments/results/lm_smoke.json``.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import cached_result, save_result
+
+ARCH = "qwen1.5-4b"
+BACKENDS = ("dense", "temporal")
+
+
+def run(quick: bool = False) -> dict:
+    cached = cached_result("lm_smoke")
+    if cached is not None:
+        return cached
+    from repro.launch.train import run_training
+
+    rounds = 6 if quick else 12
+    tmax = 5.0 * rounds
+    result = {}
+    for backend in BACKENDS:
+        t0 = time.time()
+        _, hist = run_training(ARCH, method="adel", rounds=rounds, tmax=tmax,
+                               U=4, seq=32, eta0=1.0, seed=0,
+                               backend=backend, solver_steps=600,
+                               eval_every=1, verbose=False)
+        wall = time.time() - t0
+        rec = {
+            "arch": ARCH,
+            "backend": backend,
+            "rounds": hist.rounds[-1] if hist.rounds else 0,
+            "wall_s": round(wall, 4),
+            "wall_per_round_s": round(
+                wall / max(hist.rounds[-1] if hist.rounds else 1, 1), 4),
+            "final_acc": hist.accuracy[-1] if hist.accuracy else None,
+            "final_loss": hist.train_loss[-1] if hist.train_loss else None,
+            "loss": [round(x, 6) for x in hist.train_loss],
+        }
+        result[backend] = rec
+        loss = ("-" if rec["final_loss"] is None
+                else f"{rec['final_loss']:.4f}")
+        acc = "-" if rec["final_acc"] is None else f"{rec['final_acc']:.4f}"
+        print(f"[lm_smoke] {backend:9s} rounds={rec['rounds']} "
+              f"loss={loss} acc={acc} wall={wall:.1f}s")
+    save_result("lm_smoke", result)
+    return result
+
+
+if __name__ == "__main__":
+    run()

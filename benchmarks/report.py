@@ -72,21 +72,23 @@ def section_roofline() -> str:
 
 
 def section_backend_sweep() -> str:
-    """Seconds/round for the three execution backends (fl.backends)."""
+    """Seconds/round for the four execution backends (fl.backends) plus
+    the donation memory comparison."""
     fn = os.path.join(RESULTS, "results", "backend_sweep.json")
     if not os.path.exists(fn):
         return ""
     with open(fn) as f:
         res = json.load(f)
     out = ["### backend_sweep (s/round)\n",
-           "| cohort | dense | chunked | shard_map | devices |",
-           "|---|---|---|---|---|"]
-    for setting, row in sorted(res.items(),
+           "| cohort | dense | chunked | shard_map | temporal | devices |",
+           "|---|---|---|---|---|---|"]
+    cohorts = {k: v for k, v in res.items() if k.startswith("cohort_")}
+    for setting, row in sorted(cohorts.items(),
                                key=lambda kv: int(kv[0].split("_")[-1])):
         if not isinstance(row, dict):
             continue
         cells = []
-        for b in ("dense", "chunked", "shard_map"):
+        for b in ("dense", "chunked", "shard_map", "temporal"):
             d = row.get(b)
             cells.append(f"{d['wall_per_round_s']:.3f}"
                          if isinstance(d, dict) else "—")
@@ -94,6 +96,38 @@ def section_backend_sweep() -> str:
                     if isinstance(d, dict)), "?")
         out.append(f"| {setting.removeprefix('cohort_')} | "
                    + " | ".join(cells) + f" | {dev} |")
+    don = res.get("donation")
+    if isinstance(don, dict) and don:
+        out += ["", "donated params buffers (compiled peak bytes, "
+                    "donated / undonated):", ""]
+        for name, row in sorted(don.items()):
+            if isinstance(row, dict) and "peak_ratio" in row:
+                out.append(f"* {name}: {row['donated_peak_bytes']:,} / "
+                           f"{row['undonated_peak_bytes']:,} "
+                           f"(x{row['peak_ratio']})")
+    out.append("")
+    return "\n".join(out)
+
+
+def section_lm_smoke() -> str:
+    """The federated LM driver on the unified runtime, per backend."""
+    fn = os.path.join(RESULTS, "results", "lm_smoke.json")
+    if not os.path.exists(fn):
+        return ""
+    with open(fn) as f:
+        res = json.load(f)
+    out = ["### lm_smoke (reduced-arch federated LM on RoundRuntime)\n",
+           "| backend | arch | rounds | token loss | token acc | s/round |",
+           "|---|---|---|---|---|---|"]
+    for backend, d in sorted(res.items()):
+        if not isinstance(d, dict):
+            continue
+        num = lambda k: (f"{d[k]:.4f}"
+                         if isinstance(d.get(k), (int, float)) else "—")
+        out.append(f"| {backend} | {d.get('arch', '?')} | "
+                   f"{d.get('rounds', '?')} | {num('final_loss')} "
+                   f"| {num('final_acc')} "
+                   f"| {num('wall_per_round_s')} |")
     out.append("")
     return "\n".join(out)
 
@@ -166,6 +200,9 @@ def section_repro() -> str:
     replan = section_replan_sweep()
     if replan:
         out.append(replan)
+    lm = section_lm_smoke()
+    if lm:
+        out.append(lm)
     return "\n".join(out)
 
 

@@ -26,7 +26,7 @@ import time
 
 SUITE_NAMES = ("fig2_mnist", "fig3_cifar", "fig4_robustness",
                "table2_budgets", "roofline", "fleet_smoke",
-               "backend_sweep", "replan_sweep")
+               "backend_sweep", "replan_sweep", "lm_smoke")
 
 # metric-field classification for the regression gate
 _TIME_KEYS = ("wall_s", "wall_per_round_s")
@@ -35,8 +35,8 @@ _ACC_KEYS = ("final_acc",)
 
 def _suites() -> dict:
     from benchmarks import (backend_sweep, fig2_mnist, fig3_cifar,
-                            fig4_robustness, fleet_smoke, replan_sweep,
-                            roofline, table2_budgets)
+                            fig4_robustness, fleet_smoke, lm_smoke,
+                            replan_sweep, roofline, table2_budgets)
     return {
         "fig2_mnist": fig2_mnist.run,
         "fig3_cifar": fig3_cifar.run,
@@ -46,6 +46,7 @@ def _suites() -> dict:
         "fleet_smoke": fleet_smoke.run,
         "backend_sweep": backend_sweep.run,
         "replan_sweep": replan_sweep.run,
+        "lm_smoke": lm_smoke.run,
     }
 
 
@@ -204,14 +205,29 @@ def _derive(name: str, result: dict) -> str:
             return f"{len(ok)}/{len(rows)} combos"
         if name == "backend_sweep":
             pieces = []
+            cohort_rows = {k: v for k, v in result.items()
+                           if k.startswith("cohort_")}
             for setting, row in sorted(
-                    result.items(),
+                    cohort_rows.items(),
                     key=lambda kv: int(kv[0].split("_")[-1])):
                 walls = "/".join(f"{row[b]['wall_per_round_s']:.2f}"
-                                 for b in ("dense", "chunked", "shard_map")
+                                 for b in ("dense", "chunked", "shard_map",
+                                           "temporal")
                                  if b in row)
                 pieces.append(f"{setting.removeprefix('cohort_')}:{walls}s")
-            return "dense/chunked/shard " + " ".join(pieces)
+            out = "dense/chunked/shard/temporal " + " ".join(pieces)
+            don = result.get("donation", {})
+            ratios = [f"{k}:x{v['peak_ratio']}" for k, v in don.items()
+                      if isinstance(v, dict) and "peak_ratio" in v]
+            if ratios:
+                out += " donate_peak " + " ".join(ratios)
+            return out
+        if name == "lm_smoke":
+            pieces = []
+            for backend, row in sorted(result.items()):
+                if isinstance(row, dict) and "final_loss" in row:
+                    pieces.append(f"{backend}:{row['final_loss']:.3f}")
+            return "token loss " + " ".join(pieces)
         if name == "replan_sweep":
             pieces = []
             for scn, row in result.items():

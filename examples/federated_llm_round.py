@@ -1,15 +1,21 @@
 """ADEL-FL on an assigned billion-scale architecture (reduced for CPU).
 
 Runs REAL federated rounds of a reduced `--arch` config on synthetic token
-streams: Problem-2 schedule -> straggler depth draws (B1) -> deadline-
-truncated layer-wise aggregation (Eq. 5) -> SGD, via the same
-``make_train_step`` that the multi-pod dry-run lowers at full scale.
+streams through the unified round runtime: Problem-2 schedule -> straggler
+depth draws (B1) -> deadline-truncated layer-wise aggregation (Eq. 5) ->
+SGD. The round loop is the same :class:`repro.fl.runtime.RoundRuntime`
+that serves the image and fleet workloads, so every execution backend
+works here — ``--backend temporal`` is the grad-accumulation client
+layout required for the big archs — and so do online re-planning
+(``--replan every-k``) and HeteroFL (``--method heterofl``).
 
 Run:  PYTHONPATH=src python examples/federated_llm_round.py --arch qwen1.5-4b
       (any of the 10 assigned --arch ids works; see repro/configs)
 """
 import argparse
+import math
 
+from repro.fl.backends import BACKENDS
 from repro.launch.train import run_training
 
 
@@ -17,18 +23,25 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-4b")
     ap.add_argument("--method", default="adel",
-                    choices=["adel", "salf", "drop", "wait"])
+                    choices=["adel", "salf", "drop", "wait", "heterofl"])
     ap.add_argument("--rounds", type=int, default=24)
     ap.add_argument("--tmax", type=float, default=120.0)
+    ap.add_argument("--backend", default="temporal", choices=list(BACKENDS))
+    ap.add_argument("--replan", default=None,
+                    choices=["never", "every-k", "drift"])
     args = ap.parse_args()
 
-    hist = run_training(args.arch, method=args.method, rounds=args.rounds,
-                        tmax=args.tmax, U=6, client_batch=4, seq=48,
-                        eta0=1.0, verbose=True)
-    first, last = hist["loss"][0], hist["loss"][-1]
-    print(f"\n[{args.arch}] {args.method}: loss {first:.3f} -> {last:.3f} "
-          f"over {hist['round'][-1]} rounds "
-          f"({hist['time'][-1]:.1f}s simulated clock)")
+    _, hist = run_training(args.arch, method=args.method, rounds=args.rounds,
+                           tmax=args.tmax, U=6, seq=48, eta0=1.0,
+                           backend=args.backend, replan=args.replan,
+                           verbose=True)
+    first, last = hist.train_loss[0], hist.train_loss[-1]
+    print(f"\n[{args.arch}] {args.method} ({args.backend}): "
+          f"token loss {first:.3f} -> {last:.3f} "
+          f"(ppl {math.exp(min(last, 30)):.1f}, "
+          f"token acc {hist.accuracy[-1]:.4f}) "
+          f"over {hist.rounds[-1]} rounds "
+          f"({hist.times[-1]:.1f}s simulated clock)")
 
 
 if __name__ == "__main__":

@@ -27,7 +27,7 @@ def main():
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--fleet-size", type=int, default=300)
     ap.add_argument("--backend", default=None,
-                    choices=["dense", "chunked", "shard_map"],
+                    choices=["dense", "chunked", "shard_map", "temporal"],
                     help="execution backend (repro.fl.backends); default "
                          "keeps the scenario's chunked engine")
     ap.add_argument("--replan", default=None,

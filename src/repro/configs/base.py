@@ -226,7 +226,9 @@ class FleetConfig:
     availability_kwargs: tuple = ()
     cohort_size: int = 32          # U clients planned per round
     cohort_strategy: str = "uniform"   # uniform | power-of-choice | stratified
-    backend: str = "chunked"       # fl.backends: dense | chunked | shard_map
+    # execution backend (repro.fl.backends):
+    # dense | chunked | shard_map | temporal
+    backend: str = "chunked"
     chunk_size: int = 16           # client-shard axis chunk (chunked backend)
     # online re-planning block (repro.core.replan): trigger "never" keeps
     # the static offline schedule; "every-k" / "drift" re-solve the

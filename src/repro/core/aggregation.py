@@ -30,6 +30,7 @@ import jax.numpy as jnp
 
 __all__ = [
     "layer_coefficients",
+    "weight_by_layer",
     "aggregate_grads",
     "aggregate_grads_chunk",
     "aggregate_grads_local",
@@ -58,6 +59,25 @@ def layer_coefficients(mask: jnp.ndarray, p: jnp.ndarray,
     if bias_correct:
         scale = scale / jnp.maximum(1.0 - p, 1e-6)
     return mask * (scale / denom)[None, :]        # (U, L)
+
+
+def weight_by_layer(g: jnp.ndarray, ids: jnp.ndarray,
+                    c_row: jnp.ndarray) -> jnp.ndarray:
+    """Scale ONE client's grad/delta leaf by its per-layer coefficient row.
+
+    This is the Eq. 5 coefficient fold used by temporal (grad-accumulation)
+    client layouts: summing ``weight_by_layer(g_u, ids, c[u])`` over clients
+    u equals :func:`aggregate_grads` with coefficients ``c`` — but the
+    accumulation never holds more than one gradient pytree.
+
+    ``ids``: () whole-tensor layer id, or (L,) stacked-axis ids; ``c_row``:
+    (L_total,) this client's coefficients.
+    """
+    ids = jnp.asarray(ids)
+    if ids.ndim == 0:
+        return g * c_row[ids]
+    w = jnp.take(c_row, ids)                       # (L,)
+    return g * w.reshape((-1,) + (1,) * (g.ndim - 1))
 
 
 def _weight_leaf(g: jnp.ndarray, ids: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:

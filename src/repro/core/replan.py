@@ -100,6 +100,9 @@ class ReplanEvent:
     m: float                   # re-solved global batch-scaling parameter
     objective: float           # Theorem-1 bound of the re-solved tail
     steps: int                 # warm-start Adam steps spent
+    # deadline budget credited back from rounds skipped (empty cohort)
+    # since the previous (re-)plan — already part of budget_left
+    skipped_credit: float = 0.0
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -117,10 +120,14 @@ def remaining_horizon(cfg: AnalysisConfig, t: int, budget_left: float,
 class Replanner:
     """Trigger bookkeeping + warm-start re-solve + schedule splice.
 
-    Owned by :meth:`repro.fl.runtime.RoundRuntime.run`; stateless apart from
-    the reachable-count reference of the last (re-)plan. The policy must be
-    schedule-driven (ADEL) — re-planning mutates ``policy.schedule`` in
-    place so the next ``policy.round(t)`` reads the new tail.
+    Owned by :meth:`repro.fl.runtime.RoundRuntime.run`; stateless apart
+    from the reachable-count reference of the last (re-)plan and the
+    deadline budget credited back from skipped empty rounds
+    (:meth:`note_skip` — a pending credit forces the next ``should_replan``
+    to fire so the stranded budget is re-allocated immediately). The
+    policy must be schedule-driven (ADEL) — re-planning mutates
+    ``policy.schedule`` in place so the next ``policy.round(t)`` reads the
+    new tail.
     """
 
     def __init__(self, cfg: ReplanConfig, policy, rounds: int,
@@ -142,6 +149,34 @@ class Replanner:
         self.rate_max = None if rate_max is None else float(rate_max)
         self.ref_reachable: Optional[int] = None
         self.events: list[ReplanEvent] = []
+        # budget credited back from skipped empty rounds since the last
+        # (re-)plan; a pending credit forces a re-solve at the next
+        # executed round so the stranded deadlines are re-allocated
+        self.skipped_credit: float = 0.0
+        self._skip_pending: bool = False
+
+    # ------------------------------------------------------------------
+    def note_skip(self, t: int) -> float:
+        """Round ``t`` never started (empty cohort): credit its un-spent
+        deadline back.
+
+        The skipped round's historical deadline is zeroed in the spliced
+        schedule — it spent nothing, so the consumed-rounds record must not
+        claim its budget — and a re-solve is forced at the next executed
+        round, whose ``budget_left = T_max - elapsed`` then sees the true
+        remaining budget including the credit. Returns the credited
+        deadline.
+        """
+        sch: Schedule = self.policy.schedule
+        T = np.asarray(sch.T, np.float64).copy()
+        if not 0 <= t < len(T):
+            return 0.0
+        credited = float(T[t])
+        T[t] = 0.0
+        self.policy.schedule = dataclasses.replace(sch, T=T)
+        self.skipped_credit += credited
+        self._skip_pending = True
+        return credited
 
     # ------------------------------------------------------------------
     def should_replan(self, t: int, reachable: int) -> bool:
@@ -150,6 +185,10 @@ class Replanner:
             return False
         if t == 0 or self.rounds - t < max(self.cfg.min_rounds_left, 2):
             return False
+        if self._skip_pending:
+            # stranded deadline budget from skipped rounds: re-allocate it
+            # now, whatever the configured trigger cadence says
+            return True
         if self.cfg.trigger == "every-k":
             return t % max(self.cfg.every, 1) == 0
         if self.cfg.trigger == "drift":
@@ -194,10 +233,13 @@ class Replanner:
         self.policy.schedule = Schedule(T=T, m=sch.m, objective=sch.objective,
                                         p1=p1, solver=f"{sch.solver}-replan")
         self.ref_reachable = int(reachable)
+        credit, self.skipped_credit = self.skipped_credit, 0.0
+        self._skip_pending = False
         ev = ReplanEvent(round=t, reachable=int(reachable), U_est=int(view.U),
                          budget_left=float(budget_left),
                          T_tail=[float(x) for x in sch.T],
                          m=float(sch.m), objective=float(sch.objective),
-                         steps=int(self.cfg.steps))
+                         steps=int(self.cfg.steps),
+                         skipped_credit=float(credit))
         self.events.append(ev)
         return ev

@@ -18,16 +18,29 @@ computed and aggregated:
   :func:`repro.core.aggregation.aggregate_grads_local` (``jax.lax.psum``).
   Testable on a CPU host via
   ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+* :class:`TemporalBackend`  — clients are grad-accumulation microbatches:
+  ``jax.lax.scan`` over the cohort axis with the Eq. 5 coefficient fold of
+  :func:`repro.core.aggregation.weight_by_layer` (the big-arch LM layout
+  from ``launch.steps.make_train_step``), so peak memory is ONE delta
+  pytree regardless of cohort size. Required for 480B-class architectures.
 
-All three produce the same updates up to float summation order, which
+All four produce the same updates up to float summation order, which
 ``tests/test_backends.py`` asserts end-to-end. Each backend keeps its own
 jit cache keyed by ``(bias_correct, hetero)``, so retracing happens at most
 once per aggregation rule; HeteroFL width-overlap aggregation
 (:func:`repro.core.aggregation.hetero_overlap_partials`) flows through the
-same chunk/psum machinery as the layer-wise rule.
+same chunk/psum/scan machinery as the layer-wise rule.
+
+Every backend DONATES the incoming ``params`` buffers to its round step
+(``jax.jit(..., donate_argnums=0)``): the server update aliases the old
+weights in place, halving peak parameter memory on large models. The
+runtime's round loop never reads a params buffer after handing it to
+``run_round`` — callers that do must construct the backend with
+``donate=False``. The chunked backend only donates in its final apply step
+(every chunk partial reads the same params).
 
 Backends are selected by name: ``make_backend("dense" | "chunked" |
-"shard_map", model, ...)``.
+"shard_map" | "temporal", model, ...)``.
 """
 from __future__ import annotations
 
@@ -39,8 +52,9 @@ import jax.numpy as jnp
 from repro.core.aggregation import (aggregate_grads, aggregate_grads_chunk,
                                     aggregate_grads_local,
                                     hetero_overlap_mean,
-                                    hetero_overlap_partials)
-from repro.fl.client import batched_client_deltas
+                                    hetero_overlap_partials,
+                                    layer_coefficients, weight_by_layer)
+from repro.fl.client import batched_client_deltas, local_update
 
 try:                                     # jax >= 0.5
     from jax import shard_map as _shard_map
@@ -49,11 +63,11 @@ except ImportError:                      # jax 0.4.x
 from jax.sharding import PartitionSpec as P
 
 __all__ = ["BACKENDS", "ExecutionBackend", "DenseBackend", "ChunkedBackend",
-           "ShardMapBackend", "make_backend"]
+           "ShardMapBackend", "TemporalBackend", "make_backend"]
 
 PyTree = Any
 
-BACKENDS = ("dense", "chunked", "shard_map")
+BACKENDS = ("dense", "chunked", "shard_map", "temporal")
 
 
 class ExecutionBackend:
@@ -65,14 +79,25 @@ class ExecutionBackend:
     zero-contributor probabilities ``p``, the round's learning rate, and —
     for HeteroFL rounds — a width-mask pytree with leading axis U_pad.
     It returns the updated global params.
+
+    With ``donate=True`` (default) the round step donates the ``params``
+    argument: the input buffers are invalidated once the step runs, so the
+    caller must treat ``run_round`` as consuming its params.
     """
 
     name = "base"
 
-    def __init__(self, model, *, local_iters: int = 1, l2: float = 0.0):
+    def __init__(self, model, *, local_iters: int = 1, l2: float = 0.0,
+                 donate: bool = True):
         self.model = model
         self.local_iters = int(local_iters)
         self.l2 = float(l2)
+        self.donate = bool(donate)
+
+    @property
+    def _donate_params(self) -> tuple:
+        """donate_argnums for round steps whose argument 0 is params."""
+        return (0,) if self.donate else ()
 
     def cohort_pad(self, U: int) -> int:
         """Smallest padded cohort width >= U this backend can execute."""
@@ -83,7 +108,7 @@ class ExecutionBackend:
         raise NotImplementedError
 
     def describe(self) -> dict:
-        return {"backend": self.name}
+        return {"backend": self.name, "donate": self.donate}
 
     # shared sub-computations -------------------------------------------
     def _deltas(self, params, xb, yb, wb, eta):
@@ -97,14 +122,14 @@ class DenseBackend(ExecutionBackend):
 
     name = "dense"
 
-    def __init__(self, model, *, local_iters: int = 1, l2: float = 0.0):
-        super().__init__(model, local_iters=local_iters, l2=l2)
+    def __init__(self, model, *, local_iters: int = 1, l2: float = 0.0,
+                 donate: bool = True):
+        super().__init__(model, local_iters=local_iters, l2=l2, donate=donate)
         self._steps: dict[tuple, Callable] = {}
 
     def _step(self, bias_correct: bool, hetero: bool) -> Callable:
         key = (bias_correct, hetero)
         if key not in self._steps:
-            @jax.jit
             def step(params, xb, yb, wb, mask, p, eta, wmasks):
                 deltas = self._deltas(params, xb, yb, wb, eta)
                 ids = self.model.layer_ids(params)
@@ -117,7 +142,8 @@ class DenseBackend(ExecutionBackend):
                                           bias_correct=bias_correct)
                 return jax.tree.map(lambda w, d: w - d, params, agg)
 
-            self._steps[key] = step
+            self._steps[key] = jax.jit(step,
+                                       donate_argnums=self._donate_params)
         return self._steps[key]
 
     def run_round(self, params, xb, yb, wb, mask, p, eta, *,
@@ -133,21 +159,27 @@ class ChunkedBackend(ExecutionBackend):
     aggregate uses the GLOBAL per-layer contributor counts, so summing the
     partials over chunks equals the dense aggregation on the concatenated
     client axis. A single-chunk cohort falls through to the dense step.
+
+    Every chunk partial reads the same ``params``, so only the final apply
+    step (``params - agg``) donates the params buffers.
     """
 
     name = "chunked"
 
     def __init__(self, model, *, chunk_size: int = 16, local_iters: int = 1,
-                 l2: float = 0.0):
-        super().__init__(model, local_iters=local_iters, l2=l2)
+                 l2: float = 0.0, donate: bool = True):
+        super().__init__(model, local_iters=local_iters, l2=l2, donate=donate)
         self.chunk_size = max(int(chunk_size), 1)
-        self._dense = DenseBackend(model, local_iters=local_iters, l2=l2)
+        self._dense = DenseBackend(model, local_iters=local_iters, l2=l2,
+                                   donate=donate)
         self._chunks: dict[tuple, Callable] = {}
         self._apply = jax.jit(
-            lambda params, agg: jax.tree.map(lambda w, d: w - d, params, agg))
+            lambda params, agg: jax.tree.map(lambda w, d: w - d, params, agg),
+            donate_argnums=self._donate_params)
         self._apply_hetero = jax.jit(
             lambda params, num, den: jax.tree.map(
-                lambda w, d: w - d, params, hetero_overlap_mean(num, den)))
+                lambda w, d: w - d, params, hetero_overlap_mean(num, den)),
+            donate_argnums=self._donate_params)
 
     def cohort_pad(self, U: int) -> int:
         c = min(self.chunk_size, int(U))   # never vmap dead padding
@@ -156,6 +188,7 @@ class ChunkedBackend(ExecutionBackend):
     def _chunk_step(self, bias_correct: bool, hetero: bool) -> Callable:
         key = (bias_correct, hetero)
         if key not in self._chunks:
+            # NEVER donate params here: the same buffers feed every chunk
             @jax.jit
             def chunk_partial(params, xb, yb, wb, mask_c, p, eta, counts,
                               wmasks_c):
@@ -199,7 +232,7 @@ class ChunkedBackend(ExecutionBackend):
         return self._apply(params, agg)
 
     def describe(self):
-        return {"backend": self.name, "chunk_size": self.chunk_size}
+        return {**super().describe(), "chunk_size": self.chunk_size}
 
 
 class ShardMapBackend(ExecutionBackend):
@@ -214,8 +247,8 @@ class ShardMapBackend(ExecutionBackend):
     name = "shard_map"
 
     def __init__(self, model, *, mesh=None, local_iters: int = 1,
-                 l2: float = 0.0):
-        super().__init__(model, local_iters=local_iters, l2=l2)
+                 l2: float = 0.0, donate: bool = True):
+        super().__init__(model, local_iters=local_iters, l2=l2, donate=donate)
         self._mesh = mesh
         self._steps: dict[tuple, Callable] = {}
 
@@ -268,7 +301,8 @@ class ShardMapBackend(ExecutionBackend):
                 local_fn, mesh=mesh,
                 in_specs=(spec_r, spec_c, spec_c, spec_c, spec_c, spec_r,
                           spec_r, wm_spec),
-                out_specs=spec_r, check_rep=False))
+                out_specs=spec_r, check_rep=False),
+                donate_argnums=self._donate_params)
         return self._steps[key]
 
     def run_round(self, params, xb, yb, wb, mask, p, eta, *,
@@ -277,22 +311,108 @@ class ShardMapBackend(ExecutionBackend):
         return step(params, xb, yb, wb, mask, p, eta, wmasks)
 
     def describe(self):
-        return {"backend": self.name, "shards": self.n_shards,
+        return {**super().describe(), "shards": self.n_shards,
                 "mesh_axes": list(self.mesh.axis_names)}
 
 
+class TemporalBackend(ExecutionBackend):
+    """Clients as grad-accumulation microbatches: ``lax.scan`` over the
+    cohort axis, folding the Eq. 5 coefficients into the accumulation.
+
+    This is the big-arch LM client layout of
+    ``repro.launch.steps.make_train_step(mode="temporal")`` hoisted into the
+    unified runtime: each scan step runs ONE client's local update and adds
+    its coefficient-weighted delta (:func:`repro.core.aggregation.
+    weight_by_layer`) into a single f32 accumulator, so peak memory is one
+    delta pytree regardless of cohort size — the layout required for the
+    480B-class architectures. HeteroFL rounds accumulate the width-overlap
+    (num, den) partials instead and finish with
+    :func:`repro.core.aggregation.hetero_overlap_mean`.
+    """
+
+    name = "temporal"
+
+    def __init__(self, model, *, local_iters: int = 1, l2: float = 0.0,
+                 donate: bool = True):
+        super().__init__(model, local_iters=local_iters, l2=l2, donate=donate)
+        self._steps: dict[tuple, Callable] = {}
+
+    def _step(self, bias_correct: bool, hetero: bool) -> Callable:
+        key = (bias_correct, hetero)
+        if key not in self._steps:
+            model = self.model
+
+            def delta_u(params, x_u, y_u, w_u, eta):
+                return local_update(model.loss, params, x_u, y_u, w_u, eta,
+                                    local_iters=self.local_iters, l2=self.l2)
+
+            def step(params, xb, yb, wb, mask, p, eta, wmasks):
+                ids = model.layer_ids(params)
+                zeros32 = jax.tree.map(
+                    lambda w: jnp.zeros(w.shape, jnp.float32), params)
+                if hetero:
+                    part = mask[:, 0]                       # (U,)
+
+                    def body(acc, inp):
+                        x_u, y_u, w_u, pt_u, wm_u = inp
+                        d = delta_u(params, x_u, y_u, w_u, eta)
+                        num, den = acc
+                        num = jax.tree.map(
+                            lambda n, dd, wm: n + pt_u * wm
+                            * dd.astype(jnp.float32), num, d, wm_u)
+                        den = jax.tree.map(
+                            lambda dn, wm: dn + pt_u * wm, den, wm_u)
+                        return (num, den), None
+
+                    (num, den), _ = jax.lax.scan(
+                        body, (zeros32, zeros32), (xb, yb, wb, part, wmasks))
+                    agg = hetero_overlap_mean(num, den)
+                else:
+                    coeffs = layer_coefficients(mask, p,
+                                                bias_correct=bias_correct)
+
+                    def body(acc, inp):
+                        x_u, y_u, w_u, c_row = inp
+                        d = delta_u(params, x_u, y_u, w_u, eta)
+                        dw = jax.tree.map(
+                            lambda dd, idl: weight_by_layer(
+                                dd.astype(jnp.float32), idl, c_row), d, ids)
+                        return jax.tree.map(jnp.add, acc, dw), None
+
+                    agg, _ = jax.lax.scan(body, zeros32,
+                                          (xb, yb, wb, coeffs))
+                return jax.tree.map(
+                    lambda w, d: (w.astype(jnp.float32)
+                                  - d).astype(w.dtype), params, agg)
+
+            self._steps[key] = jax.jit(step,
+                                       donate_argnums=self._donate_params)
+        return self._steps[key]
+
+    def run_round(self, params, xb, yb, wb, mask, p, eta, *,
+                  bias_correct, wmasks=None):
+        step = self._step(bool(bias_correct), wmasks is not None)
+        return step(params, xb, yb, wb, mask, p, eta, wmasks)
+
+
 def make_backend(backend, model, *, chunk_size: int = 16, mesh=None,
-                 local_iters: int = 1, l2: float = 0.0) -> ExecutionBackend:
-    """Resolve a backend by name (``"dense" | "chunked" | "shard_map"``) or
-    pass an :class:`ExecutionBackend` instance through unchanged."""
+                 local_iters: int = 1, l2: float = 0.0,
+                 donate: bool = True) -> ExecutionBackend:
+    """Resolve a backend by name (``"dense" | "chunked" | "shard_map" |
+    "temporal"``) or pass an :class:`ExecutionBackend` instance through
+    unchanged."""
     if isinstance(backend, ExecutionBackend):
         return backend
     if backend == "dense":
-        return DenseBackend(model, local_iters=local_iters, l2=l2)
+        return DenseBackend(model, local_iters=local_iters, l2=l2,
+                            donate=donate)
     if backend == "chunked":
         return ChunkedBackend(model, chunk_size=chunk_size,
-                              local_iters=local_iters, l2=l2)
+                              local_iters=local_iters, l2=l2, donate=donate)
     if backend == "shard_map":
         return ShardMapBackend(model, mesh=mesh, local_iters=local_iters,
-                               l2=l2)
+                               l2=l2, donate=donate)
+    if backend == "temporal":
+        return TemporalBackend(model, local_iters=local_iters, l2=l2,
+                               donate=donate)
     raise ValueError(f"unknown backend {backend!r}; known: {BACKENDS}")

@@ -1,27 +1,45 @@
-"""Unified federated round runtime.
+"""Unified federated round runtime — ONE round loop for every workload.
 
 One :class:`RoundRuntime` owns everything a federated round loop needs,
-independent of how the cohort's compute is executed:
+independent of the task being trained (image classification, synthetic
+fleet workloads, big-arch LM token streams) and of how the cohort's
+compute is executed:
 
 * per-round policy planning through the ``view=`` kwarg of
   :meth:`repro.core.baselines.Policy.round`,
 * cohort stacking / padding to jit-stable fixed shapes (padded rows carry
   an all-zero mask, batch size 1, and zero data, so they contribute 0),
-* ``s_max`` probing (:func:`probe_s_max`),
+* ``s_max`` probing (:func:`probe_s_max`, vectorized over the FULL
+  schedule so non-monotone re-planned deadline tails can never plan a
+  batch the executor would silently clip),
 * HeteroFL width-mask derivation (cached per distinct width-ratio vector),
 * the simulated wall-clock under Requirements R1 (max R rounds) and
   R2 (total time <= T_max),
+* online re-planning (:mod:`repro.core.replan`), including crediting the
+  un-spent deadline of skipped empty rounds back to the next re-solve,
 * eval cadence and the :class:`History` record.
 
-HOW a round executes is delegated to an
-:class:`repro.fl.backends.ExecutionBackend` (``dense`` / ``chunked`` /
-``shard_map``), and WHERE the clients come from is delegated to a cohort
-source: :class:`StaticCohortSource` replays one pre-stacked population
-every round (``repro.fl.server.run_federated``), while the fleet engine's
-source samples availability + cohort per round
-(``repro.fleet.engine.run_fleet``). Policies, width masks, availability
-models, and future hooks are therefore written once and work under every
-backend.
+The three axes of variation are all pluggable:
+
+* WHAT is trained is a task adapter (:mod:`repro.fl.tasks`): a
+  :class:`~repro.fl.tasks.Task` bundles a :class:`ModelAPI`, a data source
+  (classification ``(U, n, feat)`` arrays or LM token rows
+  ``(U, n, seq+1)`` with shifted-label batching inside the model's loss),
+  and eval metrics (classification accuracy vs token accuracy /
+  perplexity) — supplied to :meth:`RoundRuntime.run` as ``eval_fn``.
+* HOW a round executes is an :class:`repro.fl.backends.ExecutionBackend`
+  (``dense`` / ``chunked`` / ``shard_map`` / ``temporal``), all of which
+  donate the incoming ``params`` buffers to the round step.
+* WHERE the clients come from is a cohort source:
+  :class:`StaticCohortSource` replays one pre-stacked population every
+  round (``repro.fl.server.run_federated`` and the LM driver
+  ``repro.launch.train``), while the fleet engine's source samples
+  availability + cohort per round (``repro.fleet.engine.run_fleet``).
+
+Per-round observers (checkpointing, logging) hook in via the ``on_round``
+callback of :meth:`RoundRuntime.run`. Policies, width masks, availability
+models, and re-planning are therefore written once and work under every
+backend and every task.
 """
 from __future__ import annotations
 
@@ -108,8 +126,22 @@ def eval_metrics(model: ModelAPI, params: PyTree, test_x: jnp.ndarray,
 
 
 def probe_s_max(policy: Policy, rounds: int, *, view=None) -> int:
-    """Largest batch size the policy can plan (probed at the first and last
-    round), so per-client minibatches can be padded to one fixed width."""
+    """Largest batch size the policy can plan over the FULL horizon, so
+    per-client minibatches can be padded to one fixed width.
+
+    Schedule-driven policies (ADEL) are probed with one vectorized
+    ``Schedule.batch_sizes`` evaluation over EVERY round's deadline — a
+    re-planned schedule need not be monotone, so probing only the
+    endpoints could under-estimate a mid-schedule peak and silently clip
+    batches. Fixed-deadline policies plan the same batch every round and
+    keep the cheap endpoint probe.
+    """
+    cfg = policy._resolve(view) if hasattr(policy, "_resolve") else view
+    sch = getattr(policy, "schedule", None)
+    R = max(int(rounds), 1)
+    if sch is not None and cfg is not None and len(np.asarray(sch.T)) >= R:
+        S = sch.batch_sizes(cfg)[:R]            # (R, U), all rounds at once
+        return int(S.max())
     probe = [policy.round(jax.random.PRNGKey(0), t, view=view)
              for t in (0, max(rounds - 1, 0))]
     return int(max(float(jnp.max(pl.batch_sizes)) for pl in probe))
@@ -119,11 +151,13 @@ def probe_s_max(policy: Policy, rounds: int, *, view=None) -> int:
 class Cohort:
     """One round's stacked client data, as produced by a cohort source.
 
-    ``x``: (U_act, n_pad, ...) inputs, ``y``: (U_act, n_pad) labels,
-    ``counts``: (U_act,) valid samples per client. ``view`` is the
-    per-round AnalysisConfig the policy should plan against (None keeps
-    the policy's static config), ``available`` the reachable-device count
-    (None outside fleet runs).
+    ``x``: (U_act, n_pad, ...) inputs — trailing dims are task-defined
+    (``(feat...)`` for classification, ``(seq+1,)`` token rows for LM);
+    ``y``: (U_act, n_pad) labels (all-zero for tasks whose loss derives
+    labels from ``x``), ``counts``: (U_act,) valid samples per client.
+    ``view`` is the per-round AnalysisConfig the policy should plan against
+    (None keeps the policy's static config), ``available`` the
+    reachable-device count (None outside fleet runs).
     """
 
     x: Any
@@ -155,18 +189,21 @@ class StaticCohortSource:
 class RoundRuntime:
     """The single federated round loop, parameterized by execution backend.
 
-    ``backend`` is a name (``"dense" | "chunked" | "shard_map"``) or an
-    :class:`repro.fl.backends.ExecutionBackend` instance; ``chunk_size`` /
-    ``mesh`` configure the chunked / shard_map backends.
+    ``backend`` is a name (``"dense" | "chunked" | "shard_map" |
+    "temporal"``) or an :class:`repro.fl.backends.ExecutionBackend`
+    instance; ``chunk_size`` / ``mesh`` configure the chunked / shard_map
+    backends. ``donate=False`` disables params-buffer donation in the
+    round steps (callers that re-read params they handed to the backend).
     """
 
     def __init__(self, model: ModelAPI, policy: Policy, *,
                  backend="dense", chunk_size: int = 16, mesh=None,
-                 local_iters: int = 1, l2: float = 0.0):
+                 local_iters: int = 1, l2: float = 0.0, donate: bool = True):
         self.model = model
         self.policy = policy
         self.backend = make_backend(backend, model, chunk_size=chunk_size,
-                                    mesh=mesh, local_iters=local_iters, l2=l2)
+                                    mesh=mesh, local_iters=local_iters, l2=l2,
+                                    donate=donate)
         self._wmask_cache: dict[bytes, PyTree] = {}
 
     # ------------------------------------------------------------------
@@ -212,26 +249,45 @@ class RoundRuntime:
 
     # ------------------------------------------------------------------
     def run(self, source, *, rounds: int, T_max: float, eta, s_max: int,
-            key: jax.Array, test_x, test_y, eval_every: int = 1,
+            key: jax.Array, test_x=None, test_y=None, eval_every: int = 1,
             verbose: bool = False, method: str = "",
-            replan=None) -> tuple[PyTree, History]:
+            replan=None, eval_fn: Optional[Callable] = None,
+            on_round: Optional[Callable] = None) -> tuple[PyTree, History]:
         """Run up to ``rounds`` rounds, stopping when the simulated clock
         exceeds ``T_max``; returns ``(params, History)``.
+
+        ``eval_fn`` (``params -> (metric, loss)``) supplies the task's eval
+        metrics — token accuracy / token CE for LM tasks
+        (:meth:`repro.fl.tasks.Task.eval_fn`); when None the classification
+        default :func:`eval_metrics` runs over ``test_x``/``test_y``.
+
+        ``on_round`` (``(t, params, hist) -> None``) is called after every
+        EXECUTED round — the checkpointing hook of the LM training driver.
 
         ``replan`` (None | trigger name | :class:`repro.core.replan.
         ReplanConfig`) enables online re-solving of the remaining-horizon
         Problem 2 when churn shifts the reachable population: the trigger is
         evaluated before each round against the cohort source's reachable
         count, the re-solve warm-starts from the incumbent schedule tail,
-        and each event is appended to ``History.replans``. Sources may
-        expose ``replan_view(t, budget_left, eta_tail)`` to re-estimate the
-        population view (the fleet source does); without it the policy's
-        static config is restricted to the remaining horizon.
+        and each event is appended to ``History.replans``. A round whose
+        cohort is empty (``round_cohort`` returns None) never starts; its
+        planned deadline is credited back to the replanner
+        (:meth:`repro.core.replan.Replanner.note_skip`), which zeroes the
+        stranded historical deadline and forces a re-solve at the next
+        executed round so the un-spent budget is re-allocated immediately.
+        Sources may expose ``replan_view(t, budget_left, eta_tail)`` to
+        re-estimate the population view (the fleet source does); without it
+        the policy's static config is restricted to the remaining horizon.
         """
         model, policy, backend = self.model, self.policy, self.backend
         if getattr(policy, "name", "") == "heterofl" and \
                 model.width_masks is None:
             raise ValueError("model does not support HeteroFL width masks")
+        if eval_fn is None:
+            if test_x is None:
+                raise ValueError("run() needs either eval_fn or "
+                                 "test_x/test_y")
+            eval_fn = lambda p: eval_metrics(model, p, test_x, test_y)
         replan = make_replan(replan)
         replanner = (Replanner(replan, policy, rounds, eta, s_max=s_max,
                                rate_max=getattr(source, "plan_rate_max",
@@ -246,7 +302,12 @@ class RoundRuntime:
         for t in range(rounds):
             cohort = source.round_cohort(t)
             if cohort is None:
-                continue  # nobody reachable: the round never starts
+                # nobody reachable: the round never starts and spends
+                # nothing — credit its planned deadline back so the next
+                # re-solve re-allocates it instead of stranding it
+                if replanner is not None:
+                    replanner.note_skip(t)
+                continue
             if replanner is not None:
                 reachable = (cohort.available if cohort.available is not None
                              else source.cohort_size)
@@ -278,7 +339,7 @@ class RoundRuntime:
                                        wmasks=wmasks)
             elapsed += plan.elapsed
             if (t % eval_every == 0) or (t == rounds - 1):
-                acc, loss = eval_metrics(model, params, test_x, test_y)
+                acc, loss = eval_fn(params)
                 hist.times.append(elapsed)
                 hist.rounds.append(t + 1)
                 hist.accuracy.append(acc)
@@ -293,4 +354,6 @@ class RoundRuntime:
                     print(f"[{hist.method}] round {t+1:3d} {fleet_bit}"
                           f"time {elapsed:9.2f} "
                           f"deadline {plan.elapsed:7.3f} acc {acc:.4f}")
+            if on_round is not None:
+                on_round(t, params, hist)
         return params, hist

@@ -36,7 +36,8 @@ def run_federated(model: ModelAPI, policy: Policy, cfg: AnalysisConfig,
                   l2: float = 0.0, s_max: int | None = None,
                   eval_every: int = 1, verbose: bool = False,
                   backend="dense", chunk_size: int = 16,
-                  mesh=None, replan=None) -> tuple[PyTree, History]:
+                  mesh=None, replan=None, donate: bool = True,
+                  eval_fn=None, on_round=None) -> tuple[PyTree, History]:
     """Run up to R rounds, stopping when the simulated clock exceeds T_max.
 
     ``replan`` (None | trigger name | ``repro.core.replan.ReplanConfig``)
@@ -44,6 +45,11 @@ def run_federated(model: ModelAPI, policy: Policy, cfg: AnalysisConfig,
     only); the static population never drifts, so ``every-k`` is the only
     trigger that fires here — it re-solves the tail against the same
     constants with the exact un-spent budget.
+
+    ``eval_fn`` / ``on_round`` / ``donate`` are forwarded to
+    :meth:`repro.fl.runtime.RoundRuntime.run` — task-specific eval metrics
+    (:mod:`repro.fl.tasks`), a per-round observer (checkpointing), and
+    params-buffer donation in the backend round steps.
     """
     eta = cfg.eta if eta is None else np.asarray(eta, np.float32)
     if s_max is None:
@@ -52,9 +58,10 @@ def run_federated(model: ModelAPI, policy: Policy, cfg: AnalysisConfig,
                         int(client_y.shape[1])), 2)
     runtime = RoundRuntime(model, policy, backend=backend,
                            chunk_size=chunk_size, mesh=mesh,
-                           local_iters=local_iters, l2=l2)
+                           local_iters=local_iters, l2=l2, donate=donate)
     source = StaticCohortSource(client_x, client_y, n_per_client)
     return runtime.run(source, rounds=cfg.R, T_max=cfg.T_max, eta=eta,
                        s_max=s_max, key=key, test_x=test_x, test_y=test_y,
                        eval_every=eval_every, verbose=verbose,
-                       method=policy.name, replan=replan)
+                       method=policy.name, replan=replan, eval_fn=eval_fn,
+                       on_round=on_round)

@@ -1,0 +1,293 @@
+"""Task adapters: what the unified round runtime trains and evaluates.
+
+A :class:`Task` bundles the three task-specific pieces the
+:class:`repro.fl.runtime.RoundRuntime` needs so the round loop itself can
+stay workload-agnostic:
+
+* a :class:`repro.fl.runtime.ModelAPI` (init / loss / predict / layer_ids
+  / optional HeteroFL width masks),
+* a data source in cohort form — classification tasks carry
+  ``(U, n, feat...)`` inputs with integer labels, LM tasks carry
+  ``(U, n, seq+1)`` token ROWS whose shifted-label split
+  ``tok = x[:, :-1], lab = x[:, 1:]`` happens INSIDE the model's loss, so
+  :func:`repro.fl.client.sample_client_batches` handles both payloads
+  identically (the label array is all-zero and unused for LM),
+* eval metrics — classification accuracy + head loss
+  (:func:`repro.fl.runtime.eval_metrics`) vs next-token accuracy + token
+  CE / perplexity (:func:`lm_eval_metrics`).
+
+:func:`make_lm_model` adapts the big-arch transformer stack
+(:mod:`repro.models.transformer`) to the ``ModelAPI`` contract — including
+FFN-hidden-width HeteroFL masks, so width-scaling policies run on LM
+configs through every execution backend. :func:`lm_task` builds the
+synthetic-token-stream task the LM training driver
+(:mod:`repro.launch.train`) runs, and :func:`lm_fleet_data` packages the
+same streams as a :class:`repro.fleet.engine.FleetData` so LM workloads run
+against simulated device fleets (availability, cohort sampling,
+re-planning) unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.data.synthetic import make_lm_dataset
+from repro.fl.runtime import ModelAPI, StaticCohortSource, eval_metrics
+
+PyTree = Any
+
+__all__ = ["Task", "classification_task", "lm_task", "lm_fleet_data",
+           "make_lm_model", "lm_eval_metrics"]
+
+
+# ---------------------------------------------------------------------------
+# the Task bundle
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Task:
+    """One workload for the unified round runtime.
+
+    ``client_x``/``client_y``/``counts`` are the pre-stacked population
+    (what :class:`repro.fl.runtime.StaticCohortSource` replays every
+    round); ``test_x``/``test_y`` the held-out eval split. ``kind``
+    selects the eval metrics: ``"classification"`` (accuracy + head loss)
+    or ``"lm"`` (next-token accuracy + token CE).
+    """
+
+    model: ModelAPI
+    client_x: Any
+    client_y: Any
+    counts: Any
+    test_x: Any
+    test_y: Any = None
+    kind: str = "classification"
+    name: str = "task"
+
+    @property
+    def n_per_client(self) -> int:
+        """Padded per-client pool size (caps the s_max probe)."""
+        return int(self.client_y.shape[1])
+
+    def source(self) -> StaticCohortSource:
+        return StaticCohortSource(jnp.asarray(self.client_x),
+                                  jnp.asarray(self.client_y),
+                                  jnp.asarray(self.counts))
+
+    def eval_fn(self) -> Callable[[PyTree], tuple[float, float]]:
+        """``params -> (metric, loss)`` for :meth:`RoundRuntime.run`."""
+        if self.kind == "lm":
+            test = jnp.asarray(self.test_x)
+            return lambda params: lm_eval_metrics(self.model, params, test)
+        tx, ty = jnp.asarray(self.test_x), jnp.asarray(self.test_y)
+        return lambda params: eval_metrics(self.model, params, tx, ty)
+
+
+def classification_task(model: ModelAPI, client_x, client_y, counts,
+                        test_x, test_y, *, name: str = "") -> Task:
+    """Wrap pre-stacked classification arrays (the ``run_federated``
+    layout) as a :class:`Task`."""
+    return Task(model=model, client_x=client_x, client_y=client_y,
+                counts=counts, test_x=test_x, test_y=test_y,
+                kind="classification", name=name or model.name)
+
+
+# ---------------------------------------------------------------------------
+# LM model adapter over repro.models.transformer
+# ---------------------------------------------------------------------------
+
+def _lm_width_masks(cfg: ArchConfig):
+    """FFN-hidden-width HeteroFL masks for the stacked transformer params.
+
+    Client u updates the first ``ceil(r_u * F)`` hidden units of every
+    block's FFN (dense SwiGLU ``wg``/``wu``/``wd``, MoE experts, shared and
+    dense-residual FFNs) — the dominant per-layer compute. Attention /
+    SSM / norm / embedding leaves stay full-width (mask of ones), so every
+    parameter entry is covered by at least the full-width clients and the
+    width-overlap mean (:func:`repro.core.aggregation.hetero_overlap_mean`)
+    is always well-defined.
+    """
+    FFN_PARENTS = ("mlp", "moe", "shared", "dense")
+
+    def width_masks(params: PyTree, ratios: np.ndarray) -> PyTree:
+        r = jnp.asarray(ratios, jnp.float32)       # (U,)
+        U = r.shape[0]
+
+        def leaf_mask(path, leaf):
+            keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+            name = keys[-1] if keys else ""
+            parent = keys[-2] if len(keys) >= 2 else ""
+            if not (parent in FFN_PARENTS and name in ("wg", "wu", "wd")
+                    and leaf.ndim >= 2):
+                return jnp.ones((U,) + leaf.shape, jnp.float32)
+            # hidden dim F: last axis for wg/wu, second-to-last for wd
+            ax = leaf.ndim - 1 if name in ("wg", "wu") else leaf.ndim - 2
+            F = leaf.shape[ax]
+            keep = jnp.ceil(r * F).astype(jnp.int32)            # (U,)
+            m = (jnp.arange(F)[None, :] < keep[:, None]).astype(jnp.float32)
+            shape = [U] + [1] * leaf.ndim
+            shape[ax + 1] = F
+            return jnp.broadcast_to(m.reshape(shape), (U,) + leaf.shape)
+
+        return jax.tree_util.tree_map_with_path(leaf_mask, params)
+
+    return width_masks
+
+
+def make_lm_model(cfg: ArchConfig, *, moe_aux_coef: float = 0.01,
+                  remat: bool = False) -> ModelAPI:
+    """A :class:`ModelAPI` over the layered LM backbone.
+
+    The data payload is a ``(b, seq+1)`` int32 token ROW per sample; the
+    shifted-label split happens inside ``loss``/``predict``, so the generic
+    minibatch sampler and cohort padding treat LM data exactly like
+    feature vectors. ``loss`` is the sample-weighted next-token CE (the
+    FL runtime weights rows by 1/S_u so the weighted sum is the batch
+    mean), plus the MoE load-balance auxiliary when the config routes.
+    """
+    from repro.models import transformer as tr
+
+    def init(key):
+        return tr.init_params(key, cfg)
+
+    def loss(params, x, y, w):
+        tok, lab = x[:, :-1], x[:, 1:]
+        logits, aux = tr.forward(params, cfg, tok, remat=remat)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, lab[..., None], axis=-1)[..., 0]
+        out = jnp.sum(w * nll.mean(-1))
+        if cfg.is_moe:
+            out = out + moe_aux_coef * aux / cfg.L
+        return out
+
+    def predict(params, x):
+        # per-position next-token logits for (b, seq+1) rows
+        logits, _ = tr.forward(params, cfg, x[:, :-1])
+        return logits
+
+    def layer_ids(params):
+        return tr.layer_ids(params, cfg)
+
+    return ModelAPI(init=init, loss=loss, predict=predict,
+                    layer_ids=layer_ids, L=cfg.n_blocks_total,
+                    name=f"lm-{cfg.name}", width_masks=_lm_width_masks(cfg))
+
+
+def _lm_eval_stats(model: ModelAPI):
+    """Cached jit computing (correct tokens, summed token CE) per batch."""
+    fn = getattr(model, "_lm_eval_jit", None)
+    if fn is None:
+        def stats(params, rows):
+            logits = model.predict(params, rows)        # (b, S, V)
+            labels = rows[:, 1:]
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+            nll = -jnp.take_along_axis(logp, labels[..., None],
+                                       axis=-1)[..., 0]
+            correct = (jnp.argmax(logits, -1) == labels).sum()
+            return correct, nll.sum()
+
+        fn = jax.jit(stats)
+        model._lm_eval_jit = fn
+    return fn
+
+
+def lm_eval_metrics(model: ModelAPI, params: PyTree, test_rows,
+                    test_y=None, *, batch: int = 64) -> tuple[float, float]:
+    """(next-token accuracy, mean token CE) over held-out token rows.
+
+    ``test_rows``: (n, seq+1) int32. Perplexity is ``exp`` of the returned
+    loss. ``test_y`` is accepted (and ignored) so the signature matches
+    the classification :func:`repro.fl.runtime.eval_metrics`.
+    """
+    del test_y
+    stats = _lm_eval_stats(model)
+    n = int(test_rows.shape[0])
+    seq = int(test_rows.shape[1]) - 1
+    correct, nll = 0, 0.0
+    for i in range(0, n, batch):
+        c, s = stats(params, test_rows[i:i + batch])
+        correct += int(c)
+        nll += float(s)
+    tokens = n * seq
+    return correct / tokens, nll / tokens
+
+
+# ---------------------------------------------------------------------------
+# LM tasks: synthetic token streams, static population or fleet
+# ---------------------------------------------------------------------------
+
+def _lm_rows(cfg: ArchConfig, n_rows: int, seq: int, seed: int,
+             vocab: Optional[int]) -> np.ndarray:
+    v = int(vocab or min(cfg.vocab, 2048))
+    toks = make_lm_dataset(vocab=v, n_tokens=n_rows * (seq + 1), seed=seed)
+    return toks.reshape(n_rows, seq + 1)
+
+
+def lm_task(cfg: ArchConfig, *, U: int, seq: int = 64, n_seq: int = 96,
+            n_eval: int = 64, seed: int = 0, vocab: Optional[int] = None,
+            holdout: bool = False, moe_aux_coef: float = 0.01,
+            remat: bool = False) -> Task:
+    """Synthetic-token-stream LM task: ``U`` clients with contiguous
+    stream shards (non-IID by stream position).
+
+    ``client_x``: (U, n_seq, seq+1) token rows; ``client_y`` all-zero
+    (labels live inside the rows); eval is next-token accuracy + token CE
+    over a FIXED HEAD of each client's pool (the legacy LM driver's eval):
+    the synthetic stream's n-gram state is a rolling hash of the full
+    history, unrecoverable from one sequence window, so truly held-out
+    rows have near-constant CE — the in-pool head is what tracks
+    optimization progress. ``holdout=True`` evaluates on disjoint stream
+    rows instead.
+    """
+    rows = _lm_rows(cfg, U * n_seq + (n_eval if holdout else 0), seq, seed,
+                    vocab)
+    pool = rows[:U * n_seq].reshape(U, n_seq, seq + 1)
+    if holdout:
+        test = rows[U * n_seq:]
+    else:
+        head = max(n_eval // U, 1)
+        test = pool[:, :head].reshape(-1, seq + 1)
+    return Task(model=make_lm_model(cfg, moe_aux_coef=moe_aux_coef,
+                                    remat=remat),
+                client_x=pool,
+                client_y=np.zeros((U, n_seq), np.int32),
+                counts=np.full((U,), n_seq, np.int32),
+                test_x=test, kind="lm", name=f"lm-{cfg.name}")
+
+
+def lm_fleet_data(cfg: ArchConfig, n_devices: int, *, seq: int = 32,
+                  rows_per_device: int = 24, n_eval: int = 64,
+                  seed: int = 0, vocab: Optional[int] = None,
+                  holdout: bool = False):
+    """Package synthetic token streams as fleet-engine data: LM workloads
+    then run against simulated device fleets (availability models, cohort
+    sampling, re-planning) exactly like image tasks.
+
+    Returns a :class:`repro.fleet.engine.FleetData` whose ``x`` rows are
+    (seq+1)-token sequences and whose labels are all-zero; pair it with
+    :func:`make_lm_model` and ``run_fleet(...,
+    eval_metrics=lm_eval_metrics)``. Eval rows default to a per-device
+    head of the training shards (same rationale as :func:`lm_task`);
+    ``holdout=True`` uses disjoint stream rows.
+    """
+    from repro.fleet.engine import FleetData
+
+    n_rows = n_devices * rows_per_device
+    rows = _lm_rows(cfg, n_rows + (n_eval if holdout else 0), seq, seed,
+                    vocab)
+    x = rows[:n_rows]
+    if holdout:
+        test = rows[n_rows:]
+    else:
+        head = max(n_eval // n_devices, 1)
+        test = x.reshape(n_devices, rows_per_device,
+                         seq + 1)[:, :head].reshape(-1, seq + 1)
+    parts = [np.arange(u * rows_per_device, (u + 1) * rows_per_device)
+             for u in range(n_devices)]
+    return FleetData(x=x, y=np.zeros((n_rows,), np.int32), parts=parts,
+                     x_test=test, y_test=np.zeros((len(test),), np.int32))

@@ -173,18 +173,25 @@ def run_fleet(model: ModelAPI, fleet: Fleet, availability: AvailabilityModel,
               local_iters: int = 1, l2: float = 0.0,
               s_max: Optional[int] = None, eval_every: int = 1,
               seed: int = 0, verbose: bool = False,
-              replan=None) -> tuple:
+              replan=None, donate: bool = True,
+              eval_metrics=None) -> tuple:
     """Run up to ``rounds`` federated rounds against a simulated fleet.
 
     Returns ``(params, History)``; the History carries the same fields as
     :func:`repro.fl.server.run_federated` plus per-round reachable-device
     counts, so ``benchmarks/report.py`` consumes it unchanged. ``backend``
-    selects the execution backend (``"chunked" | "dense" | "shard_map"``).
+    selects the execution backend
+    (``"chunked" | "dense" | "shard_map" | "temporal"``).
     ``replan`` (None | trigger name | ``repro.core.replan.ReplanConfig``)
     enables availability-aware online re-solving of the remaining-horizon
     Problem 2 (``method="adel"`` only): the trigger watches the reachable
     count, and each re-solve re-estimates ``(U, P, B)`` from the currently-
     reachable population via :meth:`FleetCohortSource.replan_view`.
+    ``eval_metrics`` (``(model, params, test_x, test_y) -> (metric,
+    loss)``) overrides the classification accuracy default — pass
+    :func:`repro.fl.tasks.lm_eval_metrics` with
+    :func:`repro.fl.tasks.lm_fleet_data` to run LM workloads against the
+    fleet.
     """
     if fleet.size != len(data.parts):
         raise ValueError(f"fleet size {fleet.size} != data shards "
@@ -226,13 +233,17 @@ def run_fleet(model: ModelAPI, fleet: Fleet, availability: AvailabilityModel,
 
     runtime = RoundRuntime(model, policy, backend=backend,
                            chunk_size=min(chunk_size, cohort_size),
-                           mesh=mesh, local_iters=local_iters, l2=l2)
+                           mesh=mesh, local_iters=local_iters, l2=l2,
+                           donate=donate)
     source = FleetCohortSource(fleet, availability, data, ref,
                                cohort_size=cohort_size,
                                strategy=cohort_strategy, seed=seed)
+    test_x, test_y = jnp.asarray(data.x_test), jnp.asarray(data.y_test)
+    eval_fn = (None if eval_metrics is None else
+               (lambda params: eval_metrics(model, params, test_x, test_y)))
     return runtime.run(source, rounds=rounds, T_max=T_max, eta=ref.eta,
                        s_max=s_max, key=jax.random.PRNGKey(seed),
-                       test_x=jnp.asarray(data.x_test),
-                       test_y=jnp.asarray(data.y_test),
+                       test_x=test_x, test_y=test_y,
                        eval_every=eval_every, verbose=verbose,
-                       method=f"fleet-{policy.name}", replan=replan)
+                       method=f"fleet-{policy.name}", replan=replan,
+                       eval_fn=eval_fn)

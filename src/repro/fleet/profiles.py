@@ -30,7 +30,7 @@ from typing import Callable
 import numpy as np
 
 __all__ = ["Fleet", "PRESETS", "preset", "make_fleet", "fleet_from_config",
-           "load_trace", "save_trace"]
+           "load_trace", "save_trace", "load_mobiperf"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -155,3 +155,75 @@ def load_trace(path: str) -> Fleet:
                  P=np.asarray([d["P"] for d in dev], np.float32),
                  B=np.asarray([d["B"] for d in dev], np.float32),
                  tier=np.asarray([d.get("tier", 1) for d in dev], np.int32))
+
+
+def load_mobiperf(path: str, *, model_mbits: float = 16.0,
+                  rate_per_ghz_core: float = 2.0) -> Fleet:
+    """Import a MobiPerf-style measurement log as a :class:`Fleet`.
+
+    MobiPerf-family logs are a flat JSON list of per-measurement records;
+    each record names a device and carries network measurements plus
+    static device properties::
+
+        [{"device_id": "a1", "timestamp": "...",
+          "properties": {"cpu_ghz": 2.4, "cpu_cores": 8, "ram_gb": 8},
+          "values": {"tcp_speed_results_kbps": 41800, "rtt_ms": 42.0}},
+         ...]
+
+    Records are grouped by ``device_id`` (one fleet device per id) and the
+    medians of repeated measurements are mapped onto the paper's model
+    formulations:
+
+    * **P_u (B1)**: compute rate ``rate_per_ghz_core * cpu_ghz *
+      cpu_cores`` samples/sec per layer — a linear proxy; calibrate
+      ``rate_per_ghz_core`` against a measured device if available.
+    * **B_u (B2)**: per-round communication time = median RTT plus the
+      time to move ``model_mbits`` of update traffic at the median
+      measured throughput.
+    * **tier**: memory tier from RAM (<3 GB -> 0, <6 GB -> 1, else 2).
+
+    Devices missing throughput or RTT fall back to the slowest observed
+    value (a congested-link assumption, matching how MobiPerf treats
+    failed probes).
+    """
+    with open(path) as f:
+        records = json.load(f)
+    if isinstance(records, dict):
+        records = records.get("measurements", [])
+    by_dev: dict[str, list] = {}
+    for rec in records:
+        dev = rec.get("device_id")
+        if dev is not None:
+            by_dev.setdefault(str(dev), []).append(rec)
+    if not by_dev:
+        raise ValueError(f"mobiperf log {path!r} has no device_id records")
+
+    def _median(vals, fallback):
+        vals = [v for v in vals if v is not None and v > 0]
+        return float(np.median(vals)) if vals else fallback
+
+    P, B, tier = [], [], []
+    all_kbps = [v for recs in by_dev.values() for r in recs
+                if (v := r.get("values", {}).get("tcp_speed_results_kbps"))]
+    all_rtt = [v for recs in by_dev.values() for r in recs
+               if (v := r.get("values", {}).get("rtt_ms"))]
+    worst_kbps = min(all_kbps) if all_kbps else 1000.0
+    worst_rtt = max(all_rtt) if all_rtt else 500.0
+    for dev in sorted(by_dev):
+        recs = by_dev[dev]
+        props = {}
+        for r in recs:                      # later records override earlier
+            props.update(r.get("properties", {}))
+        ghz = float(props.get("cpu_ghz", 1.5))
+        cores = float(props.get("cpu_cores", 4))
+        ram = float(props.get("ram_gb", 4))
+        kbps = _median([r.get("values", {}).get("tcp_speed_results_kbps")
+                        for r in recs], worst_kbps)
+        rtt = _median([r.get("values", {}).get("rtt_ms")
+                       for r in recs], worst_rtt)
+        P.append(max(rate_per_ghz_core * ghz * cores, 1e-3))
+        B.append(rtt / 1e3 + model_mbits * 1e3 / max(kbps, 1.0))
+        tier.append(0 if ram < 3 else (1 if ram < 6 else 2))
+    return Fleet(name="mobiperf", P=np.asarray(P, np.float32),
+                 B=np.asarray(B, np.float32),
+                 tier=np.asarray(tier, np.int32))

@@ -38,12 +38,13 @@ class Scenario:
     name: str
     fleet: FleetConfig
     method: str = "adel"           # adel | salf | drop | wait
-    model: str = "mlp"             # mlp | cnn
+    model: str = "mlp"             # mlp | cnn | lm (reduced LM arch)
     alpha: Optional[float] = 0.5   # Dirichlet non-IID (None = IID)
     rounds: int = 20
     eta0: float = 2.0
     n_train: int = 4000
     n_test: int = 400
+    arch: str = "qwen1.5-4b"       # model == "lm" only: the arch id
     note: str = ""
 
 
@@ -99,6 +100,11 @@ SCENARIOS = {s.name: s for s in [
          note="same sticky-outage edge fleet as bimodal-edge-markov with "
               "periodic every-k re-solves tracking the un-spent budget and "
               "the Markov-relaxed reachable forecast"),
+    _scn("lm-uniform-bernoulli", "uniform", 60, "bernoulli",
+         akw=(("rate", 0.7),), model="lm", cohort=8, rounds=8, eta0=0.5,
+         note="reduced LM arch on synthetic token streams against a churny "
+              "fleet — the task-adapter path: same RoundRuntime, LM cohort "
+              "source + token-loss eval via repro.fl.tasks"),
 ]}
 
 
@@ -140,12 +146,25 @@ def run_scenario(scn: Scenario, *, rounds: Optional[int] = None,
     fleet = fleet_from_config(fc)
     avail = make_availability(fc.availability, fleet.size,
                               seed=fc.seed + seed, **fc.availability_dict())
-    x_tr, y_tr, x_te, y_te = make_image_dataset(
-        "mnist", n_train=scn.n_train, n_test=scn.n_test, seed=seed,
-        noise_std=1.0)
-    data = partition_fleet(x_tr, y_tr, x_te, y_te, fleet.size,
-                           alpha=scn.alpha, seed=seed)
-    model = make_cnn() if scn.model == "cnn" else make_mlp()
+    eval_m = None
+    if scn.model == "lm":
+        # task-adapter path: the same runtime trains a reduced LM arch on
+        # token-stream shards with token-loss eval (repro.fl.tasks)
+        from repro.configs import get_config
+        from repro.fl.tasks import (lm_eval_metrics, lm_fleet_data,
+                                    make_lm_model)
+        arch_cfg = get_config(scn.arch).reduced()
+        model = make_lm_model(arch_cfg)
+        data = lm_fleet_data(arch_cfg, fleet.size, seq=32,
+                             rows_per_device=16, seed=seed)
+        eval_m = lm_eval_metrics
+    else:
+        x_tr, y_tr, x_te, y_te = make_image_dataset(
+            "mnist", n_train=scn.n_train, n_test=scn.n_test, seed=seed,
+            noise_std=1.0)
+        data = partition_fleet(x_tr, y_tr, x_te, y_te, fleet.size,
+                               alpha=scn.alpha, seed=seed)
+        model = make_cnn() if scn.model == "cnn" else make_mlp()
 
     t0 = time.time()
     _, hist = run_fleet(
@@ -153,7 +172,7 @@ def run_scenario(scn: Scenario, *, rounds: Optional[int] = None,
         cohort_size=fc.cohort_size, cohort_strategy=fc.cohort_strategy,
         backend=fc.backend, chunk_size=fc.chunk_size, eta0=scn.eta0,
         solver_steps=solver_steps, eval_every=eval_every, seed=seed,
-        verbose=verbose, replan=fc.replan)
+        verbose=verbose, replan=fc.replan, eval_metrics=eval_m)
     out = hist.as_dict()
     out["wall_s"] = round(time.time() - t0, 2)
     out["scenario"] = scn.name
@@ -189,7 +208,7 @@ def main(argv=None) -> None:
     ap.add_argument("--fleet-size", type=int, default=None)
     ap.add_argument("--cohort", type=int, default=None)
     ap.add_argument("--backend", default=None,
-                    choices=["dense", "chunked", "shard_map"],
+                    choices=["dense", "chunked", "shard_map", "temporal"],
                     help="execution backend override (repro.fl.backends)")
     ap.add_argument("--replan", default=None, choices=list(TRIGGERS),
                     help="online re-planning trigger override "

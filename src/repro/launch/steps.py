@@ -25,7 +25,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core.aggregation import aggregate_grads, layer_coefficients
+from repro.core.aggregation import (aggregate_grads, layer_coefficients,
+                                    weight_by_layer as _weight_by_layer)
 from repro.models import transformer as tr
 
 PyTree = Any
@@ -38,16 +39,6 @@ def client_batch(cfg: ArchConfig, shape, U: int) -> int:
     """Per-client batch b = global_batch / U."""
     assert shape.global_batch % U == 0, (shape.global_batch, U)
     return shape.global_batch // U
-
-
-def _weight_by_layer(g: jnp.ndarray, ids: jnp.ndarray,
-                     c_row: jnp.ndarray) -> jnp.ndarray:
-    """Scale one grad leaf by this client's per-layer coefficient."""
-    ids = jnp.asarray(ids)
-    if ids.ndim == 0:
-        return g * c_row[ids]
-    w = jnp.take(c_row, ids)                       # (L,)
-    return g * w.reshape((-1,) + (1,) * (g.ndim - 1))
 
 
 def make_train_step(cfg: ArchConfig, *, U: int, mode: str = "temporal",

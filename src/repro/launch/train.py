@@ -1,98 +1,112 @@
-"""End-to-end federated training driver (ADEL-FL on an assigned arch).
+"""End-to-end federated LM training driver (ADEL-FL on an assigned arch).
 
-Runs a REAL federated optimization of a (reduced, unless --full) architecture
-on synthetic LM token streams, with the paper's full pipeline: Problem-2
+A thin front-end over the unified round runtime: the arch config becomes a
+:func:`repro.fl.tasks.lm_task` (transformer ``ModelAPI`` + synthetic token
+streams + token-loss eval), and the round loop is
+:class:`repro.fl.runtime.RoundRuntime` — the SAME loop that serves the
+image and fleet workloads — so the paper's full pipeline (Problem-2
 schedule -> per-round straggler draws (B1-B3) -> deadline-truncated
-layer-wise aggregation (Eq. 5) -> SGD. On the CPU container use --reduced
-(default); the full configs are exercised via dryrun.py.
+layer-wise aggregation (Eq. 5) -> SGD) plus online re-planning, every
+execution backend (``dense`` / ``chunked`` / ``shard_map`` / ``temporal``
+— the grad-accumulation client layout required for the big archs), and
+HeteroFL width scaling all work on LM configs with no LM-specific loop
+code. Checkpointing rides the runtime's ``on_round`` hook.
+
+On the CPU container use --reduced (default); the full configs are
+exercised via dryrun.py.
 
     PYTHONPATH=src python -m repro.launch.train --arch hymba-1.5b \
-        --method adel --rounds 60 --tmax 240
+        --method adel --rounds 60 --tmax 240 --backend temporal
 """
 from __future__ import annotations
 
 import argparse
 import json
+import math
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import save_checkpoint
 from repro.configs import get_config
 from repro.core.baselines import make_policy
+from repro.core.replan import TRIGGERS, ReplanConfig
 from repro.core.scheduler import solve
 from repro.core.types import AnalysisConfig
-from repro.data.synthetic import make_lm_dataset
-from repro.launch.steps import make_train_step
-from repro.models import transformer as tr
+from repro.fl.backends import BACKENDS
+from repro.fl.runtime import History, RoundRuntime, probe_s_max
+from repro.fl.tasks import lm_task
 
 
 def run_training(arch: str, *, method: str = "adel", rounds: int = 40,
-                 tmax: float = 160.0, U: int = 8, client_batch: int = 4,
-                 seq: int = 64, eta0: float = 0.5, seed: int = 0,
+                 tmax: float = 160.0, U: int = 8, seq: int = 64,
+                 n_seq: int = 96, eta0: float = 0.5, seed: int = 0,
                  reduced: bool = True, solver: str = "adam",
-                 ckpt: str | None = None, verbose: bool = True) -> dict:
+                 solver_steps: int | None = None,
+                 backend: str = "dense", chunk_size: int = 16, mesh=None,
+                 replan=None, local_iters: int = 1, donate: bool = True,
+                 s_max_cap: int = 32, eval_every: int | None = None,
+                 ckpt: str | None = None, ckpt_every: int | None = None,
+                 verbose: bool = True) -> tuple[object, History]:
+    """Federated LM training on ``RoundRuntime``; returns ``(params,
+    History)`` — ``History.accuracy`` is next-token accuracy and
+    ``History.train_loss`` the token CE over a fixed in-pool eval head
+    (perplexity = exp; see :func:`repro.fl.tasks.lm_task` for why the
+    synthetic stream has no meaningful held-out split).
+
+    ``backend`` selects the execution backend (``temporal`` is the
+    big-arch grad-accumulation layout), ``replan`` the online re-planning
+    trigger (None | "never" | "every-k" | "drift" |
+    :class:`repro.core.replan.ReplanConfig`), ``ckpt`` a checkpoint path
+    saved every ``ckpt_every`` rounds (default R/4) through the runtime's
+    ``on_round`` hook.
+    """
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
-    L_tot = cfg.n_blocks_total
 
-    acfg = AnalysisConfig.default(U=U, L=L_tot, R=rounds, T_max=tmax,
+    task = lm_task(cfg, U=U, seq=seq, n_seq=n_seq, seed=seed)
+    acfg = AnalysisConfig.default(U=U, L=task.model.L, R=rounds, T_max=tmax,
                                   eta0=eta0, seed=seed)
-    schedule = solve(acfg, solver) if method == "adel" else None
+    schedule = None
+    if method == "adel":
+        kw = {"steps": solver_steps} if (solver == "adam"
+                                         and solver_steps) else {}
+        schedule = solve(acfg, solver, **kw)
     policy = make_policy(method, acfg, schedule=schedule)
+    # the minibatch pad width prices EVERY client's round compute at
+    # O(s_max) sequences, so cap it: larger planned batches are clipped by
+    # the sampler (only the straggler clock keeps the full B3 batch) —
+    # raise s_max_cap on real accelerators
+    s_max = max(min(probe_s_max(policy, rounds), s_max_cap,
+                    4 * task.n_per_client), 2)
 
-    key = jax.random.PRNGKey(seed)
-    key, k_init = jax.random.split(key)
-    params = tr.init_params(k_init, cfg)
+    runtime = RoundRuntime(task.model, policy, backend=backend,
+                           chunk_size=chunk_size, mesh=mesh,
+                           local_iters=local_iters, donate=donate)
 
-    # synthetic token stream, contiguous shards per client (non-IID by stream
-    # position), each client's pool reshaped to (n_seq, seq+1)
-    toks = make_lm_dataset(vocab=min(cfg.vocab, 2048),
-                           n_tokens=U * 96 * (seq + 1), seed=seed)
-    pool = toks.reshape(U, -1, seq + 1)
-    n_seq = pool.shape[1]
-
-    step = jax.jit(make_train_step(cfg, U=U, mode="spatial", remat=False))
-    eval_tok = jnp.asarray(pool[:, :2, :-1].reshape(-1, seq))
-    eval_lab = jnp.asarray(pool[:, :2, 1:].reshape(-1, seq))
-    eval_loss = jax.jit(lambda p: tr.loss_fn(p, cfg, eval_tok, eval_lab))
-
-    hist = {"round": [], "time": [], "loss": [], "deadline": [],
-            "method": method, "arch": cfg.name}
-    elapsed = 0.0
-    eta = acfg.eta
-    for t in range(rounds):
-        key, k_round, k_batch = jax.random.split(key, 3)
-        plan = policy.round(k_round, t)
-        if elapsed + plan.elapsed > tmax * (1 + 1e-6):
-            break
-        # per-client minibatch of fixed CLIENT_BATCH sequences (batch size
-        # S_t^u modulates the straggler clock; token count is fixed so the
-        # jit signature is stable)
-        idx = np.asarray(jax.random.randint(
-            k_batch, (U, client_batch), 0, n_seq))
-        xb = np.stack([pool[u, idx[u]] for u in range(U)])      # (U,b,seq+1)
-        tok = jnp.asarray(xb[:, :, :-1])
-        lab = jnp.asarray(xb[:, :, 1:])
-        params = step(params, tok, lab, plan.mask, plan.p,
-                      jnp.float32(eta[t]))
-        elapsed += plan.elapsed
-        if t % max(rounds // 20, 1) == 0 or t == rounds - 1:
-            lo = float(eval_loss(params))
-            hist["round"].append(t + 1)
-            hist["time"].append(elapsed)
-            hist["loss"].append(lo)
-            hist["deadline"].append(float(plan.elapsed))
-            if verbose:
-                print(f"[{method}] round {t + 1:3d}  clock {elapsed:8.2f}  "
-                      f"deadline {plan.elapsed:7.3f}  loss {lo:.4f}")
+    on_round = None
     if ckpt:
-        save_checkpoint(ckpt, params, step=len(hist["round"]),
-                        meta={"arch": cfg.name, "method": method})
-    return hist
+        every = ckpt_every or max(rounds // 4, 1)
+
+        def on_round(t, params, hist):
+            if (t + 1) % every == 0 or t == rounds - 1:
+                save_checkpoint(ckpt, params, step=t + 1,
+                                meta={"arch": cfg.name, "method": method,
+                                      "backend": backend})
+
+    params, hist = runtime.run(
+        task.source(), rounds=rounds, T_max=tmax, eta=acfg.eta, s_max=s_max,
+        key=jax.random.PRNGKey(seed), eval_fn=task.eval_fn(),
+        eval_every=eval_every or max(rounds // 20, 1), verbose=verbose,
+        method=method, replan=replan, on_round=on_round)
+    if ckpt and (not hist.rounds or hist.rounds[-1] < rounds):
+        # budget exhausted before the last planned round: persist the final
+        # params the periodic hook may have missed
+        save_checkpoint(ckpt, params, step=hist.rounds[-1] if hist.rounds
+                        else 0, meta={"arch": cfg.name, "method": method,
+                                      "backend": backend})
+    return params, hist
 
 
 def main(argv=None):
@@ -106,24 +120,44 @@ def main(argv=None):
     ap.add_argument("--eta0", type=float, default=0.5)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--full", action="store_true",
+    ap.add_argument("--reduced", action="store_true", default=True,
+                    help="reduced arch for the CPU container (default)")
+    ap.add_argument("--full", dest="reduced", action="store_false",
                     help="use the full (non-reduced) config — TPU only")
+    ap.add_argument("--backend", default="dense", choices=list(BACKENDS),
+                    help="execution backend (repro.fl.backends); temporal "
+                         "is the big-arch grad-accumulation layout")
+    ap.add_argument("--chunk-size", type=int, default=16)
+    ap.add_argument("--replan", default=None, choices=list(TRIGGERS),
+                    help="online re-planning trigger (repro.core.replan)")
+    ap.add_argument("--replan-every", type=int, default=None,
+                    help="every-k re-plan period")
+    ap.add_argument("--no-donate", dest="donate", action="store_false",
+                    help="disable params-buffer donation in the round step")
     ap.add_argument("--solver", default="adam",
                     choices=["adam", "trust-constr"])
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
+    replan = args.replan
+    if replan is not None and args.replan_every is not None:
+        replan = ReplanConfig(trigger=replan, every=args.replan_every)
     t0 = time.time()
-    hist = run_training(args.arch, method=args.method, rounds=args.rounds,
-                        tmax=args.tmax, U=args.clients, eta0=args.eta0,
-                        seq=args.seq, seed=args.seed,
-                        reduced=not args.full, solver=args.solver,
-                        ckpt=args.ckpt)
+    _, hist = run_training(args.arch, method=args.method, rounds=args.rounds,
+                           tmax=args.tmax, U=args.clients, eta0=args.eta0,
+                           seq=args.seq, seed=args.seed,
+                           reduced=args.reduced, solver=args.solver,
+                           backend=args.backend, chunk_size=args.chunk_size,
+                           replan=replan, donate=args.donate,
+                           ckpt=args.ckpt)
+    loss = hist.train_loss[-1]
     print(f"[train] done in {time.time() - t0:.1f}s wall; "
-          f"final loss {hist['loss'][-1]:.4f}")
+          f"final token loss {loss:.4f} (ppl {math.exp(min(loss, 30)):.1f}, "
+          f"token acc {hist.accuracy[-1]:.4f})")
     if args.out:
         with open(args.out, "w") as f:
-            json.dump(hist, f, indent=1)
+            json.dump({**hist.as_dict(), "arch": args.arch,
+                       "backend": args.backend}, f, indent=1)
     return 0
 
 

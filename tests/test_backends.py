@@ -1,6 +1,6 @@
-"""Execution-backend equivalence: dense / chunked / shard_map produce the
-same History trajectories (up to float summation order) for ADEL and SALF,
-and HeteroFL width masks flow through every backend.
+"""Execution-backend equivalence: dense / chunked / shard_map / temporal
+produce the same History trajectories (up to float summation order) for
+ADEL and SALF, and HeteroFL width masks flow through every backend.
 
 The multi-device shard_map case needs ``XLA_FLAGS=
 --xla_force_host_platform_device_count=N`` set BEFORE jax initializes, so it
@@ -20,7 +20,8 @@ from repro.core.scheduler import solve
 from repro.core.types import AnalysisConfig
 from repro.data.synthetic import make_image_dataset
 from repro.fl.backends import (BACKENDS, ChunkedBackend, DenseBackend,
-                               ShardMapBackend, make_backend)
+                               ShardMapBackend, TemporalBackend,
+                               make_backend)
 from repro.fl.partition import dirichlet_partition, stack_clients
 from repro.fl.server import run_federated
 from repro.models.paper_models import make_mlp
@@ -82,6 +83,14 @@ def test_dense_vs_shard_map_single_device(setup, method):
                        _run(setup, method, "shard_map"))
 
 
+@pytest.mark.parametrize("method", ["adel", "salf"])
+def test_dense_vs_temporal(setup, method):
+    """The grad-accumulation scan (Eq. 5 coefficient fold) reproduces the
+    vmapped dense aggregation."""
+    _assert_equivalent(_run(setup, method, "dense"),
+                       _run(setup, method, "temporal"))
+
+
 def test_heterofl_same_on_all_backends(setup):
     hists = [_run(setup, "heterofl", bk) for bk in BACKENDS]
     for h in hists[1:]:
@@ -101,8 +110,10 @@ def test_backend_registry_and_padding():
     assert chunked.cohort_pad(10) == 16
     assert chunked.cohort_pad(8) == 8      # single chunk, no dead padding
     assert chunked.cohort_pad(4) == 4      # chunk clipped to the cohort
+    assert make_backend("temporal", model).cohort_pad(10) == 10
     for name, cls in [("dense", DenseBackend), ("chunked", ChunkedBackend),
-                      ("shard_map", ShardMapBackend)]:
+                      ("shard_map", ShardMapBackend),
+                      ("temporal", TemporalBackend)]:
         assert isinstance(make_backend(name, model), cls)
     bk = DenseBackend(model)
     assert make_backend(bk, model) is bk

@@ -76,9 +76,10 @@ def test_wait_fits_fewer_rounds(mnist_setup):
 
 
 def test_big_arch_federated_training_loss_drops():
-    """launch.train on a reduced assigned arch: loss decreases."""
+    """launch.train on a reduced assigned arch: loss decreases (now on
+    RoundRuntime — the temporal grad-accumulation backend)."""
     from repro.launch.train import run_training
-    hist = run_training("qwen1.5-4b", method="adel", rounds=12, tmax=60.0,
-                        U=4, client_batch=4, seq=32, eta0=1.0,
-                        solver="adam", verbose=False)
-    assert hist["loss"][-1] < hist["loss"][0], hist["loss"]
+    _, hist = run_training("qwen1.5-4b", method="adel", rounds=12, tmax=60.0,
+                           U=4, seq=32, eta0=1.0, solver="adam",
+                           backend="temporal", verbose=False)
+    assert hist.train_loss[-1] < hist.train_loss[0], hist.train_loss

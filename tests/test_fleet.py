@@ -15,9 +15,12 @@ from repro.fleet.availability import (AVAILABILITY, AlwaysOn, Bernoulli,
                                       Diurnal, Markov, make_availability)
 from repro.fleet.cohort import cohort_view, sample_cohort
 from repro.fleet.engine import partition_fleet, reference_config, run_fleet
-from repro.fleet.profiles import (PRESETS, fleet_from_config, load_trace,
-                                  make_fleet, save_trace)
+from repro.fleet.profiles import (PRESETS, fleet_from_config, load_mobiperf,
+                                  load_trace, make_fleet, save_trace)
 from repro.models.paper_models import make_mlp
+
+FIXTURES = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "fixtures")
 
 
 # ---------------------------------------------------------------------------
@@ -274,6 +277,58 @@ def test_heterofl_scenario_registered():
     scn = SCENARIOS["bimodal-edge-heterofl"]
     assert scn.method == "heterofl"
     assert scn.fleet.preset == "bimodal-edge"
+
+
+def test_load_mobiperf_fixture():
+    """MobiPerf-style logs import as a Fleet: one device per device_id,
+    medians over repeated measurements, CPU->P / network->B / RAM->tier."""
+    path = os.path.join(FIXTURES, "mobiperf_sample.json")
+    fleet = load_mobiperf(path)
+    assert fleet.size == 6                       # distinct device_ids
+    assert fleet.name == "mobiperf"
+    assert (fleet.P > 0).all() and (fleet.B > 0).all()
+    devs = sorted(["pixel-3", "galaxy-s4", "moto-g", "nexus-7",
+                   "oneplus-one", "iphone-6"])
+    # devices are ordered by sorted id; pixel-3 (2.5 GHz x 8) is fastest
+    pix = devs.index("pixel-3")
+    assert fleet.P[pix] == fleet.P.max()
+    # the big-RAM device lands in the top tier present
+    assert fleet.tier[pix] == fleet.tier.max()
+    # galaxy-s4's B uses the MEDIAN of its two rtt/throughput probes:
+    # worse link than pixel-3's
+    assert fleet.B[devs.index("galaxy-s4")] > fleet.B[pix]
+    # nexus-7 reported no throughput: worst-observed-link fallback puts it
+    # among the slowest links
+    assert fleet.B[devs.index("nexus-7")] >= np.median(fleet.B)
+    # deterministic: importing twice gives identical fleets
+    f2 = load_mobiperf(path)
+    np.testing.assert_array_equal(fleet.P, f2.P)
+    np.testing.assert_array_equal(fleet.B, f2.B)
+    # importable fleets drive the planner like any preset
+    ref = reference_config(fleet, U=4, L=3, R=4, T_max=12.0)
+    assert ref.U == 4 and (np.diff(ref.P) >= 0).all()
+
+
+def test_run_fleet_lm_task():
+    """LM workloads run against the fleet engine via the task adapters:
+    token-row shards + make_lm_model + lm_eval_metrics."""
+    from repro.configs import get_config
+    from repro.fl.tasks import lm_eval_metrics, lm_fleet_data, make_lm_model
+
+    n = 24
+    cfg = get_config("qwen1.5-4b").reduced()
+    model = make_lm_model(cfg)
+    data = lm_fleet_data(cfg, n, seq=16, rows_per_device=8, seed=0)
+    fleet = make_fleet("uniform", n, seed=0)
+    avail = make_availability("bernoulli", n, seed=0, rate=0.8)
+    _, hist = run_fleet(model, fleet, avail, data, method="adel", rounds=3,
+                        cohort_size=6, chunk_size=3, solver_steps=150,
+                        seed=0, s_max=6, eval_metrics=lm_eval_metrics)
+    assert hist.method == "fleet-adel"
+    assert len(hist.train_loss) == 3
+    assert len(hist.available) == 3
+    # token CE starts near ln(vocab) and never degenerates
+    assert 0 < hist.train_loss[-1] < 8.0
 
 
 def test_reference_config_spans_fleet():

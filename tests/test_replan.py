@@ -239,6 +239,45 @@ def test_every_k_static_run_respects_budget(fl_setup):
     np.testing.assert_allclose(hist.times[-1], cfg.T_max, rtol=1e-4)
 
 
+def test_skipped_round_budget_credited(fl_setup):
+    """An empty-cohort round spends nothing: its planned deadline is
+    credited back (zeroed in the schedule's history head) and a re-solve
+    is FORCED at the next executed round, whose budget_left then includes
+    the credit — regardless of the configured trigger cadence."""
+    from repro.fl.runtime import RoundRuntime, StaticCohortSource
+
+    model, cfg, data, schedule = fl_setup
+    cx, cy, counts, x_te, y_te = data
+    policy = make_policy("adel", cfg, schedule=schedule)
+    planned = np.asarray(schedule.T).copy()
+
+    class SkippySource(StaticCohortSource):
+        def round_cohort(self, t):
+            return None if t == 1 else super().round_cohort(t)
+
+    runtime = RoundRuntime(model, policy)
+    _, hist = runtime.run(
+        SkippySource(cx, cy, counts), rounds=cfg.R, T_max=cfg.T_max,
+        eta=cfg.eta, s_max=16, key=jax.random.PRNGKey(0),
+        test_x=x_te, test_y=y_te,
+        replan=ReplanConfig(trigger="drift", drift_threshold=10.0,
+                            steps=120))
+    # the reachable count never moves and the drift threshold is huge, so
+    # the ONLY re-solve is the skip-forced one at the next executed round
+    assert len(hist.replans) == 1
+    ev = hist.replans[0]
+    assert ev["round"] == 2
+    np.testing.assert_allclose(ev["skipped_credit"], planned[1], rtol=1e-6)
+    # the spliced history head records that round 1 spent nothing
+    assert float(policy.schedule.T[1]) == 0.0
+    # the re-solved tail starts from the TRUE remaining budget (only round
+    # 0's deadline was actually spent) and lands exactly on it
+    np.testing.assert_allclose(ev["budget_left"], cfg.T_max - planned[0],
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.sum(ev["T_tail"]), ev["budget_left"],
+                               rtol=1e-4)
+
+
 def test_fleet_drift_replan_records_and_respects_budget():
     n = 120
     fleet = make_fleet("longtail-mobile", n, seed=0)

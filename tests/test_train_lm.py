@@ -1,0 +1,211 @@
+"""The federated LM path on the unified round runtime.
+
+* Golden-seed comparison: the ``RoundRuntime``-based ``run_training``
+  matches the loss trajectory of the pre-refactor hand-rolled LM loop
+  (reimplemented verbatim here from ``make_train_step``) on a reduced
+  arch, evaluated on the SAME fixed pool-head rows.
+* Backend equivalence: dense / chunked / shard_map / temporal produce the
+  same LM trajectories.
+* Donation safety: every backend really donates the params buffers (the
+  input leaves are deleted after the round step on this jax/CPU build)
+  and the full round loop — planning, width masks, eval, checkpoint hook
+  — never touches a donated buffer.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.baselines import make_policy
+from repro.core.scheduler import solve
+from repro.core.types import AnalysisConfig
+from repro.fl.backends import BACKENDS, ExecutionBackend, make_backend
+from repro.fl.runtime import RoundRuntime, probe_s_max
+from repro.fl.tasks import lm_task
+from repro.launch.steps import make_train_step
+from repro.launch.train import run_training
+from repro.models import transformer as tr
+
+ARCH = "qwen1.5-4b"
+U, ROUNDS, TMAX, SEQ, ETA0, SEED = 4, 12, 60.0, 32, 1.0, 0
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config(ARCH).reduced()
+    # n_eval=2*U -> the eval head is pool[:, :2], exactly the legacy
+    # driver's eval rows
+    task = lm_task(cfg, U=U, seq=SEQ, n_seq=96, n_eval=2 * U, seed=SEED)
+    acfg = AnalysisConfig.default(U=U, L=task.model.L, R=ROUNDS, T_max=TMAX,
+                                  eta0=ETA0, seed=SEED)
+    schedule = solve(acfg, "adam", steps=600)
+    return cfg, task, acfg, schedule
+
+
+def _legacy_loop(cfg, task, acfg, schedule, eval_rows):
+    """The pre-refactor launch/train.py round loop, verbatim semantics:
+    fixed 4-sequence client minibatches drawn straight from the pool,
+    ``make_train_step(mode="spatial")``, same policy plans."""
+    client_batch = 4
+    policy = make_policy("adel", acfg, schedule=schedule)
+    key = jax.random.PRNGKey(SEED)
+    key, k_init = jax.random.split(key)
+    params = tr.init_params(k_init, cfg)
+    pool = np.asarray(task.client_x)
+    n_seq = pool.shape[1]
+    step = jax.jit(make_train_step(cfg, U=U, mode="spatial", remat=False))
+    eval_tok = jnp.asarray(eval_rows[:, :-1])
+    eval_lab = jnp.asarray(eval_rows[:, 1:])
+    eval_loss = jax.jit(lambda p: tr.loss_fn(p, cfg, eval_tok, eval_lab))
+    eta, elapsed, losses = acfg.eta, 0.0, []
+    for t in range(ROUNDS):
+        key, k_round, k_batch = jax.random.split(key, 3)
+        plan = policy.round(k_round, t)
+        if elapsed + plan.elapsed > TMAX * (1 + 1e-6):
+            break
+        idx = np.asarray(jax.random.randint(
+            k_batch, (U, client_batch), 0, n_seq))
+        xb = np.stack([pool[u, idx[u]] for u in range(U)])
+        tok = jnp.asarray(xb[:, :, :-1])
+        lab = jnp.asarray(xb[:, :, 1:])
+        params = step(params, tok, lab, plan.mask, plan.p,
+                      jnp.float32(eta[t]))
+        elapsed += plan.elapsed
+        losses.append(float(eval_loss(params)))
+    return losses
+
+
+def _runtime_losses(task, acfg, schedule, backend="temporal", **kw):
+    policy = make_policy("adel", acfg, schedule=schedule)
+    s_max = max(min(probe_s_max(policy, ROUNDS), 32), 2)
+    runtime = RoundRuntime(task.model, policy, backend=backend,
+                           chunk_size=kw.pop("chunk_size", 2), **kw)
+    _, hist = runtime.run(task.source(), rounds=ROUNDS, T_max=TMAX,
+                          eta=acfg.eta, s_max=s_max,
+                          key=jax.random.PRNGKey(SEED),
+                          eval_fn=task.eval_fn(), eval_every=1)
+    return hist
+
+
+def test_matches_legacy_loop_golden_seed(setup):
+    """Same arch, same schedule, same eval rows: the runtime-based driver
+    tracks the old hand-rolled loop's loss trajectory (the minibatch
+    sampler changed — plan-driven B3 batches instead of a fixed 4 — so
+    the match is golden-seed tolerance, not bit-for-bit)."""
+    cfg, task, acfg, schedule = setup
+    legacy = _legacy_loop(cfg, task, acfg, schedule,
+                          np.asarray(task.test_x))
+    hist = _runtime_losses(task, acfg, schedule)
+    new = hist.train_loss
+    assert len(legacy) == len(new) == ROUNDS
+    # both optimize: clear decrease from the same init
+    assert legacy[-1] < legacy[0] - 0.05, legacy
+    assert new[-1] < new[0] - 0.05, new
+    # and land at the same level (golden-seed tolerance)
+    assert abs(new[-1] - legacy[-1]) < 0.25, (new[-1], legacy[-1])
+    # deterministic given the seed
+    hist2 = _runtime_losses(task, acfg, schedule)
+    np.testing.assert_allclose(new, hist2.train_loss, rtol=1e-6)
+
+
+def test_lm_backend_equivalence(setup):
+    """All four execution backends produce the same LM trajectory (up to
+    float summation order) — the clock exactly, the losses tightly."""
+    _, task, acfg, schedule = setup
+    hists = {bk: _runtime_losses(task, acfg, schedule, backend=bk)
+             for bk in BACKENDS}
+    ref = hists["dense"]
+    for bk in BACKENDS[1:]:
+        h = hists[bk]
+        assert h.rounds == ref.rounds
+        np.testing.assert_allclose(h.times, ref.times, rtol=1e-6)
+        np.testing.assert_allclose(h.train_loss, ref.train_loss,
+                                   rtol=2e-3, atol=2e-3)
+        np.testing.assert_allclose(h.accuracy, ref.accuracy, atol=5e-3)
+
+
+class _DonationProbe(ExecutionBackend):
+    """Wraps a backend and hard-deletes the input params buffers after
+    each round step: ANY later read of a donated buffer then raises."""
+
+    def __init__(self, inner):
+        super().__init__(inner.model, donate=inner.donate)
+        self.inner = inner
+        self.name = inner.name
+        self.deleted_by_donation = []
+
+    def cohort_pad(self, U):
+        return self.inner.cohort_pad(U)
+
+    def describe(self):
+        return self.inner.describe()
+
+    def run_round(self, params, *args, **kwargs):
+        out = self.inner.run_round(params, *args, **kwargs)
+        leaves = jax.tree.leaves(params)
+        self.deleted_by_donation.append(
+            all(leaf.is_deleted() for leaf in leaves))
+        for leaf in leaves:
+            if not leaf.is_deleted():
+                leaf.delete()
+        return out
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_donation_safety(setup, backend):
+    """donate=True on every backend: the round step really consumes the
+    params buffers, and nothing in the round loop (planning, eval,
+    on_round hook) reads them afterwards."""
+    _, task, acfg, schedule = setup
+    policy = make_policy("adel", acfg, schedule=schedule)
+    probe = _DonationProbe(make_backend(backend, task.model, chunk_size=2,
+                                        donate=True))
+    runtime = RoundRuntime(task.model, policy, backend=probe)
+    rounds = 4
+    seen = []
+    _, hist = runtime.run(task.source(), rounds=rounds, T_max=TMAX,
+                          eta=acfg.eta, s_max=8,
+                          key=jax.random.PRNGKey(SEED),
+                          eval_fn=task.eval_fn(), eval_every=1,
+                          on_round=lambda t, p, h: seen.append(t))
+    assert len(hist.train_loss) == rounds
+    assert seen == list(range(rounds))
+    # donation is honored on this build: the step itself deleted the
+    # incoming buffers (the probe found nothing left to delete)
+    assert probe.deleted_by_donation == [True] * rounds
+
+
+def test_heterofl_width_masks_on_lm(setup):
+    """HeteroFL width scaling runs on the transformer ModelAPI through the
+    runtime (FFN-hidden-width masks), dense vs temporal equivalent."""
+    _, task, acfg, schedule = setup
+    hists = {}
+    for bk in ("dense", "temporal"):
+        policy = make_policy("heterofl", acfg)
+        runtime = RoundRuntime(task.model, policy, backend=bk)
+        _, hists[bk] = runtime.run(task.source(), rounds=4, T_max=TMAX,
+                                   eta=acfg.eta, s_max=8,
+                                   key=jax.random.PRNGKey(SEED),
+                                   eval_fn=task.eval_fn(), eval_every=1)
+    np.testing.assert_allclose(hists["dense"].train_loss,
+                               hists["temporal"].train_loss,
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_run_training_api_and_checkpoint(tmp_path):
+    """The public driver: History-based output, replan hook, checkpoint
+    via on_round."""
+    ckpt = os.path.join(tmp_path, "ck")
+    _, hist = run_training(ARCH, method="adel", rounds=4, tmax=20.0, U=3,
+                           seq=16, n_seq=24, eta0=1.0, seed=1,
+                           backend="temporal", replan="drift",
+                           solver_steps=200, ckpt=ckpt, ckpt_every=2,
+                           eval_every=1, verbose=False)
+    assert len(hist.train_loss) == 4
+    assert hist.method == "adel"
+    assert os.path.exists(ckpt + ".npz") and os.path.exists(ckpt + ".json")
+    # static population: drift never fires, but the hook path ran
+    assert hist.replans == []
