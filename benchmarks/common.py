@@ -4,12 +4,12 @@ from __future__ import annotations
 
 import json
 import os
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import now
 from repro.core.baselines import make_policy
 from repro.core.scheduler import solve
 from repro.core.types import AnalysisConfig
@@ -26,6 +26,17 @@ def out_dir() -> str:
     regression gate redirects fresh results away from the committed
     baselines it compares against), else the committed results dir."""
     return os.environ.get("REPRO_BENCH_OUT") or OUT_DIR
+
+
+def events_path(name: str) -> str:
+    """JSONL telemetry stream path for one benchmark run: the suites write
+    their :mod:`repro.obs` event files under ``<out_dir>/events/`` so the
+    regression gate's baseline-vs-fresh JSON diff never sees them, while CI
+    uploads the whole directory and renders it with
+    ``python -m repro.obs.timeline``."""
+    d = os.path.join(out_dir(), "events")
+    os.makedirs(d, exist_ok=True)
+    return os.path.join(d, f"{name}.jsonl")
 
 
 def save_result(name: str, payload: dict) -> str:
@@ -84,7 +95,7 @@ def run_methods(model, cfg, data, methods, *, seed: int = 0,
     out = {}
     schedule = None
     for method in methods:
-        t0 = time.time()
+        t0 = now()
         if method == "adel" and schedule is None:
             schedule = solve(cfg, solver, **({"steps": 1200}
                                              if solver == "adam" else {}))
@@ -95,7 +106,7 @@ def run_methods(model, cfg, data, methods, *, seed: int = 0,
                                 local_iters=local_iters, l2=l2, eta=eta,
                                 eval_every=eval_every, verbose=verbose)
         d = hist.as_dict()
-        d["wall_s"] = time.time() - t0
+        d["wall_s"] = now() - t0
         if method == "adel":
             d["schedule_T"] = schedule.T.tolist()
             d["schedule_m"] = schedule.m

@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import dataclasses
 
-from benchmarks.common import cached_result, save_result
+from benchmarks.common import cached_result, events_path, save_result
 
 SCENARIO_NAMES = ("longtail-mobile-diurnal", "datacenter-always-on")
 
@@ -24,7 +24,8 @@ def run(quick: bool = False) -> dict:
                                   n_test=400)
         print(f"[fleet_smoke] {name}: fleet={fleet_size} rounds={rounds}")
         hist = run_scenario(scn, rounds=rounds, fleet_size=fleet_size,
-                            solver_steps=400, eval_every=2, verbose=False)
+                            solver_steps=400, eval_every=2, verbose=False,
+                            events=events_path(f"fleet_smoke.{name}"))
         acc = hist["accuracy"][-1] if hist["accuracy"] else 0.0
         print(f"  [{scn.method:9s}] rounds="
               f"{hist['rounds'][-1] if hist['rounds'] else 0}"

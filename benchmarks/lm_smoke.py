@@ -9,9 +9,8 @@ final next-token accuracy. Emits ``experiments/results/lm_smoke.json``.
 """
 from __future__ import annotations
 
-import time
-
-from benchmarks.common import cached_result, save_result
+from benchmarks.common import cached_result, events_path, save_result
+from repro.obs import make_tracer, now
 
 ARCH = "qwen1.5-4b"
 BACKENDS = ("dense", "temporal")
@@ -27,12 +26,14 @@ def run(quick: bool = False) -> dict:
     tmax = 5.0 * rounds
     result = {}
     for backend in BACKENDS:
-        t0 = time.time()
+        tracer = make_tracer(events_path(f"lm_smoke.{backend}"))
+        t0 = now()
         _, hist = run_training(ARCH, method="adel", rounds=rounds, tmax=tmax,
                                U=4, seq=32, eta0=1.0, seed=0,
                                backend=backend, solver_steps=600,
-                               eval_every=1, verbose=False)
-        wall = time.time() - t0
+                               eval_every=1, verbose=False, tracer=tracer)
+        wall = now() - t0
+        tracer.close()
         rec = {
             "arch": ARCH,
             "backend": backend,

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 
-from benchmarks.common import cached_result, save_result
+from benchmarks.common import cached_result, events_path, save_result
 from repro.core.replan import TRIGGERS
 
 
@@ -33,7 +33,9 @@ def _run_scenario_triggers(name: str, *, fleet_size: int, rounds: int,
     for trigger in TRIGGERS:
         hist = run_scenario(scn, rounds=rounds, fleet_size=fleet_size,
                             replan=trigger, solver_steps=solver_steps,
-                            eval_every=2, verbose=False)
+                            eval_every=2, verbose=False,
+                            events=events_path(
+                                f"replan_sweep.{name}.{trigger}"))
         acc = hist["accuracy"][-1] if hist["accuracy"] else 0.0
         used = hist["times"][-1] if hist["times"] else 0.0
         print(f"  [{trigger:8s}] final_acc={acc:.4f} "

@@ -167,6 +167,61 @@ def section_replan_sweep() -> str:
     return "\n".join(out)
 
 
+def section_telemetry() -> str:
+    """Round-runtime telemetry recorded by the instrumented suites
+    (``History.telemetry`` blocks inside ``fleet_smoke.json``).
+
+    Columns: *predicted* is the exponential clock model's forecast
+    (expected backprop depth ``E[min(z, L)]`` from the planned deadline,
+    Eq. 5), *simulated* is the straggler-draw clock the runtime charges
+    against ``T_max``, and *wall* is measured host time
+    (``time.perf_counter``); the drift columns quantify how far the
+    realized draws land from the model the Problem-2 solver planned with.
+    """
+    fn = os.path.join(RESULTS, "results", "fleet_smoke.json")
+    if not os.path.exists(fn):
+        return ""
+    with open(fn) as f:
+        res = json.load(f)
+    rows = []
+    for setting, methods in sorted(res.items()):
+        if not isinstance(methods, dict):
+            continue
+        for method, d in sorted(methods.items()):
+            tel = d.get("telemetry") if isinstance(d, dict) else None
+            if not tel or not tel.get("drift"):
+                continue
+            drift = tel["drift"]
+            phases = tel.get("phases", {})
+            train_s = sum(phases.get(p, {}).get("total_s", 0.0)
+                          for p in ("local_train", "aggregate"))
+            other_s = sum(v.get("total_s", 0.0)
+                          for k, v in phases.items()
+                          if k not in ("local_train", "aggregate"))
+            rows.append(
+                f"| {setting} | {method} | {drift.get('rounds', '—')} "
+                f"| {train_s:.2f}/{other_s:.2f} "
+                f"| {drift.get('depth_drift_mean', '—')} "
+                f"| {drift.get('miss_rate', '—')} "
+                f"| {drift.get('zero_rate', '—')} "
+                f"| {drift.get('deadline_vs_full_wait', '—')} |")
+    if not rows:
+        return ""
+    out = ["### telemetry (round-runtime phase spans + clock-model drift)\n",
+           "predicted = exponential-model forecast at the planned deadline; "
+           "simulated = straggler-draw clock charged against T_max; "
+           "wall = measured host perf_counter time. depth_drift = realized "
+           "minus predicted backprop depth (layers, mean over rounds); "
+           "deadline_vs_full_wait = planned deadline as a fraction of the "
+           "synchronized full-depth wait (the paper's Eq. 5 saving).\n",
+           "| setting | method | rounds | train/other wall_s "
+           "| depth_drift | miss_rate | zero_rate | T_t/full_wait |",
+           "|---|---|---|---|---|---|---|---|"]
+    out += rows
+    out.append("")
+    return "\n".join(out)
+
+
 def section_repro() -> str:
     out = []
     for name in ("fig2_mnist", "fig3_cifar", "fig4_robustness",
@@ -203,14 +258,22 @@ def section_repro() -> str:
     lm = section_lm_smoke()
     if lm:
         out.append(lm)
+    tel = section_telemetry()
+    if tel:
+        out.append(tel)
     return "\n".join(out)
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default="all",
-                    choices=["all", "dryrun", "roofline", "repro"])
+                    choices=["all", "dryrun", "roofline", "repro",
+                             "telemetry"])
     args = ap.parse_args(argv)
+    if args.section == "telemetry":
+        print("## Round-runtime telemetry\n")
+        print(section_telemetry())
+        return
     if args.section in ("all", "dryrun"):
         print("## Dry-run records\n")
         print(section_dryrun())

@@ -41,6 +41,14 @@ runtime's round loop never reads a params buffer after handing it to
 
 Backends are selected by name: ``make_backend("dense" | "chunked" |
 "shard_map" | "temporal", model, ...)``.
+
+Telemetry: every backend carries the runtime's tracer (``set_tracer``,
+default :data:`repro.obs.NULL_TRACER`). The fused single-dispatch backends
+(dense / shard_map / temporal) emit one ``local_train`` span per round plus
+an ``aggregate_bytes`` counter; the chunked backend emits one
+``local_train`` span per chunk and a separate ``aggregate`` span around the
+final apply. Active tracers block on step results so spans measure device
+work rather than async dispatch — numerics are untouched either way.
 """
 from __future__ import annotations
 
@@ -49,6 +57,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.aggregation import (aggregate_grads, aggregate_grads_chunk,
                                     aggregate_grads_local,
                                     hetero_overlap_mean,
@@ -93,6 +102,29 @@ class ExecutionBackend:
         self.local_iters = int(local_iters)
         self.l2 = float(l2)
         self.donate = bool(donate)
+        self.tracer = obs.NULL_TRACER
+
+    def set_tracer(self, tracer) -> None:
+        """Attach the runtime's tracer (:class:`repro.obs.Tracer`) so the
+        backend's ``local_train`` / ``aggregate`` spans and bytes counters
+        land in the same event stream."""
+        self.tracer = tracer if tracer is not None else obs.NULL_TRACER
+
+    def _traced_fused(self, step, params, *args):
+        """Run a fused train+aggregate jit step under a ``local_train``
+        span (the single-dispatch backends cannot split aggregation out of
+        the compiled step). An active tracer blocks on the result so the
+        span measures device work, not async dispatch; trajectories are
+        unchanged."""
+        tracer = self.tracer
+        if not tracer.active:
+            return step(params, *args)
+        with tracer.span("local_train", backend=self.name, fused=True):
+            out = step(params, *args)
+            jax.block_until_ready(out)
+        tracer.count("aggregate_bytes", obs.tree_bytes(out),
+                     backend=self.name)
+        return out
 
     @property
     def _donate_params(self) -> tuple:
@@ -149,7 +181,8 @@ class DenseBackend(ExecutionBackend):
     def run_round(self, params, xb, yb, wb, mask, p, eta, *,
                   bias_correct, wmasks=None):
         step = self._step(bool(bias_correct), wmasks is not None)
-        return step(params, xb, yb, wb, mask, p, eta, wmasks)
+        return self._traced_fused(step, params, xb, yb, wb, mask, p, eta,
+                                  wmasks)
 
 
 class ChunkedBackend(ExecutionBackend):
@@ -185,6 +218,10 @@ class ChunkedBackend(ExecutionBackend):
         c = min(self.chunk_size, int(U))   # never vmap dead padding
         return -(-int(U) // c) * c
 
+    def set_tracer(self, tracer) -> None:
+        super().set_tracer(tracer)
+        self._dense.set_tracer(tracer)     # single-chunk fall-through
+
     def _chunk_step(self, bias_correct: bool, hetero: bool) -> Callable:
         key = (bias_correct, hetero)
         if key not in self._chunks:
@@ -214,22 +251,34 @@ class ChunkedBackend(ExecutionBackend):
         hetero = wmasks is not None
         step = self._chunk_step(bool(bias_correct), hetero)
         counts = mask.sum(0)                       # (L,) global contributors
+        tracer = self.tracer
         num = den = agg = None
         for c0 in range(0, U, c):
             sl = slice(c0, c0 + c)
             wm_c = (None if not hetero
                     else jax.tree.map(lambda m: m[sl], wmasks))
-            part = step(params, xb[sl], yb[sl], wb[sl], mask[sl], p, eta,
-                        counts, wm_c)
+            with tracer.span("local_train", backend=self.name,
+                             chunk=c0 // c):
+                part = step(params, xb[sl], yb[sl], wb[sl], mask[sl], p, eta,
+                            counts, wm_c)
+                if tracer.active:
+                    jax.block_until_ready(part)
+            if tracer.active:
+                tracer.count("aggregate_bytes", obs.tree_bytes(part),
+                             backend=self.name)
             if hetero:
                 n_p, d_p = part
                 num = n_p if num is None else jax.tree.map(jnp.add, num, n_p)
                 den = d_p if den is None else jax.tree.map(jnp.add, den, d_p)
             else:
                 agg = part if agg is None else jax.tree.map(jnp.add, agg, part)
-        if hetero:
-            return self._apply_hetero(params, num, den)
-        return self._apply(params, agg)
+        with tracer.span("aggregate", backend=self.name,
+                         chunks=-(-U // c)):
+            out = (self._apply_hetero(params, num, den) if hetero
+                   else self._apply(params, agg))
+            if tracer.active:
+                jax.block_until_ready(out)
+        return out
 
     def describe(self):
         return {**super().describe(), "chunk_size": self.chunk_size}
@@ -308,7 +357,8 @@ class ShardMapBackend(ExecutionBackend):
     def run_round(self, params, xb, yb, wb, mask, p, eta, *,
                   bias_correct, wmasks=None):
         step = self._step(bool(bias_correct), wmasks is not None)
-        return step(params, xb, yb, wb, mask, p, eta, wmasks)
+        return self._traced_fused(step, params, xb, yb, wb, mask, p, eta,
+                                  wmasks)
 
     def describe(self):
         return {**super().describe(), "shards": self.n_shards,
@@ -392,7 +442,8 @@ class TemporalBackend(ExecutionBackend):
     def run_round(self, params, xb, yb, wb, mask, p, eta, *,
                   bias_correct, wmasks=None):
         step = self._step(bool(bias_correct), wmasks is not None)
-        return step(params, xb, yb, wb, mask, p, eta, wmasks)
+        return self._traced_fused(step, params, xb, yb, wb, mask, p, eta,
+                                  wmasks)
 
 
 def make_backend(backend, model, *, chunk_size: int = 16, mesh=None,

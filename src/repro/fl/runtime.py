@@ -40,6 +40,19 @@ Per-round observers (checkpointing, logging) hook in via the ``on_round``
 callback of :meth:`RoundRuntime.run`. Policies, width masks, availability
 models, and re-planning are therefore written once and work under every
 backend and every task.
+
+Observability flows through the single ``tracer=`` hook
+(:mod:`repro.obs`, default :data:`repro.obs.NULL_TRACER` — zero overhead,
+bit-identical trajectories): the runtime emits nestable phase spans
+(``cohort`` / ``replan`` / ``plan`` / ``stack`` / ``eval`` /
+``checkpoint``; the execution backends add ``local_train`` /
+``aggregate``), typed counters (padded-vs-real batch elements, skipped
+rounds, replan solver steps), and one clock-model ledger event per
+executed round (:func:`repro.obs.ledger.round_record`: planned deadline
+vs simulated clock vs measured wall time vs the exponential model's
+predicted straggler depths). ``verbose=True`` renders from the same
+records via :mod:`repro.obs.format`, so printed and recorded numbers
+cannot drift apart; the aggregate lands in ``History.telemetry``.
 """
 from __future__ import annotations
 
@@ -50,6 +63,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.baselines import Policy, RoundPlan
 from repro.core.replan import Replanner, make_replan
 from repro.fl.backends import make_backend
@@ -88,9 +102,24 @@ class History:
     # (round, reachable N, re-estimated U, new T tail, new m, ...)
     replans: list = dataclasses.field(default_factory=list)
     method: str = ""
+    # tracer-enabled runs only: the run's telemetry summary — per-phase
+    # wall totals, counter totals, the per-round clock-model ledger, and
+    # its drift statistics (repro.obs.Tracer.summary)
+    telemetry: dict = dataclasses.field(default_factory=dict)
 
-    def as_dict(self):
-        return dataclasses.asdict(self)
+    def as_dict(self) -> dict:
+        """JSON-round-trippable dict (``json.dump``-able as-is).
+
+        ``replans`` entries are converted through their own ``as_dict``
+        when they are :class:`repro.core.replan.ReplanEvent` dataclasses —
+        ``dataclasses.asdict`` recursion would also swallow jax/numpy
+        leaves elsewhere and silently deep-copies every list, so the
+        conversion is explicit and shallow.
+        """
+        d = {f.name: getattr(self, f.name) for f in dataclasses.fields(self)}
+        d["replans"] = [r.as_dict() if hasattr(r, "as_dict") else r
+                        for r in self.replans]
+        return d
 
 
 def _jit_predict(model: ModelAPI):
@@ -194,16 +223,23 @@ class RoundRuntime:
     instance; ``chunk_size`` / ``mesh`` configure the chunked / shard_map
     backends. ``donate=False`` disables params-buffer donation in the
     round steps (callers that re-read params they handed to the backend).
+    ``tracer`` (:class:`repro.obs.Tracer`) enables structured telemetry —
+    phase spans, counters, and the per-round clock-model ledger — for the
+    runtime AND the backend; the default :data:`repro.obs.NULL_TRACER`
+    records nothing and perturbs nothing.
     """
 
     def __init__(self, model: ModelAPI, policy: Policy, *,
                  backend="dense", chunk_size: int = 16, mesh=None,
-                 local_iters: int = 1, l2: float = 0.0, donate: bool = True):
+                 local_iters: int = 1, l2: float = 0.0, donate: bool = True,
+                 tracer=None):
         self.model = model
         self.policy = policy
+        self.tracer = tracer if tracer is not None else obs.NULL_TRACER
         self.backend = make_backend(backend, model, chunk_size=chunk_size,
                                     mesh=mesh, local_iters=local_iters, l2=l2,
                                     donate=donate)
+        self.backend.set_tracer(self.tracer)
         self._wmask_cache: dict[bytes, PyTree] = {}
 
     # ------------------------------------------------------------------
@@ -297,16 +333,22 @@ class RoundRuntime:
         params = model.init(k_init)
         U_pad = backend.cohort_pad(source.cohort_size)
 
+        tracer = self.tracer
         hist = History(method=method or policy.name)
         elapsed = 0.0
+        wall_start = obs.now()
         for t in range(rounds):
-            cohort = source.round_cohort(t)
+            tracer.set_round(t + 1)
+            wall_round0 = obs.now() if tracer.active else 0.0
+            with tracer.span("cohort"):
+                cohort = source.round_cohort(t)
             if cohort is None:
                 # nobody reachable: the round never starts and spends
                 # nothing — credit its planned deadline back so the next
                 # re-solve re-allocates it instead of stranding it
                 if replanner is not None:
                     replanner.note_skip(t)
+                tracer.count("rounds_skipped", 1)
                 continue
             if replanner is not None:
                 reachable = (cohort.available if cohort.available is not None
@@ -317,29 +359,54 @@ class RoundRuntime:
                     view_fn = getattr(source, "replan_view", None)
                     if view_fn is not None:
                         view = view_fn(t, budget_left, eta[t:rounds])
-                    ev = replanner.replan(t, budget_left, reachable, view)
-                    hist.replans.append(ev.as_dict())
+                    with tracer.span("replan", reachable=int(reachable)):
+                        ev = replanner.replan(t, budget_left, reachable,
+                                              view)
+                    rec = ev.as_dict()
+                    hist.replans.append(rec)
+                    tracer.event("replan", **rec)
+                    tracer.count("replan_solver_steps", ev.steps)
                     if verbose:
-                        print(f"[{hist.method}] replan @ round {t+1}: "
-                              f"reachable {reachable} -> U_est {ev.U_est}, "
-                              f"m {ev.m:.2f}, "
-                              f"T_tail[{len(ev.T_tail)}] sum "
-                              f"{sum(ev.T_tail):.2f}")
+                        print(obs.format_replan(hist.method, rec))
             key, k_round, k_batch = jax.random.split(key, 3)
-            plan: RoundPlan = policy.round(k_round, t, view=cohort.view)
+            with tracer.span("plan"):
+                plan: RoundPlan = policy.round(k_round, t, view=cohort.view)
             if elapsed + plan.elapsed > T_max * (1 + 1e-6):
                 break
-            xb, yb, wb, mask, U_act = self._prepare(cohort, plan, k_batch,
-                                                    s_max, U_pad)
-            wmasks = (None if plan.width_ratios is None else
-                      self._width_masks(params, plan.width_ratios, U_pad))
+            with tracer.span("stack"):
+                xb, yb, wb, mask, U_act = self._prepare(cohort, plan,
+                                                        k_batch, s_max,
+                                                        U_pad)
+                wmasks = (None if plan.width_ratios is None else
+                          self._width_masks(params, plan.width_ratios,
+                                            U_pad))
             params = backend.run_round(params, xb, yb, wb, mask, plan.p,
                                        jnp.float32(eta[t]),
                                        bias_correct=bool(plan.bias_correct),
                                        wmasks=wmasks)
             elapsed += plan.elapsed
+            if tracer.active:
+                # the clock-model ledger row: planned deadline vs simulated
+                # clock vs measured wall vs the exponential model's view
+                jax.block_until_ready(params)
+                wall_now = obs.now()
+                view_cfg = (cohort.view if cohort.view is not None
+                            else policy.cfg)
+                tracer.count("batch_elements_real",
+                             int(np.minimum(np.asarray(plan.batch_sizes,
+                                                       np.float64)[:U_act],
+                                            float(s_max)).sum()))
+                tracer.count("batch_elements_padded", U_pad * s_max)
+                tracer.gauge("cohort_size", U_act)
+                tracer.event("round", **obs.round_record(
+                    t=t, plan=plan, cfg=view_cfg, L=model.L, U_act=U_act,
+                    U_pad=U_pad, s_max=s_max, sim_total=elapsed,
+                    wall_round_s=wall_now - wall_round0,
+                    wall_total_s=wall_now - wall_start,
+                    available=cohort.available))
             if (t % eval_every == 0) or (t == rounds - 1):
-                acc, loss = eval_fn(params)
+                with tracer.span("eval"):
+                    acc, loss = eval_fn(params)
                 hist.times.append(elapsed)
                 hist.rounds.append(t + 1)
                 hist.accuracy.append(acc)
@@ -347,13 +414,20 @@ class RoundRuntime:
                 hist.train_loss.append(loss)
                 if cohort.available is not None:
                     hist.available.append(int(cohort.available))
-                if verbose:
-                    fleet_bit = (
-                        "" if cohort.available is None else
-                        f"avail {cohort.available:4d} cohort {U_act:3d} ")
-                    print(f"[{hist.method}] round {t+1:3d} {fleet_bit}"
-                          f"time {elapsed:9.2f} "
-                          f"deadline {plan.elapsed:7.3f} acc {acc:.4f}")
+                if tracer.active or verbose:
+                    # ONE record for the sink and the console: the verbose
+                    # line renders from exactly what gets recorded
+                    rec = {"round": t + 1, "available": cohort.available,
+                           "cohort": U_act, "sim_total": elapsed,
+                           "T_deadline": float(plan.elapsed),
+                           "acc": float(acc), "loss": float(loss)}
+                    tracer.event("eval", **rec)
+                    if verbose:
+                        print(obs.format_eval(hist.method, rec))
             if on_round is not None:
-                on_round(t, params, hist)
+                with tracer.span("checkpoint"):
+                    on_round(t, params, hist)
+        tracer.set_round(None)
+        if tracer.active:
+            hist.telemetry = tracer.summary()
         return params, hist

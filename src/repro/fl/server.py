@@ -37,7 +37,8 @@ def run_federated(model: ModelAPI, policy: Policy, cfg: AnalysisConfig,
                   eval_every: int = 1, verbose: bool = False,
                   backend="dense", chunk_size: int = 16,
                   mesh=None, replan=None, donate: bool = True,
-                  eval_fn=None, on_round=None) -> tuple[PyTree, History]:
+                  eval_fn=None, on_round=None,
+                  tracer=None) -> tuple[PyTree, History]:
     """Run up to R rounds, stopping when the simulated clock exceeds T_max.
 
     ``replan`` (None | trigger name | ``repro.core.replan.ReplanConfig``)
@@ -49,7 +50,9 @@ def run_federated(model: ModelAPI, policy: Policy, cfg: AnalysisConfig,
     ``eval_fn`` / ``on_round`` / ``donate`` are forwarded to
     :meth:`repro.fl.runtime.RoundRuntime.run` — task-specific eval metrics
     (:mod:`repro.fl.tasks`), a per-round observer (checkpointing), and
-    params-buffer donation in the backend round steps.
+    params-buffer donation in the backend round steps. ``tracer``
+    (:class:`repro.obs.Tracer`) enables structured telemetry — phase
+    spans, counters, and the clock-model ledger in ``History.telemetry``.
     """
     eta = cfg.eta if eta is None else np.asarray(eta, np.float32)
     if s_max is None:
@@ -58,7 +61,8 @@ def run_federated(model: ModelAPI, policy: Policy, cfg: AnalysisConfig,
                         int(client_y.shape[1])), 2)
     runtime = RoundRuntime(model, policy, backend=backend,
                            chunk_size=chunk_size, mesh=mesh,
-                           local_iters=local_iters, l2=l2, donate=donate)
+                           local_iters=local_iters, l2=l2, donate=donate,
+                           tracer=tracer)
     source = StaticCohortSource(client_x, client_y, n_per_client)
     return runtime.run(source, rounds=cfg.R, T_max=cfg.T_max, eta=eta,
                        s_max=s_max, key=key, test_x=test_x, test_y=test_y,

@@ -174,7 +174,7 @@ def run_fleet(model: ModelAPI, fleet: Fleet, availability: AvailabilityModel,
               s_max: Optional[int] = None, eval_every: int = 1,
               seed: int = 0, verbose: bool = False,
               replan=None, donate: bool = True,
-              eval_metrics=None) -> tuple:
+              eval_metrics=None, tracer=None) -> tuple:
     """Run up to ``rounds`` federated rounds against a simulated fleet.
 
     Returns ``(params, History)``; the History carries the same fields as
@@ -191,7 +191,9 @@ def run_fleet(model: ModelAPI, fleet: Fleet, availability: AvailabilityModel,
     loss)``) overrides the classification accuracy default — pass
     :func:`repro.fl.tasks.lm_eval_metrics` with
     :func:`repro.fl.tasks.lm_fleet_data` to run LM workloads against the
-    fleet.
+    fleet. ``tracer`` (:class:`repro.obs.Tracer`) enables structured
+    telemetry — phase spans, counters, and the per-round clock-model
+    ledger summarized into ``History.telemetry``.
     """
     if fleet.size != len(data.parts):
         raise ValueError(f"fleet size {fleet.size} != data shards "
@@ -234,7 +236,7 @@ def run_fleet(model: ModelAPI, fleet: Fleet, availability: AvailabilityModel,
     runtime = RoundRuntime(model, policy, backend=backend,
                            chunk_size=min(chunk_size, cohort_size),
                            mesh=mesh, local_iters=local_iters, l2=l2,
-                           donate=donate)
+                           donate=donate, tracer=tracer)
     source = FleetCohortSource(fleet, availability, data, ref,
                                cohort_size=cohort_size,
                                strategy=cohort_strategy, seed=seed)

@@ -16,9 +16,9 @@ import argparse
 import dataclasses
 import json
 import os
-import time
 from typing import Optional
 
+from repro import obs
 from repro.configs.base import FleetConfig, ReplanConfig
 from repro.core.replan import TRIGGERS
 from repro.data.synthetic import make_image_dataset
@@ -121,12 +121,17 @@ def run_scenario(scn: Scenario, *, rounds: Optional[int] = None,
                  replan=None, replan_every: Optional[int] = None,
                  seed: int = 0,
                  solver_steps: int = 600, eval_every: int = 1,
-                 verbose: bool = True) -> dict:
+                 verbose: bool = True, events: Optional[str] = None,
+                 tracer=None) -> dict:
     """Run one scenario; returns the History dict (+ fleet/availability
     descriptions) consumable by ``benchmarks/report.py``. ``backend``
     overrides the FleetConfig's execution backend (dense/chunked/shard_map);
     ``replan`` (trigger name or ``ReplanConfig``) and ``replan_every``
-    override the FleetConfig's online re-planning block."""
+    override the FleetConfig's online re-planning block. ``events`` writes
+    the structured telemetry stream (phase spans, clock-model ledger) to a
+    JSONL file for ``python -m repro.obs.timeline``; ``tracer`` passes an
+    already-built :class:`repro.obs.Tracer` instead (the caller keeps
+    ownership — it is not closed here)."""
     fc = scn.fleet
     if fleet_size is not None:
         fc = dataclasses.replace(fc, size=fleet_size)
@@ -166,15 +171,25 @@ def run_scenario(scn: Scenario, *, rounds: Optional[int] = None,
                                alpha=scn.alpha, seed=seed)
         model = make_cnn() if scn.model == "cnn" else make_mlp()
 
-    t0 = time.time()
-    _, hist = run_fleet(
-        model, fleet, avail, data, method=scn.method, rounds=rounds,
-        cohort_size=fc.cohort_size, cohort_strategy=fc.cohort_strategy,
-        backend=fc.backend, chunk_size=fc.chunk_size, eta0=scn.eta0,
-        solver_steps=solver_steps, eval_every=eval_every, seed=seed,
-        verbose=verbose, replan=fc.replan, eval_metrics=eval_m)
+    own_tracer = tracer is None and events is not None
+    if own_tracer:
+        tracer = obs.make_tracer(events)
+    t0 = obs.now()
+    try:
+        _, hist = run_fleet(
+            model, fleet, avail, data, method=scn.method, rounds=rounds,
+            cohort_size=fc.cohort_size, cohort_strategy=fc.cohort_strategy,
+            backend=fc.backend, chunk_size=fc.chunk_size, eta0=scn.eta0,
+            solver_steps=solver_steps, eval_every=eval_every, seed=seed,
+            verbose=verbose, replan=fc.replan, eval_metrics=eval_m,
+            tracer=tracer)
+    finally:
+        if own_tracer:
+            tracer.close()
     out = hist.as_dict()
-    out["wall_s"] = round(time.time() - t0, 2)
+    out["wall_s"] = round(obs.now() - t0, 2)
+    if events is not None:
+        out["events_path"] = os.path.abspath(events)
     out["scenario"] = scn.name
     out["fleet"] = fleet.describe()
     out["availability"] = avail.describe()
@@ -218,6 +233,10 @@ def main(argv=None) -> None:
                     help="every-k re-plan period override")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--solver-steps", type=int, default=600)
+    ap.add_argument("--events", default=None, metavar="PATH",
+                    help="write the structured telemetry stream (phase "
+                         "spans, clock-model ledger) to this JSONL file; "
+                         "render with python -m repro.obs.timeline")
     ap.add_argument("--save", action="store_true",
                     help="merge the History into experiments/results/"
                          "fleet_scenarios.json for benchmarks.report")
@@ -245,7 +264,7 @@ def main(argv=None) -> None:
                        cohort_size=args.cohort, backend=args.backend,
                        replan=args.replan, replan_every=args.replan_every,
                        seed=args.seed, solver_steps=args.solver_steps,
-                       verbose=not args.quiet)
+                       verbose=not args.quiet, events=args.events)
     acc = res["accuracy"][-1] if res["accuracy"] else float("nan")
     rounds_done = res["rounds"][-1] if res["rounds"] else 0
     print(f"[{scn.name}] method={scn.method} fleet={res['fleet']['size']} "
@@ -256,6 +275,9 @@ def main(argv=None) -> None:
     if res["replans"]:
         print(f"  replans:     "
               f"{[(r['round'], r['U_est'], round(r['m'], 2)) for r in res['replans']]}")
+    if args.events:
+        print(f"  events:      {res['events_path']} "
+              f"(render: python -m repro.obs.timeline {args.events})")
     if args.save:
         path = save_scenario_result(scn.name, scn.method, res)
         print(f"  saved -> {path}")

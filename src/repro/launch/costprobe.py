@@ -37,9 +37,10 @@ import dataclasses
 import glob
 import json
 import sys
-import time
 
 import jax
+
+from repro.obs import now
 
 from repro.configs import get_config, get_shape
 from repro.launch.mesh import make_production_mesh
@@ -62,10 +63,10 @@ def _cost_of(cfg, shape, mesh, *, mode, fsdp, remat):
         cfg, shape, mesh, mode=mode, fsdp=fsdp, remat=remat, unroll=False)
     # cfg already carries unroll_layers=True; build_dryrun(unroll=False)
     # simply does not override it.
-    t0 = time.time()
+    t0 = now()
     compiled = jax.jit(step, in_shardings=in_sh,
                        out_shardings=out_sh).lower(*args).compile()
-    dt = time.time() - t0
+    dt = now() - t0
     cost = compiled.cost_analysis() or {}
     coll = collective_bytes(compiled.as_text())
     return {"flops": float(cost.get("flops", 0.0)),

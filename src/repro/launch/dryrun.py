@@ -19,9 +19,10 @@ import argparse
 import json
 import re
 import sys
-import time
 
 import jax
+
+from repro.obs import now
 
 from repro.configs import ARCHS, INPUT_SHAPES, get_config, get_shape
 from repro.launch.mesh import make_production_mesh, mesh_chips
@@ -80,13 +81,13 @@ def collective_bytes(hlo_text: str) -> dict:
 
 def _compile_and_cost(step, args, in_sh, out_sh):
     """jit -> lower -> compile; return (compiled, flops, bytes, coll, times)."""
-    t0 = time.time()
+    t0 = now()
     jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
     lowered = jitted.lower(*args)
-    t_lower = time.time() - t0
-    t0 = time.time()
+    t_lower = now() - t0
+    t0 = now()
     compiled = lowered.compile()
-    t_compile = time.time() - t0
+    t_compile = now() - t0
     cost = compiled.cost_analysis() or {}
     flops = float(cost.get("flops", 0.0))
     bytes_acc = float(cost.get("bytes accessed", 0.0))

@@ -6,9 +6,10 @@
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
+
+from repro.obs import now
 import jax.numpy as jnp
 import numpy as np
 
@@ -40,21 +41,21 @@ def serve(arch: str, *, batch: int = 4, prompt_len: int = 32,
 
     # prefill by stepping the prompt through the decode path (cache fill);
     # production prefill is the batched forward (see launch/specs.py)
-    t0 = time.time()
+    t0 = now()
     tok = prompts[:, 0]
     for i in range(prompt_len - 1):
         _, cache = step(params, cache, prompts[:, i], jnp.int32(i))
-    t_prefill = time.time() - t0
+    t_prefill = now() - t0
 
     out = [prompts[:, -1]]
-    t0 = time.time()
+    t0 = now()
     pos = prompt_len - 1
     tok = prompts[:, -1]
     for j in range(new_tokens):
         tok, cache = step(params, cache, tok, jnp.int32(pos + j))
         out.append(tok)
     jax.block_until_ready(tok)
-    t_decode = time.time() - t0
+    t_decode = now() - t0
     gen = np.stack([np.asarray(t) for t in out[1:]], axis=1)
     tps = batch * new_tokens / max(t_decode, 1e-9)
     if verbose:

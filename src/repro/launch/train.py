@@ -21,12 +21,13 @@ exercised via dryrun.py.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import math
-import time
 
 import jax
 
+from repro import obs
 from repro.checkpoint import save_checkpoint
 from repro.configs import get_config
 from repro.core.baselines import make_policy
@@ -47,7 +48,7 @@ def run_training(arch: str, *, method: str = "adel", rounds: int = 40,
                  replan=None, local_iters: int = 1, donate: bool = True,
                  s_max_cap: int = 32, eval_every: int | None = None,
                  ckpt: str | None = None, ckpt_every: int | None = None,
-                 verbose: bool = True) -> tuple[object, History]:
+                 verbose: bool = True, tracer=None) -> tuple[object, History]:
     """Federated LM training on ``RoundRuntime``; returns ``(params,
     History)`` — ``History.accuracy`` is next-token accuracy and
     ``History.train_loss`` the token CE over a fixed in-pool eval head
@@ -59,7 +60,9 @@ def run_training(arch: str, *, method: str = "adel", rounds: int = 40,
     trigger (None | "never" | "every-k" | "drift" |
     :class:`repro.core.replan.ReplanConfig`), ``ckpt`` a checkpoint path
     saved every ``ckpt_every`` rounds (default R/4) through the runtime's
-    ``on_round`` hook.
+    ``on_round`` hook, ``tracer`` a :class:`repro.obs.Tracer` for
+    structured telemetry (phase spans + clock-model ledger in
+    ``History.telemetry``).
     """
     cfg = get_config(arch)
     if reduced:
@@ -83,7 +86,8 @@ def run_training(arch: str, *, method: str = "adel", rounds: int = 40,
 
     runtime = RoundRuntime(task.model, policy, backend=backend,
                            chunk_size=chunk_size, mesh=mesh,
-                           local_iters=local_iters, donate=donate)
+                           local_iters=local_iters, donate=donate,
+                           tracer=tracer)
 
     on_round = None
     if ckpt:
@@ -107,6 +111,35 @@ def run_training(arch: str, *, method: str = "adel", rounds: int = 40,
                         else 0, meta={"arch": cfg.name, "method": method,
                                       "backend": backend})
     return params, hist
+
+
+@contextlib.contextmanager
+def _profile(trace_dir: str | None):
+    """Opt-in ``jax.profiler`` device trace around the training run.
+
+    Best-effort: some CPU-only / stripped builds lack a working profiler
+    backend, and a missing trace must never kill a training run — failures
+    downgrade to a warning.
+    """
+    if not trace_dir:
+        yield
+        return
+    started = False
+    try:
+        jax.profiler.start_trace(trace_dir)
+        started = True
+    except Exception as e:  # pragma: no cover - backend-dependent
+        print(f"[train] jax.profiler unavailable ({e}); continuing "
+              f"without a device trace")
+    try:
+        yield
+    finally:
+        if started:
+            try:
+                jax.profiler.stop_trace()
+                print(f"[train] device trace -> {trace_dir}")
+            except Exception as e:  # pragma: no cover - backend-dependent
+                print(f"[train] jax.profiler.stop_trace failed ({e})")
 
 
 def main(argv=None):
@@ -138,22 +171,39 @@ def main(argv=None):
                     choices=["adam", "trust-constr"])
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--out", default=None)
+    ap.add_argument("--events", default=None, metavar="PATH",
+                    help="write the structured telemetry stream (phase "
+                         "spans, clock-model ledger) to this JSONL file; "
+                         "render with python -m repro.obs.timeline")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="capture a jax.profiler device trace of the whole "
+                         "run into DIR (view with TensorBoard / Perfetto); "
+                         "opt-in — profiling is skipped with a warning if "
+                         "the profiler backend is unavailable")
     args = ap.parse_args(argv)
     replan = args.replan
     if replan is not None and args.replan_every is not None:
         replan = ReplanConfig(trigger=replan, every=args.replan_every)
-    t0 = time.time()
-    _, hist = run_training(args.arch, method=args.method, rounds=args.rounds,
-                           tmax=args.tmax, U=args.clients, eta0=args.eta0,
-                           seq=args.seq, seed=args.seed,
-                           reduced=args.reduced, solver=args.solver,
-                           backend=args.backend, chunk_size=args.chunk_size,
-                           replan=replan, donate=args.donate,
-                           ckpt=args.ckpt)
+    tracer = obs.make_tracer(args.events)
+    t0 = obs.now()
+    with _profile(args.profile_dir):
+        _, hist = run_training(args.arch, method=args.method,
+                               rounds=args.rounds,
+                               tmax=args.tmax, U=args.clients, eta0=args.eta0,
+                               seq=args.seq, seed=args.seed,
+                               reduced=args.reduced, solver=args.solver,
+                               backend=args.backend,
+                               chunk_size=args.chunk_size,
+                               replan=replan, donate=args.donate,
+                               ckpt=args.ckpt, tracer=tracer)
+    tracer.close()
     loss = hist.train_loss[-1]
-    print(f"[train] done in {time.time() - t0:.1f}s wall; "
+    print(f"[train] done in {obs.now() - t0:.1f}s wall; "
           f"final token loss {loss:.4f} (ppl {math.exp(min(loss, 30)):.1f}, "
           f"token acc {hist.accuracy[-1]:.4f})")
+    if args.events:
+        print(f"[train] telemetry -> {args.events} "
+              f"(render: python -m repro.obs.timeline {args.events})")
     if args.out:
         with open(args.out, "w") as f:
             json.dump({**hist.as_dict(), "arch": args.arch,

@@ -1,0 +1,144 @@
+"""Render a recorded telemetry stream in the terminal.
+
+    PYTHONPATH=src python -m repro.obs.timeline events.jsonl [events2.jsonl ...]
+
+Three sections per stream:
+
+* **phase timeline** — per-round wall-seconds by phase (``cohort`` /
+  ``replan`` / ``plan`` / ``stack`` / ``local_train`` / ``aggregate`` /
+  ``eval`` / ``checkpoint``), i.e. where each round's host time actually
+  went;
+* **clock-model ledger** — per-round planned deadline ``T_t``, simulated
+  clock, measured wall time, and the exponential model's predictions
+  (full-depth completion time, expected backprop depth) against the round's
+  realized straggler draw (:mod:`repro.obs.ledger` documents the columns);
+* **stragglers / deadline misses** — per-round full/missed/zero-contributor
+  counts with the worst miss depth, plus the run-level drift summary.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.obs.ledger import drift_summary, ledger_rows, phase_table
+from repro.obs.trace import PHASES
+
+__all__ = ["load_events", "render", "main"]
+
+
+def load_events(path: str) -> list[dict]:
+    """Parse a JSONL event file, skipping unparseable lines (a crashed run
+    leaves a valid prefix; never let one torn line hide the rest)."""
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                out.append(json.loads(line))
+            except json.JSONDecodeError:
+                continue
+    return out
+
+
+def _table(headers: list[str], rows: list[list[str]]) -> str:
+    widths = [max(len(h), *(len(r[i]) for r in rows)) if rows else len(h)
+              for i, h in enumerate(headers)]
+    fmt = "  ".join(f"{{:>{w}}}" for w in widths)
+    lines = [fmt.format(*headers), fmt.format(*("-" * w for w in widths))]
+    lines += [fmt.format(*r) for r in rows]
+    return "\n".join(lines)
+
+
+def _fmt_ms(s: float) -> str:
+    return f"{1e3 * s:.1f}"
+
+
+def render(records: list[dict], *, title: str = "") -> str:
+    """Render one event stream's three sections as a string."""
+    out = []
+    if title:
+        out.append(f"== {title} ==")
+
+    phases = phase_table(records)
+    seen = [p for p in PHASES
+            if any(p in row for row in phases.values())]
+    extra = sorted({name for row in phases.values() for name in row}
+                   - set(seen))
+    cols = seen + extra
+    if phases:
+        rows = []
+        for rnd in sorted(phases):
+            row = phases[rnd]
+            rows.append([str(rnd)] + [(_fmt_ms(row[c]) if c in row else "—")
+                                      for c in cols]
+                        + [_fmt_ms(sum(row.values()))])
+        out.append("\n-- phase timeline (ms of host wall time per round) --")
+        out.append(_table(["round"] + cols + ["total"], rows))
+
+    ledger = ledger_rows(records)
+    if ledger:
+        rows = []
+        for r in ledger:
+            rows.append([
+                str(r.get("round", r.get("t", 0) + 1)),
+                f"{r['T_deadline']:.3f}",
+                f"{r['sim_total']:.2f}",
+                f"{r['wall_round_s']:.3f}",
+                (f"{r['pred_full_s']:.3f}" if "pred_full_s" in r else "—"),
+                (f"{r['depth_pred']:.2f}" if "depth_pred" in r else "—"),
+                f"{r['depth_real']:.2f}",
+                (f"{r['p1_pred']:.4f}" if "p1_pred" in r else "—"),
+            ])
+        out.append("\n-- clock-model ledger "
+                   "(deadline vs simulated vs wall vs predicted) --")
+        out.append(_table(["round", "T_t", "sim", "wall_s", "pred_full",
+                           "depth_pred", "depth_real", "p1_pred"], rows))
+
+        rows = []
+        for r in ledger:
+            rows.append([
+                str(r.get("round", r.get("t", 0) + 1)),
+                str(r.get("available", "—")),
+                str(r["cohort"]),
+                str(r["full"]),
+                str(r["missed"]),
+                str(r["zero_contrib"]),
+                str(r["worst_miss"]),
+                f"{r['batch_real']}/{r['batch_padded']}",
+            ])
+        out.append("\n-- stragglers / deadline misses --")
+        out.append(_table(["round", "avail", "cohort", "full", "missed",
+                           "zero", "worst_miss", "batch real/pad"], rows))
+
+        drift = drift_summary(ledger)
+        if drift:
+            out.append("\n-- drift summary --")
+            out += [f"  {k:24s} {v}" for k, v in drift.items()]
+    if len(out) <= (1 if title else 0):
+        out.append("(no span or round records found)")
+    return "\n".join(out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("events", nargs="+",
+                    help="JSONL event file(s) written by repro.obs.JsonlSink")
+    args = ap.parse_args(argv)
+    status = 0
+    for path in args.events:
+        try:
+            records = load_events(path)
+        except OSError as e:
+            print(f"[timeline] cannot read {path}: {e}", file=sys.stderr)
+            status = 1
+            continue
+        print(render(records, title=path))
+        print()
+    return status
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
