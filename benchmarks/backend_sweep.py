@@ -1,6 +1,10 @@
 """Backend sweep — wall-clock per round for the four execution backends
 (dense / chunked / shard_map / temporal) across cohort sizes {16, 64, 256},
-plus the compile-time memory effect of params-buffer donation.
+plus the compile-time memory effect of params-buffer donation and the
+``compression`` section: bytes-on-the-wire per round, s/round, and final
+accuracy for none / int8 / topk8 client->server payloads on the reduced
+LM arch (``repro.core.compression``; byte counts are analytic and
+deterministic, gated exactly by ``benchmarks/run.py --check-against``).
 
 Drives :class:`repro.fl.runtime.RoundRuntime` directly: one warmup pass
 compiles each backend's round step, then a timed pass measures steady-state
@@ -25,6 +29,7 @@ from benchmarks.common import cached_result, save_result
 COHORTS = (16, 64, 256)
 BACKENDS = ("dense", "chunked", "shard_map", "temporal")
 DONATION_BACKENDS = ("dense", "temporal")
+COMPRESSION_MODES = ("none", "int8", "topk8")
 
 
 def _sweep_one(U: int, backend: str, *, rounds: int, chunk_size: int,
@@ -74,6 +79,42 @@ def _sweep_one(U: int, backend: str, *, rounds: int, chunk_size: int,
         "final_acc": hist.accuracy[-1] if hist.accuracy else None,
         "devices": len(jax.devices()),
         **runtime.backend.describe(),
+    }
+
+
+def _compression_one(mode: str, *, rounds: int,
+                     arch: str = "qwen1.5-4b") -> dict:
+    """Compressed vs dense client->server payloads on the reduced LM arch
+    (the federated LM driver, dense backend).
+
+    Byte counters are the backends' analytic per-round payload accounting
+    (``repro.core.compression.payload_bytes``) — deterministic given the
+    arch and cohort, so the CI gate matches ``bytes_per_round_*`` exactly
+    while wall-clock and accuracy keep their usual tolerances.
+    """
+    from repro import obs
+    from repro.launch.train import run_training
+
+    tracer = obs.Tracer(obs.MemorySink())
+    t0 = time.time()
+    _, hist = run_training(arch, rounds=rounds, tmax=20.0 * rounds, U=4,
+                           seq=16, n_seq=24, backend="dense",
+                           solver_steps=60,
+                           compression=None if mode == "none" else mode,
+                           eval_every=rounds, verbose=False, tracer=tracer)
+    wall = time.time() - t0
+    done = len(hist.rounds) or 1
+    ctr = tracer.summary().get("counters", {})
+    logical = int(ctr.get("aggregate_bytes_logical", 0))
+    wire = int(ctr.get("aggregate_bytes_wire", 0))
+    return {
+        "mode": mode, "arch": arch, "rounds": done,
+        "wall_s": round(wall, 4),
+        "wall_per_round_s": round(wall / done, 4),
+        "final_acc": hist.accuracy[-1] if hist.accuracy else None,
+        "bytes_per_round_logical": logical // done,
+        "bytes_per_round_wire": wire // done,
+        "wire_ratio": round(logical / wire, 4) if wire else None,
     }
 
 
@@ -158,6 +199,20 @@ def run(quick: bool = False) -> dict:
                   f"{rec['wall_per_round_s']:8.3f}s/round "
                   f"(pad {rec['U_pad']}, {rec['devices']} dev)")
         result[f"cohort_{U}"] = row
+    comp = {}
+    for mode in COMPRESSION_MODES:
+        rec = _compression_one(mode, rounds=2 if quick else 4)
+        comp[mode] = rec
+        ratio = rec["wire_ratio"]
+        print(f"[backend_sweep] compression {mode:6s} "
+              f"{rec['bytes_per_round_wire']:>12,}B/round wire "
+              f"({ratio}x vs dense f32) "
+              f"{rec['wall_per_round_s']:8.3f}s/round "
+              f"acc={rec['final_acc']:.4f}")
+    if comp["int8"]["wire_ratio"] < 3.5:      # acceptance floor
+        print(f"[backend_sweep] WARNING: int8 wire ratio "
+              f"{comp['int8']['wire_ratio']} < 3.5x")
+    result["compression"] = comp
     donation = _donation_memory()
     if donation:
         result["donation"] = donation

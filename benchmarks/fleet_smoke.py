@@ -1,12 +1,15 @@
 """Fleet-smoke — fast end-to-end pass over two contrasting fleet scenarios
-(churny long-tail mobile vs always-on datacenter) at reduced scale."""
+(churny long-tail mobile vs always-on datacenter) at reduced scale, plus
+the int8-compressed twin of the mobile scenario (same population and
+seeds; the matched-accuracy wire-compression comparison)."""
 from __future__ import annotations
 
 import dataclasses
 
 from benchmarks.common import cached_result, events_path, save_result
 
-SCENARIO_NAMES = ("longtail-mobile-diurnal", "datacenter-always-on")
+SCENARIO_NAMES = ("longtail-mobile-diurnal", "datacenter-always-on",
+                  "longtail-mobile-diurnal-int8")
 
 
 def run(quick: bool = False) -> dict:
@@ -31,6 +34,13 @@ def run(quick: bool = False) -> dict:
               f"{hist['rounds'][-1] if hist['rounds'] else 0}"
               f"  final_acc={acc:.4f}  wall={hist['wall_s']:.1f}s")
         result[name] = {scn.method: hist}
+    base = result["longtail-mobile-diurnal"]["adel"]
+    comp = result["longtail-mobile-diurnal-int8"]["adel"]
+    if base.get("accuracy") and comp.get("accuracy"):
+        a0, a1 = base["accuracy"][-1], comp["accuracy"][-1]
+        print(f"[fleet_smoke] int8 wire vs dense f32 final acc: "
+              f"{a1:.4f} vs {a0:.4f} (|diff| = {abs(a1 - a0):.4f}; "
+              f"acceptance bound 0.02)")
     save_result("fleet_smoke", result)
     return result
 

@@ -96,6 +96,25 @@ def section_backend_sweep() -> str:
                     if isinstance(d, dict)), "?")
         out.append(f"| {setting.removeprefix('cohort_')} | "
                    + " | ".join(cells) + f" | {dev} |")
+    comp = res.get("compression")
+    if isinstance(comp, dict) and comp:
+        out += ["", "compressed client->server payloads "
+                    "(reduced LM arch, dense backend; "
+                    "bytes are analytic/deterministic):", "",
+                "| mode | wire bytes/round | vs dense f32 | s/round "
+                "| final acc |",
+                "|---|---|---|---|---|"]
+        for mode in ("none", "int8", "topk8"):
+            d = comp.get(mode)
+            if not isinstance(d, dict):
+                continue
+            ratio = (f"{d['wire_ratio']:.2f}x"
+                     if d.get("wire_ratio") else "—")
+            acc = (f"{d['final_acc']:.4f}"
+                   if isinstance(d.get("final_acc"), (int, float)) else "—")
+            out.append(f"| {mode} | "
+                       f"{_fmt_bytes(d['bytes_per_round_wire'])} | {ratio} "
+                       f"| {d['wall_per_round_s']:.3f} | {acc} |")
     don = res.get("donation")
     if isinstance(don, dict) and don:
         out += ["", "donated params buffers (compiled peak bytes, "
@@ -198,9 +217,18 @@ def section_telemetry() -> str:
             other_s = sum(v.get("total_s", 0.0)
                           for k, v in phases.items()
                           if k not in ("local_train", "aggregate"))
+            ctr = tel.get("counters", {})
+            logical = ctr.get("aggregate_bytes_logical", 0)
+            wire = ctr.get("aggregate_bytes_wire", 0)
+            if wire:
+                bytes_cell = (f"{_fmt_bytes(logical)}/{_fmt_bytes(wire)} "
+                              f"({logical / wire:.1f}x)")
+            else:
+                bytes_cell = "—"
             rows.append(
                 f"| {setting} | {method} | {drift.get('rounds', '—')} "
                 f"| {train_s:.2f}/{other_s:.2f} "
+                f"| {bytes_cell} "
                 f"| {drift.get('depth_drift_mean', '—')} "
                 f"| {drift.get('miss_rate', '—')} "
                 f"| {drift.get('zero_rate', '—')} "
@@ -213,10 +241,14 @@ def section_telemetry() -> str:
            "wall = measured host perf_counter time. depth_drift = realized "
            "minus predicted backprop depth (layers, mean over rounds); "
            "deadline_vs_full_wait = planned deadline as a fraction of the "
-           "synchronized full-depth wait (the paper's Eq. 5 saving).\n",
+           "synchronized full-depth wait (the paper's Eq. 5 saving). "
+           "bytes logical/wire = dense-float32 payload the aggregation "
+           "consumed vs compressed bytes on the wire "
+           "(repro.core.compression), with the reduction ratio.\n",
            "| setting | method | rounds | train/other wall_s "
-           "| depth_drift | miss_rate | zero_rate | T_t/full_wait |",
-           "|---|---|---|---|---|---|---|---|"]
+           "| bytes logical/wire | depth_drift | miss_rate | zero_rate "
+           "| T_t/full_wait |",
+           "|---|---|---|---|---|---|---|---|---|"]
     out += rows
     out.append("")
     return "\n".join(out)

@@ -13,9 +13,10 @@ the committed baseline JSON in ``DIR``. Wall-clock fields may grow by at
 most ``--time-tolerance`` (default 2.5x — shared runners are slow and
 noisy), accuracy fields must stay within ``--acc-tolerance`` (default
 0.035 absolute — runs are seeded, so only platform float drift remains);
-any regression fails the run with a non-zero exit code. Metrics whose
-shape changed (e.g. a quick pass checked against a full baseline) are
-reported as skipped, not failed.
+analytic payload-byte fields (``bytes_per_round_*``) are deterministic and
+must match exactly; any regression fails the run with a non-zero exit
+code. Metrics whose shape changed (e.g. a quick pass checked against a
+full baseline) are reported as skipped, not failed.
 """
 from __future__ import annotations
 
@@ -31,6 +32,9 @@ SUITE_NAMES = ("fig2_mnist", "fig3_cifar", "fig4_robustness",
 # metric-field classification for the regression gate
 _TIME_KEYS = ("wall_s", "wall_per_round_s")
 _ACC_KEYS = ("final_acc",)
+# analytic payload byte counts (repro.core.compression.payload_bytes) are
+# deterministic given arch + cohort — gated by EXACT equality, no tolerance
+_BYTES_KEYS = ("bytes_per_round_logical", "bytes_per_round_wire")
 
 
 def _suites() -> dict:
@@ -179,6 +183,13 @@ def check_result(name: str, fresh: dict, baseline: dict, *,
                 viol.append(f"{where}: {fval:.3f}s vs baseline "
                             f"{bval:.3f}s (> {time_tol:.1f}x + "
                             f"{time_slack:.1f}s)")
+        elif key in _BYTES_KEYS and isinstance(bval, (int, float)):
+            if not isinstance(fval, (int, float)):
+                skip.append(f"{where}: missing in fresh result")
+            elif fval != bval:
+                viol.append(f"{where}: {fval} vs baseline {bval} "
+                            f"(analytic payload bytes are deterministic — "
+                            f"exact match required)")
         elif key in _ACC_KEYS and isinstance(bval, (int, float)):
             if not isinstance(fval, (int, float)):
                 skip.append(f"{where}: missing in fresh result")
@@ -216,6 +227,12 @@ def _derive(name: str, result: dict) -> str:
                                  if b in row)
                 pieces.append(f"{setting.removeprefix('cohort_')}:{walls}s")
             out = "dense/chunked/shard/temporal " + " ".join(pieces)
+            comp = result.get("compression", {})
+            ratios = [f"{m}:x{v['wire_ratio']}" for m, v in comp.items()
+                      if isinstance(v, dict) and v.get("wire_ratio")
+                      and m != "none"]
+            if ratios:
+                out += " wire " + " ".join(ratios)
             don = result.get("donation", {})
             ratios = [f"{k}:x{v['peak_ratio']}" for k, v in don.items()
                       if isinstance(v, dict) and "peak_ratio" in v]

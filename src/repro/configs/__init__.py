@@ -4,7 +4,8 @@
 """
 from __future__ import annotations
 
-from .base import INPUT_SHAPES, ArchConfig, FleetConfig, InputShape
+from .base import (INPUT_SHAPES, ArchConfig, CompressionConfig, FleetConfig,
+                   InputShape)
 
 from .qwen1_5_4b import CONFIG as _qwen
 from .mamba2_370m import CONFIG as _mamba2
@@ -22,8 +23,8 @@ ARCHS: dict[str, ArchConfig] = {c.name: c for c in [
     _seamless, _arctic, _yi, _hymba, _commandr,
 ]}
 
-__all__ = ["ARCHS", "INPUT_SHAPES", "ArchConfig", "FleetConfig", "InputShape",
-           "get_config", "get_shape"]
+__all__ = ["ARCHS", "INPUT_SHAPES", "ArchConfig", "CompressionConfig",
+           "FleetConfig", "InputShape", "get_config", "get_shape"]
 
 
 def get_config(name: str) -> ArchConfig:

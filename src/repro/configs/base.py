@@ -11,10 +11,11 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+from repro.core.compression import CompressionConfig
 from repro.core.replan import ReplanConfig
 
-__all__ = ["ArchConfig", "FleetConfig", "InputShape", "INPUT_SHAPES",
-           "ReplanConfig", "pad_vocab"]
+__all__ = ["ArchConfig", "CompressionConfig", "FleetConfig", "InputShape",
+           "INPUT_SHAPES", "ReplanConfig", "pad_vocab"]
 
 
 def pad_vocab(v: int, multiple: int = 512) -> int:
@@ -234,6 +235,11 @@ class FleetConfig:
     # the static offline schedule; "every-k" / "drift" re-solve the
     # remaining-horizon Problem 2 against the reachable population
     replan: ReplanConfig = ReplanConfig()
+    # client->server wire compression (repro.core.compression): mode "none"
+    # ships dense float32 deltas; "int8" / "topk8" make the compressed
+    # payload what the backend's reduction consumes, and scale the
+    # Problem-2 solver's per-user communication time B_u by the wire ratio
+    compression: CompressionConfig = CompressionConfig()
     seed: int = 0
 
     def availability_dict(self) -> dict:

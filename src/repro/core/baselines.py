@@ -131,7 +131,7 @@ class DropPolicy(Policy):
     def round(self, key, t, view=None):
         cfg = self._resolve(view)
         S_fix = self._fixed_batch(view, self.T_t)
-        P, B = jnp.asarray(cfg.P), jnp.asarray(cfg.B)
+        P, B = jnp.asarray(cfg.P), jnp.asarray(cfg.B_eff)
         lam = P / S_fix * jnp.maximum(self.T_t - B, 0.0)
         z = straggler.sample_depths(key, lam)
         full = (z >= cfg.L).astype(jnp.float32)                  # (U,)
@@ -157,7 +157,7 @@ class WaitPolicy(Policy):
     def round(self, key, t, view=None):
         cfg = self._resolve(view)
         S_fix = self._fixed_batch(view, self.T_ref)
-        P, B = jnp.asarray(cfg.P), jnp.asarray(cfg.B)
+        P, B = jnp.asarray(cfg.P), jnp.asarray(cfg.B_eff)
         # full backprop time = sum of L iid Exp(S/P) = Gamma(L, scale=S/P);
         # with a FIXED batch the slowest device dominates the round clock
         g = jax.random.gamma(key, cfg.L, shape=(cfg.U,)) * (S_fix / P)
@@ -201,7 +201,7 @@ class HeteroFLPolicy(Policy):
         cfg = self._resolve(view)
         ratios = (self.ratios if view is None
                   else self._capability_ratios(cfg.P))
-        P, B = jnp.asarray(cfg.P), jnp.asarray(cfg.B)
+        P, B = jnp.asarray(cfg.P), jnp.asarray(cfg.B_eff)
         S_fix = straggler.fixed_batch(self.T_t, self.m, cfg)
         r = jnp.asarray(ratios)
         # per-layer time Exp(S r^2 / P) -> completed layers ~ Poisson(P (T-B) / (S r^2))

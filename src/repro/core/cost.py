@@ -20,7 +20,8 @@ import jax.numpy as jnp
 from .gamma import log_q_gamma_all
 from .types import AnalysisConfig
 
-__all__ = ["b_term", "c_term", "p1_round", "theorem1_bound", "objective_and_penalty"]
+__all__ = ["b_term", "c_term", "p1_round", "theorem1_bound",
+           "objective_and_penalty", "upload_bytes"]
 
 _EPS = 1e-6
 
@@ -41,7 +42,7 @@ def b_term(T: jnp.ndarray, m: jnp.ndarray, cfg: AnalysisConfig) -> jnp.ndarray:
     cohort ~= sum over the representative spread / (U_t * U).
     """
     P = jnp.asarray(cfg.P)          # (U,)
-    B = jnp.asarray(cfg.B)          # (U,)
+    B = jnp.asarray(cfg.B_eff)      # (U,) — wire-compressed comm time
     s2 = jnp.asarray(cfg.sigma2)    # (U,)
     frac = (T[:, None] - B[None, :]) / jnp.maximum(T[:, None], _EPS)   # (R, U)
     denom = m * P[None, :] * frac - 1.0                                 # (R, U)
@@ -98,9 +99,22 @@ def objective_and_penalty(T: jnp.ndarray, m: jnp.ndarray, cfg: AnalysisConfig,
     """
     obj = theorem1_bound(T, m, cfg)
     p1 = p1_round(T, m, cfg)
+    B = jnp.asarray(cfg.B_eff)
     pen = jnp.sum(jax.nn.relu(p1 - 0.9 * p1_cap) ** 2)
-    frac = (T[:, None] - jnp.asarray(cfg.B)[None, :]) / jnp.maximum(T[:, None], _EPS)
+    frac = (T[:, None] - B[None, :]) / jnp.maximum(T[:, None], _EPS)
     denom = m * jnp.asarray(cfg.P)[None, :] * frac - 1.0
     pen += jnp.sum(jax.nn.relu(0.05 - denom) ** 2)
-    pen += jnp.sum(jax.nn.relu(jnp.asarray(cfg.B).max() * 1.05 - T) ** 2)
+    pen += jnp.sum(jax.nn.relu(B.max() * 1.05 - T) ** 2)
     return obj + penalty_weight * pen, (obj, p1)
+
+
+def upload_bytes(cfg: AnalysisConfig) -> jnp.ndarray:
+    """Bytes-on-the-wire diagnostic, shape (R,): expected upload volume per
+    round = contributors * dense float32 payload * compression ratio.
+
+    ``cfg.bytes_full`` is the per-client dense float32 delta size (0 when
+    the caller never measured it) and ``cfg.comm_scale`` the wire ratio the
+    solver already prices B_u with — so this is the byte cost the Problem-2
+    deadline/batch trade-off is implicitly spending against.
+    """
+    return _u_vec(cfg) * cfg.bytes_full * cfg.comm_scale

@@ -196,7 +196,7 @@ def solve_trust_region(cfg: AnalysisConfig, *, m0: float | None = None,
     m0 = _default_m0(cfg) if m0 is None else m0
     m_min = _default_m_min(cfg) if m_min is None else m_min
     R = cfg.R
-    Bmax = float(cfg.B.max())
+    Bmax = float(cfg.B_eff.max())
 
     def unpack(x):
         return jnp.asarray(x[:R], jnp.float32), jnp.float32(x[R])

@@ -71,7 +71,7 @@ def sample_round(key: jax.Array, T_d, m, cfg: AnalysisConfig):
     """One round's straggler draw under B3 batch scaling (ADEL-FL):
     (mask (U,L), p (L,), S (U,), z (U,))."""
     P = jnp.asarray(cfg.P)
-    B = jnp.asarray(cfg.B)
+    B = jnp.asarray(cfg.B_eff)
     lam = poisson_rates(T_d, m, P, B)
     z = sample_depths(key, lam)
     mask = contribution_mask(z, cfg.L)
@@ -84,7 +84,7 @@ def fixed_batch(T_d, m, cfg: AnalysisConfig) -> jnp.ndarray:
     Wait / HeteroFL fix one batch size for everyone; B3's per-user scaling
     is part of ADEL-FL's contribution)."""
     P_mean = float(np.mean(cfg.P))
-    B_mean = float(np.mean(cfg.B))
+    B_mean = float(np.mean(cfg.B_eff))
     S = np.floor(m * P_mean * max(T_d - B_mean, 0.0) / max(T_d, 1e-9))
     return jnp.float32(max(S, 1.0))
 
@@ -94,7 +94,7 @@ def sample_round_fixed(key: jax.Array, T_d, S, cfg: AnalysisConfig):
     devices get proportionally fewer layers done (the baselines' regime).
     Returns (mask, p, lam)."""
     P = jnp.asarray(cfg.P)
-    B = jnp.asarray(cfg.B)
+    B = jnp.asarray(cfg.B_eff)
     lam = P / S * jnp.maximum(jnp.asarray(T_d, jnp.float32) - B, 0.0)
     z = sample_depths(key, lam)
     mask = contribution_mask(z, cfg.L)
@@ -106,7 +106,7 @@ def simulate_p_empirical(T_d: float, m: float, cfg: AnalysisConfig,
                          n_trials: int = 2000, seed: int = 0) -> np.ndarray:
     """Monte-Carlo estimate of p_t^l (for validating Lemma 1 in tests)."""
     key = jax.random.PRNGKey(seed)
-    lam = poisson_rates(T_d, m, jnp.asarray(cfg.P), jnp.asarray(cfg.B))
+    lam = poisson_rates(T_d, m, jnp.asarray(cfg.P), jnp.asarray(cfg.B_eff))
     keys = jax.random.split(key, n_trials)
     z = jax.vmap(lambda k: sample_depths(k, lam))(keys)        # (n, U)
     masks = jax.vmap(lambda zz: contribution_mask(zz, cfg.L))(z)  # (n, U, L)

@@ -34,6 +34,21 @@ class AnalysisConfig:
     # describing a U-sized representative capability spread. None keeps the
     # paper's static-U objective exactly.
     U_round: Optional[np.ndarray] = None
+    # Bytes-on-the-wire pricing (repro.core.compression): ``comm_scale``
+    # multiplies every B_u — the per-user communication time B2 prices the
+    # dense float32 delta upload, and compressing the payload shrinks it by
+    # the wire ratio (0.25 for int8, ~1.25*top_k for topk8). All model-side
+    # consumers (B_t variance term, B3 batch sizes, solver feasibility,
+    # straggler clock draws) read ``B_eff`` so the Problem-2 solver trades
+    # batch size against upload bytes consistently. ``bytes_full`` records
+    # the dense float32 payload size per client (diagnostic; 0 = unknown).
+    comm_scale: float = 1.0
+    bytes_full: float = 0.0
+
+    @property
+    def B_eff(self) -> np.ndarray:
+        """Effective per-user communication time: ``B * comm_scale``."""
+        return self.B * np.float32(self.comm_scale)
 
     def __post_init__(self):
         object.__setattr__(self, "eta", np.asarray(self.eta, np.float32))
@@ -44,6 +59,7 @@ class AnalysisConfig:
         assert self.sigma2.shape == (self.U,)
         assert self.P.shape == (self.U,)
         assert self.B.shape == (self.U,)
+        assert self.comm_scale > 0.0
         if self.U_round is not None:
             u = np.asarray(self.U_round, np.float32)
             object.__setattr__(self, "U_round", u)
@@ -93,7 +109,11 @@ class Schedule:
     solver: str = "adam"
 
     def batch_sizes(self, cfg: AnalysisConfig) -> np.ndarray:
-        """Model Formulation B3: S_t^u = floor(m P_u (T_t - B_u)/T_t), shape (R, U)."""
+        """Model Formulation B3: S_t^u = floor(m P_u (T_t - B_u)/T_t), shape
+        (R, U). ``B_u`` is the EFFECTIVE communication time (``cfg.B_eff``):
+        a compressed wire leaves more of the deadline for compute, so the
+        planned batches grow."""
         T = self.T[:, None]
-        S = np.floor(self.m * cfg.P[None, :] * (T - cfg.B[None, :]) / T)
+        B = cfg.B_eff
+        S = np.floor(self.m * cfg.P[None, :] * (T - B[None, :]) / T)
         return np.maximum(S, 1.0).astype(np.int32)

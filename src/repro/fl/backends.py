@@ -42,11 +42,27 @@ runtime's round loop never reads a params buffer after handing it to
 Backends are selected by name: ``make_backend("dense" | "chunked" |
 "shard_map" | "temporal", model, ...)``.
 
+Compression: every backend accepts a ``compression=`` spec
+(:mod:`repro.core.compression` — ``"int8"`` symmetric quantization or
+``"topk8"`` sparsification). The compressed payload is what the reduction
+CONSUMES: dense/temporal fold it through
+:func:`repro.core.compression.aggregate_compressed` (optionally the fused
+Pallas ``adel_agg_q8`` kernel via ``agg_impl="pallas"``), chunked's
+chunk-sum accumulates partials computed from int8 chunk payloads, and
+shard_map quantizes inside the shard-local function so each shard's
+reduction reads int8 (the psum itself combines float32 partials).
+``agg_impl="pallas"`` also routes UNcompressed dense/temporal aggregation
+through ``kernels.ops.adel_aggregate_pallas`` (interpret mode on CPU).
+HeteroFL width-overlap rounds are entry-wise means over width masks — not
+an Eq. 5 coefficient fold — and reject compression with a ``ValueError``.
+
 Telemetry: every backend carries the runtime's tracer (``set_tracer``,
 default :data:`repro.obs.NULL_TRACER`). The fused single-dispatch backends
 (dense / shard_map / temporal) emit one ``local_train`` span per round plus
-an ``aggregate_bytes`` counter; the chunked backend emits one
-``local_train`` span per chunk and a separate ``aggregate`` span around the
+``aggregate_bytes_logical`` / ``aggregate_bytes_wire`` counters (dense
+float32 pytree size vs post-compression payload size, both analytic and
+exactly deterministic); the chunked backend emits one ``local_train`` span
+and one counter pair per chunk and a separate ``aggregate`` span around the
 final apply. Active tracers block on step results so spans measure device
 work rather than async dispatch — numerics are untouched either way.
 """
@@ -63,6 +79,8 @@ from repro.core.aggregation import (aggregate_grads, aggregate_grads_chunk,
                                     hetero_overlap_mean,
                                     hetero_overlap_partials,
                                     layer_coefficients, weight_by_layer)
+from repro.core.compression import (aggregate_compressed, compress_deltas,
+                                    make_compression, payload_bytes)
 from repro.fl.client import batched_client_deltas, local_update
 
 try:                                     # jax >= 0.5
@@ -77,6 +95,13 @@ __all__ = ["BACKENDS", "ExecutionBackend", "DenseBackend", "ChunkedBackend",
 PyTree = Any
 
 BACKENDS = ("dense", "chunked", "shard_map", "temporal")
+
+AGG_IMPLS = ("jnp", "pallas")
+
+
+def _sub32(w: jnp.ndarray, d: jnp.ndarray) -> jnp.ndarray:
+    """dtype-preserving server update for float32 aggregates."""
+    return (w.astype(jnp.float32) - d.astype(jnp.float32)).astype(w.dtype)
 
 
 class ExecutionBackend:
@@ -97,18 +122,51 @@ class ExecutionBackend:
     name = "base"
 
     def __init__(self, model, *, local_iters: int = 1, l2: float = 0.0,
-                 donate: bool = True):
+                 donate: bool = True, compression=None,
+                 agg_impl: str = "jnp"):
         self.model = model
         self.local_iters = int(local_iters)
         self.l2 = float(l2)
         self.donate = bool(donate)
+        self.compression = make_compression(compression)
+        self.agg_impl = str(agg_impl)
+        assert self.agg_impl in AGG_IMPLS, \
+            f"unknown agg_impl {agg_impl!r}; known: {AGG_IMPLS}"
         self.tracer = obs.NULL_TRACER
+        self._bytes_cache: dict[int, tuple[int, int]] = {}
 
     def set_tracer(self, tracer) -> None:
         """Attach the runtime's tracer (:class:`repro.obs.Tracer`) so the
         backend's ``local_train`` / ``aggregate`` spans and bytes counters
         land in the same event stream."""
         self.tracer = tracer if tracer is not None else obs.NULL_TRACER
+
+    def _round_bytes(self, params_like: PyTree, U: int) -> tuple[int, int]:
+        """Analytic (logical, wire) payload bytes for a U-client reduction
+        over this backend's compression config — deterministic, so the
+        benchmark gate can match them exactly. ``params_like`` supplies
+        leaf shapes only (the round's output params work)."""
+        key = int(U)
+        if key not in self._bytes_cache:
+            ids = self.model.layer_ids(params_like)
+            self._bytes_cache[key] = payload_bytes(params_like, ids, key,
+                                                   self.compression)
+        return self._bytes_cache[key]
+
+    def _count_bytes(self, params_like: PyTree, U: int) -> None:
+        logical, wire = self._round_bytes(params_like, U)
+        self.tracer.count("aggregate_bytes_logical", logical,
+                          backend=self.name)
+        self.tracer.count("aggregate_bytes_wire", wire, backend=self.name)
+
+    def _check_rule(self, wmasks) -> None:
+        """HeteroFL's width-overlap mean is an entry-wise mean, not an
+        Eq. 5 coefficient fold — the quantized wire format has no sound
+        dequant-weight for it."""
+        if wmasks is not None and self.compression.mode != "none":
+            raise ValueError(
+                f"compression={self.compression.mode!r} is incompatible "
+                f"with HeteroFL width-mask aggregation")
 
     def _traced_fused(self, step, params, *args):
         """Run a fused train+aggregate jit step under a ``local_train``
@@ -122,8 +180,7 @@ class ExecutionBackend:
         with tracer.span("local_train", backend=self.name, fused=True):
             out = step(params, *args)
             jax.block_until_ready(out)
-        tracer.count("aggregate_bytes", obs.tree_bytes(out),
-                     backend=self.name)
+        self._count_bytes(out, int(args[3].shape[0]))   # args[3] = mask
         return out
 
     @property
@@ -140,7 +197,9 @@ class ExecutionBackend:
         raise NotImplementedError
 
     def describe(self) -> dict:
-        return {"backend": self.name, "donate": self.donate}
+        return {"backend": self.name, "donate": self.donate,
+                "compression": self.compression.mode,
+                "agg_impl": self.agg_impl}
 
     # shared sub-computations -------------------------------------------
     def _deltas(self, params, xb, yb, wb, eta):
@@ -155,13 +214,17 @@ class DenseBackend(ExecutionBackend):
     name = "dense"
 
     def __init__(self, model, *, local_iters: int = 1, l2: float = 0.0,
-                 donate: bool = True):
-        super().__init__(model, local_iters=local_iters, l2=l2, donate=donate)
+                 donate: bool = True, compression=None,
+                 agg_impl: str = "jnp"):
+        super().__init__(model, local_iters=local_iters, l2=l2, donate=donate,
+                         compression=compression, agg_impl=agg_impl)
         self._steps: dict[tuple, Callable] = {}
 
     def _step(self, bias_correct: bool, hetero: bool) -> Callable:
         key = (bias_correct, hetero)
         if key not in self._steps:
+            comp = self.compression
+
             def step(params, xb, yb, wb, mask, p, eta, wmasks):
                 deltas = self._deltas(params, xb, yb, wb, eta)
                 ids = self.model.layer_ids(params)
@@ -169,6 +232,18 @@ class DenseBackend(ExecutionBackend):
                     num, den = hetero_overlap_partials(deltas, wmasks,
                                                        mask[:, 0])
                     agg = hetero_overlap_mean(num, den)
+                elif comp.mode != "none":
+                    # the reduction consumes the int8 wire payload: the
+                    # float32 delta tree never feeds the aggregation
+                    payload = compress_deltas(deltas, ids, comp)
+                    agg = aggregate_compressed(
+                        payload, params, ids, mask, p, cfg=comp,
+                        bias_correct=bias_correct, agg_impl=self.agg_impl)
+                    return jax.tree.map(_sub32, params, agg)
+                elif self.agg_impl == "pallas":
+                    from repro.kernels.ops import adel_aggregate_pallas
+                    agg = adel_aggregate_pallas(deltas, ids, mask, p,
+                                                bias_correct=bias_correct)
                 else:
                     agg = aggregate_grads(deltas, ids, mask, p,
                                           bias_correct=bias_correct)
@@ -180,6 +255,7 @@ class DenseBackend(ExecutionBackend):
 
     def run_round(self, params, xb, yb, wb, mask, p, eta, *,
                   bias_correct, wmasks=None):
+        self._check_rule(wmasks)
         step = self._step(bool(bias_correct), wmasks is not None)
         return self._traced_fused(step, params, xb, yb, wb, mask, p, eta,
                                   wmasks)
@@ -200,14 +276,22 @@ class ChunkedBackend(ExecutionBackend):
     name = "chunked"
 
     def __init__(self, model, *, chunk_size: int = 16, local_iters: int = 1,
-                 l2: float = 0.0, donate: bool = True):
-        super().__init__(model, local_iters=local_iters, l2=l2, donate=donate)
+                 l2: float = 0.0, donate: bool = True, compression=None,
+                 agg_impl: str = "jnp"):
+        super().__init__(model, local_iters=local_iters, l2=l2, donate=donate,
+                         compression=compression, agg_impl=agg_impl)
         self.chunk_size = max(int(chunk_size), 1)
         self._dense = DenseBackend(model, local_iters=local_iters, l2=l2,
-                                   donate=donate)
+                                   donate=donate, compression=compression,
+                                   agg_impl=agg_impl)
         self._chunks: dict[tuple, Callable] = {}
+        self._folds: dict[bool, Callable] = {}
+        self._payload_step = None
         self._apply = jax.jit(
             lambda params, agg: jax.tree.map(lambda w, d: w - d, params, agg),
+            donate_argnums=self._donate_params)
+        self._apply32 = jax.jit(
+            lambda params, agg: jax.tree.map(_sub32, params, agg),
             donate_argnums=self._donate_params)
         self._apply_hetero = jax.jit(
             lambda params, num, den: jax.tree.map(
@@ -240,14 +324,76 @@ class ChunkedBackend(ExecutionBackend):
             self._chunks[key] = chunk_partial
         return self._chunks[key]
 
+    def _payload(self) -> Callable:
+        """jit step producing one chunk's compressed wire payload — the
+        int8 tuples are what crosses the jit boundary and what the
+        chunk-sum consumes."""
+        if self._payload_step is None:
+            comp = self.compression
+
+            # NEVER donate params here: the same buffers feed every chunk
+            @jax.jit
+            def chunk_payload(params, xb, yb, wb, eta):
+                deltas = self._deltas(params, xb, yb, wb, eta)
+                ids = self.model.layer_ids(params)
+                return compress_deltas(deltas, ids, comp)
+
+            self._payload_step = chunk_payload
+        return self._payload_step
+
+    def _fold(self, bias_correct: bool) -> Callable:
+        """jit fold: dequantize + Eq. 5 weight one chunk payload (against
+        GLOBAL counts) and accumulate into the float32 running aggregate.
+        The accumulator is donated — the fold updates it in place."""
+        if bias_correct not in self._folds:
+            comp = self.compression
+
+            def fold(acc, params, payload, mask_c, p, counts):
+                ids = self.model.layer_ids(params)
+                part = aggregate_compressed(
+                    payload, params, ids, mask_c, p, cfg=comp, counts=counts,
+                    bias_correct=bias_correct, agg_impl=self.agg_impl)
+                return jax.tree.map(jnp.add, acc, part)
+
+            self._folds[bias_correct] = jax.jit(fold, donate_argnums=(0,))
+        return self._folds[bias_correct]
+
+    def _run_round_compressed(self, params, xb, yb, wb, mask, p, eta, *,
+                              bias_correct, U, c):
+        payload_step = self._payload()
+        fold = self._fold(bool(bias_correct))
+        counts = mask.sum(0)                   # (L,) global contributors
+        tracer = self.tracer
+        acc = jax.tree.map(lambda w: jnp.zeros(w.shape, jnp.float32), params)
+        for c0 in range(0, U, c):
+            sl = slice(c0, c0 + c)
+            with tracer.span("local_train", backend=self.name,
+                             chunk=c0 // c):
+                payload = payload_step(params, xb[sl], yb[sl], wb[sl], eta)
+                if tracer.active:
+                    jax.block_until_ready(payload)
+            if tracer.active:
+                self._count_bytes(params, c)
+            acc = fold(acc, params, payload, mask[sl], p, counts)
+        with tracer.span("aggregate", backend=self.name, chunks=-(-U // c)):
+            out = self._apply32(params, acc)
+            if tracer.active:
+                jax.block_until_ready(out)
+        return out
+
     def run_round(self, params, xb, yb, wb, mask, p, eta, *,
                   bias_correct, wmasks=None):
+        self._check_rule(wmasks)
         U = int(mask.shape[0])
         c = min(self.chunk_size, U)
         if U <= c:
             return self._dense.run_round(params, xb, yb, wb, mask, p, eta,
                                          bias_correct=bias_correct,
                                          wmasks=wmasks)
+        if self.compression.mode != "none":
+            return self._run_round_compressed(params, xb, yb, wb, mask, p,
+                                              eta, bias_correct=bias_correct,
+                                              U=U, c=c)
         hetero = wmasks is not None
         step = self._chunk_step(bool(bias_correct), hetero)
         counts = mask.sum(0)                       # (L,) global contributors
@@ -264,8 +410,7 @@ class ChunkedBackend(ExecutionBackend):
                 if tracer.active:
                     jax.block_until_ready(part)
             if tracer.active:
-                tracer.count("aggregate_bytes", obs.tree_bytes(part),
-                             backend=self.name)
+                self._count_bytes(params, c)
             if hetero:
                 n_p, d_p = part
                 num = n_p if num is None else jax.tree.map(jnp.add, num, n_p)
@@ -296,8 +441,10 @@ class ShardMapBackend(ExecutionBackend):
     name = "shard_map"
 
     def __init__(self, model, *, mesh=None, local_iters: int = 1,
-                 l2: float = 0.0, donate: bool = True):
-        super().__init__(model, local_iters=local_iters, l2=l2, donate=donate)
+                 l2: float = 0.0, donate: bool = True, compression=None,
+                 agg_impl: str = "jnp"):
+        super().__init__(model, local_iters=local_iters, l2=l2, donate=donate,
+                         compression=compression, agg_impl=agg_impl)
         self._mesh = mesh
         self._steps: dict[tuple, Callable] = {}
 
@@ -328,6 +475,7 @@ class ShardMapBackend(ExecutionBackend):
             mesh = self.mesh
             ax = tuple(self.client_axes)
             model = self.model
+            comp = self.compression
 
             def local_fn(params, xb, yb, wb, mask_l, p, eta, wmasks_l):
                 deltas = self._deltas(params, xb, yb, wb, eta)
@@ -338,6 +486,19 @@ class ShardMapBackend(ExecutionBackend):
                     num = jax.lax.psum(num, ax)
                     den = jax.lax.psum(den, ax)
                     agg = hetero_overlap_mean(num, den)
+                elif comp.mode != "none":
+                    # each shard's reduction consumes its clients' int8
+                    # payload; the psum combines float32 shard partials
+                    # (the jnp fold — Pallas inside shard_map is not
+                    # supported in interpret mode)
+                    counts = jax.lax.psum(mask_l.sum(0), ax)
+                    payload = compress_deltas(deltas, ids, comp)
+                    part = aggregate_compressed(
+                        payload, params, ids, mask_l, p, cfg=comp,
+                        counts=counts, bias_correct=bias_correct,
+                        agg_impl="jnp")
+                    agg = jax.lax.psum(part, ax)
+                    return jax.tree.map(_sub32, params, agg)
                 else:
                     agg = aggregate_grads_local(deltas, ids, mask_l, p, ax,
                                                 bias_correct=bias_correct)
@@ -356,6 +517,7 @@ class ShardMapBackend(ExecutionBackend):
 
     def run_round(self, params, xb, yb, wb, mask, p, eta, *,
                   bias_correct, wmasks=None):
+        self._check_rule(wmasks)
         step = self._step(bool(bias_correct), wmasks is not None)
         return self._traced_fused(step, params, xb, yb, wb, mask, p, eta,
                                   wmasks)
@@ -383,8 +545,10 @@ class TemporalBackend(ExecutionBackend):
     name = "temporal"
 
     def __init__(self, model, *, local_iters: int = 1, l2: float = 0.0,
-                 donate: bool = True):
-        super().__init__(model, local_iters=local_iters, l2=l2, donate=donate)
+                 donate: bool = True, compression=None,
+                 agg_impl: str = "jnp"):
+        super().__init__(model, local_iters=local_iters, l2=l2, donate=donate,
+                         compression=compression, agg_impl=agg_impl)
         self._steps: dict[tuple, Callable] = {}
 
     def _step(self, bias_correct: bool, hetero: bool) -> Callable:
@@ -420,14 +584,44 @@ class TemporalBackend(ExecutionBackend):
                 else:
                     coeffs = layer_coefficients(mask, p,
                                                 bias_correct=bias_correct)
+                    comp = self.compression
 
-                    def body(acc, inp):
-                        x_u, y_u, w_u, c_row = inp
-                        d = delta_u(params, x_u, y_u, w_u, eta)
-                        dw = jax.tree.map(
-                            lambda dd, idl: weight_by_layer(
-                                dd.astype(jnp.float32), idl, c_row), d, ids)
-                        return jax.tree.map(jnp.add, acc, dw), None
+                    if comp.mode != "none":
+                        # one client per scan step: quantize the delta to
+                        # its wire form, then dequant+weight+accumulate
+                        # against this client's GLOBAL-count coefficient
+                        # row — peak memory stays one delta pytree
+                        def body(acc, inp):
+                            x_u, y_u, w_u, c_row = inp
+                            d = delta_u(params, x_u, y_u, w_u, eta)
+                            d1 = jax.tree.map(
+                                lambda dd: dd.astype(jnp.float32)[None], d)
+                            payload = compress_deltas(d1, ids, comp)
+                            dw = aggregate_compressed(
+                                payload, params, ids, None, None, cfg=comp,
+                                coeffs=c_row[None],
+                                agg_impl=self.agg_impl)
+                            return jax.tree.map(jnp.add, acc, dw), None
+                    elif self.agg_impl == "pallas":
+                        from repro.kernels.ops import adel_aggregate_pallas
+
+                        def body(acc, inp):
+                            x_u, y_u, w_u, c_row = inp
+                            d = delta_u(params, x_u, y_u, w_u, eta)
+                            d1 = jax.tree.map(
+                                lambda dd: dd.astype(jnp.float32)[None], d)
+                            dw = adel_aggregate_pallas(d1, ids, None, None,
+                                                       coeffs=c_row[None])
+                            return jax.tree.map(jnp.add, acc, dw), None
+                    else:
+                        def body(acc, inp):
+                            x_u, y_u, w_u, c_row = inp
+                            d = delta_u(params, x_u, y_u, w_u, eta)
+                            dw = jax.tree.map(
+                                lambda dd, idl: weight_by_layer(
+                                    dd.astype(jnp.float32), idl, c_row),
+                                d, ids)
+                            return jax.tree.map(jnp.add, acc, dw), None
 
                     agg, _ = jax.lax.scan(body, zeros32,
                                           (xb, yb, wb, coeffs))
@@ -441,6 +635,7 @@ class TemporalBackend(ExecutionBackend):
 
     def run_round(self, params, xb, yb, wb, mask, p, eta, *,
                   bias_correct, wmasks=None):
+        self._check_rule(wmasks)
         step = self._step(bool(bias_correct), wmasks is not None)
         return self._traced_fused(step, params, xb, yb, wb, mask, p, eta,
                                   wmasks)
@@ -448,22 +643,30 @@ class TemporalBackend(ExecutionBackend):
 
 def make_backend(backend, model, *, chunk_size: int = 16, mesh=None,
                  local_iters: int = 1, l2: float = 0.0,
-                 donate: bool = True) -> ExecutionBackend:
+                 donate: bool = True, compression=None,
+                 agg_impl: str = "jnp") -> ExecutionBackend:
     """Resolve a backend by name (``"dense" | "chunked" | "shard_map" |
     "temporal"``) or pass an :class:`ExecutionBackend` instance through
-    unchanged."""
+    unchanged.
+
+    ``compression`` is a :mod:`repro.core.compression` spec (None | mode
+    string | ``(mode, top_k)`` | :class:`CompressionConfig`) selecting the
+    client->server wire format the reduction consumes; ``agg_impl``
+    (``"jnp" | "pallas"``) picks the aggregation implementation — "pallas"
+    routes stacked-layer folds through the fused kernels (``adel_agg`` /
+    ``adel_agg_q8``, interpret mode on CPU) on the dense and temporal
+    backends and on every compressed non-shard_map path.
+    """
     if isinstance(backend, ExecutionBackend):
         return backend
+    kw = dict(local_iters=local_iters, l2=l2, donate=donate,
+              compression=compression, agg_impl=agg_impl)
     if backend == "dense":
-        return DenseBackend(model, local_iters=local_iters, l2=l2,
-                            donate=donate)
+        return DenseBackend(model, **kw)
     if backend == "chunked":
-        return ChunkedBackend(model, chunk_size=chunk_size,
-                              local_iters=local_iters, l2=l2, donate=donate)
+        return ChunkedBackend(model, chunk_size=chunk_size, **kw)
     if backend == "shard_map":
-        return ShardMapBackend(model, mesh=mesh, local_iters=local_iters,
-                               l2=l2, donate=donate)
+        return ShardMapBackend(model, mesh=mesh, **kw)
     if backend == "temporal":
-        return TemporalBackend(model, local_iters=local_iters, l2=l2,
-                               donate=donate)
+        return TemporalBackend(model, **kw)
     raise ValueError(f"unknown backend {backend!r}; known: {BACKENDS}")

@@ -226,19 +226,22 @@ class RoundRuntime:
     ``tracer`` (:class:`repro.obs.Tracer`) enables structured telemetry —
     phase spans, counters, and the per-round clock-model ledger — for the
     runtime AND the backend; the default :data:`repro.obs.NULL_TRACER`
-    records nothing and perturbs nothing.
+    records nothing and perturbs nothing. ``compression`` / ``agg_impl``
+    select the client->server wire format and aggregation implementation
+    (:mod:`repro.core.compression`, :func:`repro.fl.backends.make_backend`).
     """
 
     def __init__(self, model: ModelAPI, policy: Policy, *,
                  backend="dense", chunk_size: int = 16, mesh=None,
                  local_iters: int = 1, l2: float = 0.0, donate: bool = True,
-                 tracer=None):
+                 compression=None, agg_impl: str = "jnp", tracer=None):
         self.model = model
         self.policy = policy
         self.tracer = tracer if tracer is not None else obs.NULL_TRACER
         self.backend = make_backend(backend, model, chunk_size=chunk_size,
                                     mesh=mesh, local_iters=local_iters, l2=l2,
-                                    donate=donate)
+                                    donate=donate, compression=compression,
+                                    agg_impl=agg_impl)
         self.backend.set_tracer(self.tracer)
         self._wmask_cache: dict[bytes, PyTree] = {}
 

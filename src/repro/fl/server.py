@@ -37,6 +37,7 @@ def run_federated(model: ModelAPI, policy: Policy, cfg: AnalysisConfig,
                   eval_every: int = 1, verbose: bool = False,
                   backend="dense", chunk_size: int = 16,
                   mesh=None, replan=None, donate: bool = True,
+                  compression=None, agg_impl: str = "jnp",
                   eval_fn=None, on_round=None,
                   tracer=None) -> tuple[PyTree, History]:
     """Run up to R rounds, stopping when the simulated clock exceeds T_max.
@@ -62,6 +63,7 @@ def run_federated(model: ModelAPI, policy: Policy, cfg: AnalysisConfig,
     runtime = RoundRuntime(model, policy, backend=backend,
                            chunk_size=chunk_size, mesh=mesh,
                            local_iters=local_iters, l2=l2, donate=donate,
+                           compression=compression, agg_impl=agg_impl,
                            tracer=tracer)
     source = StaticCohortSource(client_x, client_y, n_per_client)
     return runtime.run(source, rounds=cfg.R, T_max=cfg.T_max, eta=eta,

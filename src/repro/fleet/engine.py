@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.baselines import Policy, make_policy
+from repro.core.compression import make_compression
 from repro.core.scheduler import solve
 from repro.core.types import AnalysisConfig
 from repro.fl.partition import dirichlet_partition, iid_partition, stack_clients
@@ -174,6 +175,7 @@ def run_fleet(model: ModelAPI, fleet: Fleet, availability: AvailabilityModel,
               s_max: Optional[int] = None, eval_every: int = 1,
               seed: int = 0, verbose: bool = False,
               replan=None, donate: bool = True,
+              compression=None, agg_impl: str = "jnp",
               eval_metrics=None, tracer=None) -> tuple:
     """Run up to ``rounds`` federated rounds against a simulated fleet.
 
@@ -208,6 +210,23 @@ def run_fleet(model: ModelAPI, fleet: Fleet, availability: AvailabilityModel,
     ref = reference_config(fleet, U=cohort_size, L=model.L, R=rounds,
                            T_max=T_max, eta0=eta0, eta_decay=eta_decay,
                            seed=seed)
+    comp = make_compression(compression)
+    if comp.mode != "none":
+        # price the compressed wire into the Problem-2 planning config
+        # BEFORE solving: every B_u shrinks by the wire ratio (B_eff), so
+        # the solver trades the freed deadline budget for larger batches.
+        # bytes_full (dense f32 payload per client) feeds the
+        # core.cost.upload_bytes diagnostic; derived views
+        # (cohort_view / replan_view) inherit both via dataclasses.replace.
+        try:
+            sds = jax.eval_shape(model.init,
+                                 jax.ShapeDtypeStruct((2,), np.uint32))
+            n_params = sum(int(np.prod(l.shape))
+                           for l in jax.tree.leaves(sds))
+        except Exception:       # exotic init signatures: diagnostic only
+            n_params = 0
+        ref = dataclasses.replace(ref, comm_scale=comp.wire_scale(),
+                                  bytes_full=4.0 * n_params)
     schedule = None
     if method == "adel":
         schedule = solve(ref, solver,
@@ -236,7 +255,8 @@ def run_fleet(model: ModelAPI, fleet: Fleet, availability: AvailabilityModel,
     runtime = RoundRuntime(model, policy, backend=backend,
                            chunk_size=min(chunk_size, cohort_size),
                            mesh=mesh, local_iters=local_iters, l2=l2,
-                           donate=donate, tracer=tracer)
+                           donate=donate, compression=comp,
+                           agg_impl=agg_impl, tracer=tracer)
     source = FleetCohortSource(fleet, availability, data, ref,
                                cohort_size=cohort_size,
                                strategy=cohort_strategy, seed=seed)

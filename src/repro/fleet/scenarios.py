@@ -19,7 +19,9 @@ import os
 from typing import Optional
 
 from repro import obs
-from repro.configs.base import FleetConfig, ReplanConfig
+from repro.configs.base import CompressionConfig, FleetConfig, ReplanConfig
+from repro.core.compression import MODES as COMPRESSION_MODES
+from repro.core.compression import make_compression
 from repro.core.replan import TRIGGERS
 from repro.data.synthetic import make_image_dataset
 from repro.fleet.availability import make_availability
@@ -50,13 +52,14 @@ class Scenario:
 
 def _scn(name, preset, size, availability, akw=(), method="adel",
          strategy="uniform", alpha=0.5, note="", cohort=32,
-         replan=ReplanConfig(), **kw) -> Scenario:
+         replan=ReplanConfig(), compression=CompressionConfig(),
+         **kw) -> Scenario:
     return Scenario(
         name=name, method=method, alpha=alpha, note=note,
         fleet=FleetConfig(preset=preset, size=size, availability=availability,
                           availability_kwargs=tuple(akw),
                           cohort_strategy=strategy, cohort_size=cohort,
-                          replan=replan),
+                          replan=replan, compression=compression),
         **kw)
 
 
@@ -100,6 +103,13 @@ SCENARIOS = {s.name: s for s in [
          note="same sticky-outage edge fleet as bimodal-edge-markov with "
               "periodic every-k re-solves tracking the un-spent budget and "
               "the Markov-relaxed reachable forecast"),
+    _scn("longtail-mobile-diurnal-int8", "longtail-mobile", 600, "diurnal",
+         akw=(("mean", 0.6), ("amplitude", 0.35), ("period", 12.0)),
+         compression=CompressionConfig(mode="int8"),
+         note="same population and seeds as longtail-mobile-diurnal with "
+              "int8 client->server payloads: the reduction consumes the "
+              "quantized wire format and the solver prices B_u at 1/4 — "
+              "the matched-accuracy compression comparison"),
     _scn("lm-uniform-bernoulli", "uniform", 60, "bernoulli",
          akw=(("rate", 0.7),), model="lm", cohort=8, rounds=8, eta0=0.5,
          note="reduced LM arch on synthetic token streams against a churny "
@@ -119,6 +129,7 @@ def run_scenario(scn: Scenario, *, rounds: Optional[int] = None,
                  cohort_size: Optional[int] = None,
                  backend: Optional[str] = None,
                  replan=None, replan_every: Optional[int] = None,
+                 compression=None, topk_frac: Optional[float] = None,
                  seed: int = 0,
                  solver_steps: int = 600, eval_every: int = 1,
                  verbose: bool = True, events: Optional[str] = None,
@@ -146,6 +157,12 @@ def run_scenario(scn: Scenario, *, rounds: Optional[int] = None,
     if replan_every is not None:
         fc = dataclasses.replace(
             fc, replan=dataclasses.replace(fc.replan, every=replan_every))
+    if compression is not None:
+        fc = dataclasses.replace(fc, compression=make_compression(compression))
+    if topk_frac is not None:
+        fc = dataclasses.replace(
+            fc, compression=dataclasses.replace(fc.compression,
+                                                top_k=float(topk_frac)))
     rounds = scn.rounds if rounds is None else rounds
 
     fleet = fleet_from_config(fc)
@@ -181,7 +198,8 @@ def run_scenario(scn: Scenario, *, rounds: Optional[int] = None,
             cohort_size=fc.cohort_size, cohort_strategy=fc.cohort_strategy,
             backend=fc.backend, chunk_size=fc.chunk_size, eta0=scn.eta0,
             solver_steps=solver_steps, eval_every=eval_every, seed=seed,
-            verbose=verbose, replan=fc.replan, eval_metrics=eval_m,
+            verbose=verbose, replan=fc.replan,
+            compression=fc.compression, eval_metrics=eval_m,
             tracer=tracer)
     finally:
         if own_tracer:
@@ -196,6 +214,7 @@ def run_scenario(scn: Scenario, *, rounds: Optional[int] = None,
     out["cohort"] = {"size": fc.cohort_size, "strategy": fc.cohort_strategy}
     out["backend"] = fc.backend
     out["replan"] = dataclasses.asdict(fc.replan)
+    out["compression"] = dataclasses.asdict(fc.compression)
     return out
 
 
@@ -231,6 +250,13 @@ def main(argv=None) -> None:
                          "default in FleetConfig.replan)")
     ap.add_argument("--replan-every", type=int, default=None,
                     help="every-k re-plan period override")
+    ap.add_argument("--compression", default=None,
+                    choices=list(COMPRESSION_MODES),
+                    help="client->server wire compression override "
+                         "(repro.core.compression): int8 symmetric "
+                         "quantization or topk8 sparsification")
+    ap.add_argument("--topk-frac", type=float, default=None,
+                    help="kept fraction per (client, layer) in topk8 mode")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--solver-steps", type=int, default=600)
     ap.add_argument("--events", default=None, metavar="PATH",
@@ -263,6 +289,8 @@ def main(argv=None) -> None:
     res = run_scenario(scn, rounds=args.rounds, fleet_size=args.fleet_size,
                        cohort_size=args.cohort, backend=args.backend,
                        replan=args.replan, replan_every=args.replan_every,
+                       compression=args.compression,
+                       topk_frac=args.topk_frac,
                        seed=args.seed, solver_steps=args.solver_steps,
                        verbose=not args.quiet, events=args.events)
     acc = res["accuracy"][-1] if res["accuracy"] else float("nan")

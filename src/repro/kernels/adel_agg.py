@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from repro.kernels._compat import CompilerParams
 
-__all__ = ["adel_agg"]
+__all__ = ["adel_agg", "adel_agg_q8"]
 
 
 def _kernel(g_ref, c_ref, o_ref):
@@ -59,4 +59,51 @@ def adel_agg(grads: jnp.ndarray, coeff: jnp.ndarray, *, block_f: int = 512,
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(grads, coeff)
+    return out[:, :F] if pad else out
+
+
+def _kernel_q8(q_ref, s_ref, c_ref, o_ref):
+    g = q_ref[:, 0, :].astype(jnp.float32)         # (U, bf) dequant source
+    # fold the Eq. 5 coefficient into the per-(client, layer) dequant scale
+    # so dequantize + weight + accumulate is one f32 MXU matvec
+    w = (c_ref[...] * s_ref[...]).astype(jnp.float32)            # (U, 1)
+    o = jax.lax.dot_general(w, g, (((0,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (1, bf)
+    o_ref[0] = o[0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_f", "interpret"))
+def adel_agg_q8(q: jnp.ndarray, scales: jnp.ndarray, coeff: jnp.ndarray, *,
+                block_f: int = 512, interpret: bool = False) -> jnp.ndarray:
+    """Fused dequantize + Eq. 5 weight + accumulate over int8 payloads.
+
+    q: (U, L, F) int8 symmetric-quantized client deltas;
+    scales: (U, L) per-(client, layer) dequant scales (absmax / 127);
+    coeff: (U, L) Eq. 5 aggregation coefficients.
+    Returns (L, F) float32 = sum_u coeff[u, l] * scales[u, l] * q[u, l, :]
+    — the reduction consumes the int8 wire format directly; the float32
+    delta tree is never materialized per client.
+    """
+    U, L, F = q.shape
+    bf = min(block_f, F)
+    pad = (-F) % bf
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad)))
+    Fp = F + pad
+    grid = (L, Fp // bf)
+
+    out = pl.pallas_call(
+        _kernel_q8,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((U, 1, bf), lambda l, f: (0, l, f)),
+            pl.BlockSpec((U, 1), lambda l, f: (0, l)),
+            pl.BlockSpec((U, 1), lambda l, f: (0, l)),
+        ],
+        out_specs=pl.BlockSpec((1, bf), lambda l, f: (l, f)),
+        out_shape=jax.ShapeDtypeStruct((L, Fp), jnp.float32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(q, scales.astype(jnp.float32), coeff.astype(jnp.float32))
     return out[:, :F] if pad else out

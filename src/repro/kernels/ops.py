@@ -57,16 +57,24 @@ def ssd_chunked_pallas(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
 
 def adel_aggregate_pallas(grads, layer_ids_tree, mask, p, *,
                           bias_correct: bool = True,
+                          coeffs=None,
                           interpret: bool | None = None):
     """Pallas-backed equivalent of core.aggregation.aggregate_grads for
     pytrees whose leaves carry a leading client axis U.
 
     Stacked-layer leaves (ids of shape (L,)) go through the adel_agg kernel
     on their flattened feature dim; scalar-id leaves use the (U,) matvec.
+
+    ``coeffs`` (U, L) overrides the internally computed Eq. 5 coefficients —
+    the temporal backend folds one client at a time (U = 1 slices) against
+    coefficients derived from GLOBAL cohort counts, which per-slice masks
+    cannot reproduce.
     """
     from repro.core.aggregation import layer_coefficients
     interpret = default_interpret() if interpret is None else interpret
-    c = layer_coefficients(mask, p, bias_correct=bias_correct)  # (U, L)
+    if coeffs is None:
+        coeffs = layer_coefficients(mask, p, bias_correct=bias_correct)
+    c = coeffs                                                  # (U, L)
 
     def agg_leaf(g, ids):
         ids = jnp.asarray(ids)

@@ -4,7 +4,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["flash_attention_ref", "ssd_scan_ref", "adel_agg_ref"]
+__all__ = ["flash_attention_ref", "ssd_scan_ref", "adel_agg_ref",
+           "adel_agg_q8_ref"]
 
 
 def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
@@ -50,3 +51,14 @@ def adel_agg_ref(grads: jnp.ndarray, coeff: jnp.ndarray) -> jnp.ndarray:
     """
     return jnp.einsum("ul,ulf->lf", coeff.astype(jnp.float32),
                       grads.astype(jnp.float32)).astype(grads.dtype)
+
+
+def adel_agg_q8_ref(q: jnp.ndarray, scales: jnp.ndarray,
+                    coeff: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for the fused int8 dequant + Eq. 5 weight + accumulate kernel.
+
+    q: (U, L, F) int8; scales, coeff: (U, L).
+    Returns (L, F) float32 = sum_u coeff[u, l] * scales[u, l] * q[u, l, :].
+    """
+    w = coeff.astype(jnp.float32) * scales.astype(jnp.float32)
+    return jnp.einsum("ul,ulf->lf", w, q.astype(jnp.float32))

@@ -26,11 +26,14 @@ import json
 import math
 
 import jax
+import numpy as np
 
 from repro import obs
 from repro.checkpoint import save_checkpoint
 from repro.configs import get_config
 from repro.core.baselines import make_policy
+from repro.core.compression import MODES as COMPRESSION_MODES
+from repro.core.compression import make_compression
 from repro.core.replan import TRIGGERS, ReplanConfig
 from repro.core.scheduler import solve
 from repro.core.types import AnalysisConfig
@@ -46,6 +49,7 @@ def run_training(arch: str, *, method: str = "adel", rounds: int = 40,
                  solver_steps: int | None = None,
                  backend: str = "dense", chunk_size: int = 16, mesh=None,
                  replan=None, local_iters: int = 1, donate: bool = True,
+                 compression=None, agg_impl: str = "jnp",
                  s_max_cap: int = 32, eval_every: int | None = None,
                  ckpt: str | None = None, ckpt_every: int | None = None,
                  verbose: bool = True, tracer=None) -> tuple[object, History]:
@@ -71,6 +75,18 @@ def run_training(arch: str, *, method: str = "adel", rounds: int = 40,
     task = lm_task(cfg, U=U, seq=seq, n_seq=n_seq, seed=seed)
     acfg = AnalysisConfig.default(U=U, L=task.model.L, R=rounds, T_max=tmax,
                                   eta0=eta0, seed=seed)
+    comp = make_compression(compression)
+    if comp.mode != "none":
+        # price the compressed wire into the Problem-2 plan: B_u shrinks by
+        # the wire ratio, so the solved schedule re-spends the freed
+        # deadline budget on larger batches (Schedule.batch_sizes / B_eff)
+        import dataclasses as _dc
+        n_params = sum(int(np.prod(l.shape)) for l in
+                       jax.tree.leaves(jax.eval_shape(
+                           task.model.init,
+                           jax.ShapeDtypeStruct((2,), np.uint32))))
+        acfg = _dc.replace(acfg, comm_scale=comp.wire_scale(),
+                           bytes_full=4.0 * n_params)
     schedule = None
     if method == "adel":
         kw = {"steps": solver_steps} if (solver == "adam"
@@ -87,6 +103,7 @@ def run_training(arch: str, *, method: str = "adel", rounds: int = 40,
     runtime = RoundRuntime(task.model, policy, backend=backend,
                            chunk_size=chunk_size, mesh=mesh,
                            local_iters=local_iters, donate=donate,
+                           compression=comp, agg_impl=agg_impl,
                            tracer=tracer)
 
     on_round = None
@@ -167,6 +184,19 @@ def main(argv=None):
                     help="every-k re-plan period")
     ap.add_argument("--no-donate", dest="donate", action="store_false",
                     help="disable params-buffer donation in the round step")
+    ap.add_argument("--compression", default=None,
+                    choices=list(COMPRESSION_MODES),
+                    help="client->server wire compression "
+                         "(repro.core.compression): int8 symmetric "
+                         "quantization or topk8 sparsification; the "
+                         "backend's reduction consumes the compressed "
+                         "payload and the solver prices B_u by the ratio")
+    ap.add_argument("--topk-frac", type=float, default=None,
+                    help="kept fraction per (client, layer) in topk8 mode")
+    ap.add_argument("--agg-impl", default="jnp", choices=["jnp", "pallas"],
+                    help="aggregation implementation: pallas routes the "
+                         "Eq. 5 fold through the fused kernels "
+                         "(adel_agg / adel_agg_q8; interpret mode on CPU)")
     ap.add_argument("--solver", default="adam",
                     choices=["adam", "trust-constr"])
     ap.add_argument("--ckpt", default=None)
@@ -184,6 +214,9 @@ def main(argv=None):
     replan = args.replan
     if replan is not None and args.replan_every is not None:
         replan = ReplanConfig(trigger=replan, every=args.replan_every)
+    compression = args.compression
+    if compression is not None and args.topk_frac is not None:
+        compression = (compression, args.topk_frac)
     tracer = obs.make_tracer(args.events)
     t0 = obs.now()
     with _profile(args.profile_dir):
@@ -195,6 +228,8 @@ def main(argv=None):
                                backend=args.backend,
                                chunk_size=args.chunk_size,
                                replan=replan, donate=args.donate,
+                               compression=compression,
+                               agg_impl=args.agg_impl,
                                ckpt=args.ckpt, tracer=tracer)
     tracer.close()
     loss = hist.train_loss[-1]

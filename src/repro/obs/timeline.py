@@ -14,6 +14,11 @@ Three sections per stream:
   realized straggler draw (:mod:`repro.obs.ledger` documents the columns);
 * **stragglers / deadline misses** — per-round full/missed/zero-contributor
   counts with the worst miss depth, plus the run-level drift summary.
+
+When the stream carries the backends' split payload counters
+(``aggregate_bytes_logical`` / ``aggregate_bytes_wire``) a fourth section
+shows per-round bytes on the wire versus the dense-float32 logical payload
+and the resulting compression ratio.
 """
 from __future__ import annotations
 
@@ -24,7 +29,7 @@ import sys
 from repro.obs.ledger import drift_summary, ledger_rows, phase_table
 from repro.obs.trace import PHASES
 
-__all__ = ["load_events", "render", "main"]
+__all__ = ["BYTE_COUNTERS", "bytes_table", "load_events", "render", "main"]
 
 
 def load_events(path: str) -> list[dict]:
@@ -54,6 +59,33 @@ def _table(headers: list[str], rows: list[list[str]]) -> str:
 
 def _fmt_ms(s: float) -> str:
     return f"{1e3 * s:.1f}"
+
+
+def _fmt_bytes(b: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}TiB"
+
+
+BYTE_COUNTERS = ("aggregate_bytes_logical", "aggregate_bytes_wire")
+
+
+def bytes_table(records: list[dict]) -> dict[int, dict[str, float]]:
+    """Per-round totals of the split aggregation payload counters:
+    ``{round: {counter_name: bytes}}`` (rounds are 1-based, as stamped by
+    the runtime; counter-less streams give an empty dict)."""
+    out: dict[int, dict[str, float]] = {}
+    for r in records:
+        if r.get("kind") != "count" or r.get("name") not in BYTE_COUNTERS:
+            continue
+        rnd = r.get("round")
+        if rnd is None:
+            continue
+        row = out.setdefault(int(rnd), {})
+        row[r["name"]] = row.get(r["name"], 0.0) + float(r.get("value", 0))
+    return out
 
 
 def render(records: list[dict], *, title: str = "") -> str:
@@ -117,6 +149,25 @@ def render(records: list[dict], *, title: str = "") -> str:
         if drift:
             out.append("\n-- drift summary --")
             out += [f"  {k:24s} {v}" for k, v in drift.items()]
+
+    bt = bytes_table(records)
+    if bt:
+        rows = []
+        tot_l = tot_w = 0.0
+        for rnd in sorted(bt):
+            row = bt[rnd]
+            logical = row.get("aggregate_bytes_logical", 0.0)
+            wire = row.get("aggregate_bytes_wire", 0.0)
+            tot_l += logical
+            tot_w += wire
+            ratio = f"{logical / wire:.2f}x" if wire else "—"
+            rows.append([str(rnd), _fmt_bytes(logical), _fmt_bytes(wire),
+                         ratio])
+        ratio = f"{tot_l / tot_w:.2f}x" if tot_w else "—"
+        rows.append(["total", _fmt_bytes(tot_l), _fmt_bytes(tot_w), ratio])
+        out.append("\n-- aggregation payload (logical f32 vs bytes on the "
+                   "wire) --")
+        out.append(_table(["round", "logical", "wire", "ratio"], rows))
     if len(out) <= (1 if title else 0):
         out.append("(no span or round records found)")
     return "\n".join(out)

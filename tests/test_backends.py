@@ -47,13 +47,13 @@ def setup():
     return model, cfg, data, schedule
 
 
-def _run(setup, method, backend, chunk_size=3):
+def _run(setup, method, backend, chunk_size=3, **kw):
     model, cfg, data, schedule = setup
     policy = make_policy(method, cfg,
                          schedule=schedule if method == "adel" else None)
     _, hist = run_federated(model, policy, cfg, *data,
                             key=jax.random.PRNGKey(0), backend=backend,
-                            chunk_size=chunk_size)
+                            chunk_size=chunk_size, **kw)
     return hist
 
 
@@ -119,6 +119,110 @@ def test_backend_registry_and_padding():
     assert make_backend(bk, model) is bk
     with pytest.raises(ValueError):
         make_backend("nope", model)
+
+
+# ---------------------------------------------------------------------------
+# compressed wire payloads (repro.core.compression)
+# ---------------------------------------------------------------------------
+
+# stated drift tolerance for compressed-vs-dense trajectories: int8
+# symmetric quantization perturbs each aggregated delta element by at most
+# amax/254 per contributor, which over R=5 rounds must not move final
+# accuracy by more than the ISSUE's acceptance bound
+COMPRESSED_ACC_TOL = 0.02
+
+
+@pytest.mark.parametrize("backend", list(BACKENDS))
+def test_int8_compressed_drift_all_backends(setup, backend):
+    """int8-compressed trajectories on every backend stay within the
+    stated tolerance of the uncompressed dense run; plans and the
+    simulated clock are untouched by compression."""
+    base = _run(setup, "adel", "dense")
+    comp = _run(setup, "adel", backend, compression="int8")
+    assert comp.rounds == base.rounds
+    np.testing.assert_allclose(comp.deadlines, base.deadlines, rtol=1e-6)
+    np.testing.assert_allclose(comp.times, base.times, rtol=1e-6)
+    np.testing.assert_allclose(comp.accuracy, base.accuracy,
+                               atol=COMPRESSED_ACC_TOL)
+    assert abs(comp.accuracy[-1] - base.accuracy[-1]) <= COMPRESSED_ACC_TOL
+
+
+def test_compressed_backends_agree(setup):
+    """The SAME deterministic quantization runs everywhere, so compressed
+    backends agree with compressed dense to the usual summation-order
+    tolerance."""
+    ref = _run(setup, "adel", "dense", compression="int8")
+    for backend in ("chunked", "shard_map", "temporal"):
+        _assert_equivalent(ref, _run(setup, "adel", backend,
+                                     compression="int8"))
+
+
+def test_topk8_compressed_converges(setup):
+    """Top-k sparsification at a generous kept fraction still tracks the
+    dense run within the stated tolerance."""
+    base = _run(setup, "adel", "dense")
+    comp = _run(setup, "adel", "dense", compression=("topk8", 0.5))
+    np.testing.assert_allclose(comp.times, base.times, rtol=1e-6)
+    assert abs(comp.accuracy[-1] - base.accuracy[-1]) <= COMPRESSED_ACC_TOL
+
+
+@pytest.mark.parametrize("backend", ["dense", "temporal"])
+def test_agg_impl_pallas_matches_jnp(setup, backend):
+    """agg_impl="pallas" routes Eq. 5 through the fused kernels (interpret
+    mode on CPU) and must reproduce the jnp fold."""
+    _assert_equivalent(_run(setup, "adel", backend),
+                       _run(setup, "adel", backend, agg_impl="pallas"))
+
+
+def test_pallas_agg_with_compression(setup):
+    """Compression + the fused adel_agg_q8 kernel together."""
+    _assert_equivalent(
+        _run(setup, "adel", "dense", compression="int8"),
+        _run(setup, "adel", "dense", compression="int8",
+             agg_impl="pallas"))
+
+
+def test_heterofl_rejects_compression(setup):
+    """HeteroFL's width-overlap mean has no sound dequant-weight: every
+    backend must refuse the combination up front."""
+    for backend in BACKENDS:
+        with pytest.raises(ValueError, match="HeteroFL"):
+            _run(setup, "heterofl", backend, compression="int8")
+
+
+def test_describe_reports_compression_and_agg_impl():
+    model = make_mlp()
+    d = make_backend("dense", model, compression="int8",
+                     agg_impl="pallas").describe()
+    assert d["compression"] == "int8" and d["agg_impl"] == "pallas"
+    d = make_backend("chunked", model).describe()
+    assert d["compression"] == "none" and d["agg_impl"] == "jnp"
+
+
+def test_compressed_byte_counters(setup):
+    """All four backends record the split logical/wire counters, with the
+    same deterministic totals (chunked counts per padded chunk)."""
+    from repro import obs
+    model, cfg, data, schedule = setup
+    totals = {}
+    for backend in BACKENDS:
+        sink = obs.MemorySink()
+        policy = make_policy("adel", cfg, schedule=schedule)
+        run_federated(model, policy, cfg, *data, key=jax.random.PRNGKey(0),
+                      backend=backend, chunk_size=3, compression="int8",
+                      tracer=obs.Tracer(sink))
+        ctr = {}
+        for r in sink.records:
+            if r.get("kind") == "count" and "bytes" in r.get("name", ""):
+                ctr[r["name"]] = ctr.get(r["name"], 0) + r["value"]
+        assert ctr["aggregate_bytes_logical"] > 0
+        assert ctr["aggregate_bytes_wire"] > 0
+        ratio = ctr["aggregate_bytes_logical"] / ctr["aggregate_bytes_wire"]
+        assert ratio > 3.5, (backend, ctr)
+        totals[backend] = ctr
+    # dense / shard_map (1 host device) / temporal count the same padded
+    # cohort; chunked pads 8 clients to 3 chunks of 3
+    assert totals["dense"] == totals["temporal"]
 
 
 _MULTIDEV_SCRIPT = textwrap.dedent("""

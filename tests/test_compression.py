@@ -1,0 +1,184 @@
+"""Wire-format compression (repro.core.compression): round-trip bounds,
+payload layout, fused aggregation vs the dense Eq. 5 reference, and the
+analytic byte accounting the benchmark gate matches exactly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregation import aggregate_grads, layer_coefficients
+from repro.core.compression import (CompressionConfig, aggregate_compressed,
+                                    compress_deltas, make_compression,
+                                    payload_bytes)
+
+U, L = 6, 4
+
+
+def _tree(seed=0):
+    """A stacked delta pytree + layer ids like the backends produce:
+    one stacked-layer leaf, one whole-tensor (scalar-id) leaf."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    grads = {"w": jax.random.normal(k1, (U, L, 24, 8)),
+             "head": jax.random.normal(k2, (U, 10))}
+    ids = {"w": jnp.arange(L), "head": jnp.int32(L - 1)}
+    params = {"w": jnp.zeros((L, 24, 8)), "head": jnp.zeros((10,))}
+    return grads, ids, params
+
+
+def _mask_p(seed=1):
+    mask = (jax.random.uniform(jax.random.PRNGKey(seed), (U, L)) > 0.3)
+    return mask.astype(jnp.float32), jnp.full((L,), 0.08)
+
+
+# ---------------------------------------------------------------------------
+# config / spec parsing
+# ---------------------------------------------------------------------------
+
+def test_make_compression_specs():
+    assert make_compression(None).mode == "none"
+    assert make_compression("int8").mode == "int8"
+    cfg = make_compression(("topk8", 0.1))
+    assert cfg.mode == "topk8" and cfg.top_k == 0.1
+    assert make_compression(cfg) is cfg
+    with pytest.raises(AssertionError):
+        make_compression("zstd")
+    with pytest.raises(AssertionError):
+        CompressionConfig(mode="topk8", top_k=0.0)
+
+
+def test_wire_scale():
+    assert make_compression(None).wire_scale() == 1.0
+    assert make_compression("int8").wire_scale() == 0.25
+    assert make_compression(("topk8", 0.05)).wire_scale() == pytest.approx(
+        0.0625)
+
+
+# ---------------------------------------------------------------------------
+# wire payload layout + round-trip error
+# ---------------------------------------------------------------------------
+
+def test_int8_payload_layout_and_roundtrip():
+    grads, ids, _ = _tree()
+    cfg = make_compression("int8")
+    payload = compress_deltas(grads, ids, cfg)
+    # flat list in jax.tree.flatten (sorted-key) order: head then w
+    assert len(payload) == 2
+    (q_h, s_h), (q_w, s_w) = payload
+    assert q_h.dtype == jnp.int8 and q_h.shape == (U, 1, 10)
+    assert s_h.dtype == jnp.float32 and s_h.shape == (U, 1)
+    assert q_w.dtype == jnp.int8 and q_w.shape == (U, L, 24 * 8)
+    assert s_w.shape == (U, L)
+    # symmetric absmax: dequant error <= scale/2 = amax/254 per element
+    flat = grads["w"].reshape(U, L, -1)
+    deq = q_w.astype(jnp.float32) * s_w[..., None]
+    amax = jnp.max(jnp.abs(flat), axis=-1, keepdims=True)
+    assert np.all(np.abs(np.asarray(deq - flat)) <=
+                  np.asarray(amax) / 254.0 + 1e-7)
+
+
+def test_topk8_payload_keeps_largest_magnitudes():
+    grads, ids, _ = _tree()
+    cfg = make_compression(("topk8", 0.25))
+    payload = compress_deltas(grads, ids, cfg)
+    q_w, s_w, idx_w = payload[1]
+    k = int(np.ceil(0.25 * 24 * 8))
+    assert q_w.shape == (U, L, k) and idx_w.dtype == jnp.int32
+    flat = np.abs(np.asarray(grads["w"].reshape(U, L, -1)))
+    kept = np.take_along_axis(flat, np.asarray(idx_w), axis=-1)
+    # every kept magnitude >= every dropped magnitude
+    thresh = kept.min(axis=-1)
+    mask = np.ones_like(flat, bool)
+    np.put_along_axis(mask, np.asarray(idx_w), False, axis=-1)
+    assert np.all(np.where(mask, flat, 0.0) <= thresh[..., None] + 1e-7)
+
+
+# ---------------------------------------------------------------------------
+# fused aggregation vs the dense reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("agg_impl", ["jnp", "pallas"])
+def test_int8_aggregate_close_to_dense(agg_impl):
+    grads, ids, params = _tree()
+    mask, p = _mask_p()
+    cfg = make_compression("int8")
+    payload = compress_deltas(grads, ids, cfg)
+    out = aggregate_compressed(payload, params, ids, mask, p, cfg=cfg,
+                               agg_impl=agg_impl, interpret=True)
+    ref = aggregate_grads(grads, ids, mask, p)
+    for key in params:
+        np.testing.assert_allclose(np.asarray(out[key]),
+                                   np.asarray(ref[key]), atol=0.05)
+
+
+def test_pallas_agg_matches_jnp_exactly():
+    grads, ids, params = _tree(seed=7)
+    mask, p = _mask_p(seed=8)
+    cfg = make_compression("int8")
+    payload = compress_deltas(grads, ids, cfg)
+    a = aggregate_compressed(payload, params, ids, mask, p, cfg=cfg,
+                             agg_impl="jnp")
+    b = aggregate_compressed(payload, params, ids, mask, p, cfg=cfg,
+                             agg_impl="pallas", interpret=True)
+    for key in params:
+        np.testing.assert_allclose(np.asarray(a[key]), np.asarray(b[key]),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_topk_full_fraction_matches_int8():
+    """top_k=1.0 keeps every entry: the scatter-add path must reproduce
+    the dense int8 einsum."""
+    grads, ids, params = _tree(seed=2)
+    mask, p = _mask_p(seed=3)
+    q8 = make_compression("int8")
+    tk = make_compression(("topk8", 1.0))
+    a = aggregate_compressed(compress_deltas(grads, ids, q8), params, ids,
+                             mask, p, cfg=q8)
+    b = aggregate_compressed(compress_deltas(grads, ids, tk), params, ids,
+                             mask, p, cfg=tk)
+    for key in params:
+        np.testing.assert_allclose(np.asarray(a[key]), np.asarray(b[key]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_coeffs_override_matches_mask_path():
+    """Temporal's per-client fold hands explicit Eq. 5 coefficient rows;
+    summing the per-client folds must equal the one-shot aggregation."""
+    grads, ids, params = _tree(seed=4)
+    mask, p = _mask_p(seed=5)
+    cfg = make_compression("int8")
+    coeffs = layer_coefficients(mask, p)
+    whole = aggregate_compressed(compress_deltas(grads, ids, cfg), params,
+                                 ids, mask, p, cfg=cfg)
+    acc = {k: jnp.zeros_like(v) for k, v in whole.items()}
+    for u in range(U):
+        g1 = jax.tree.map(lambda g: g[u:u + 1], grads)
+        part = aggregate_compressed(compress_deltas(g1, ids, cfg), params,
+                                    ids, None, None, cfg=cfg,
+                                    coeffs=coeffs[u:u + 1])
+        acc = jax.tree.map(jnp.add, acc, part)
+    for key in params:
+        np.testing.assert_allclose(np.asarray(acc[key]),
+                                   np.asarray(whole[key]), rtol=1e-5,
+                                   atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# analytic byte accounting (the exact-match benchmark gate relies on this)
+# ---------------------------------------------------------------------------
+
+def test_payload_bytes_analytic():
+    _, ids, params = _tree()
+    # dense f32: (4*192 + 10) elements * 4 bytes * U clients
+    n_el = L * 24 * 8 + 10
+    logical, wire = payload_bytes(params, ids, U, make_compression(None))
+    assert logical == wire == 4 * n_el * U
+    logical, wire = payload_bytes(params, ids, U, make_compression("int8"))
+    assert logical == 4 * n_el * U
+    assert wire == (n_el + 4 * (L + 1)) * U         # 1B/el + f32 scales
+    cfg = make_compression(("topk8", 0.05))
+    k_w, k_h = int(np.ceil(0.05 * 192)), max(1, int(np.ceil(0.05 * 10)))
+    _, wire = payload_bytes(params, ids, U, cfg)
+    assert wire == (5 * (L * k_w + k_h) + 4 * (L + 1)) * U
+    # int8 wire is >= 3.5x smaller than logical for real layer widths
+    assert logical / payload_bytes(params, ids, U,
+                                   make_compression("int8"))[1] > 3.5

@@ -4,11 +4,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.adel_agg import adel_agg
+from repro.kernels.adel_agg import adel_agg, adel_agg_q8
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ops import (adel_aggregate_pallas, gqa_flash,
                                ssd_chunked_pallas)
-from repro.kernels.ref import adel_agg_ref, flash_attention_ref, ssd_scan_ref
+from repro.kernels.ref import (adel_agg_q8_ref, adel_agg_ref,
+                               flash_attention_ref, ssd_scan_ref)
 
 
 def _qs(shape, seed, dtype=jnp.float32):
@@ -145,6 +146,78 @@ def test_adel_agg_nonmultiple_feature_dim(U, L, F, bf):
     ref = adel_agg_ref(g, c)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# quantized ADEL aggregation (int8 wire payloads)
+# ---------------------------------------------------------------------------
+
+def _quantize(g):
+    """The wire's symmetric int8 absmax quantization of (U, L, F) deltas."""
+    amax = jnp.max(jnp.abs(g), axis=-1)
+    scale = amax / 127.0
+    inv = jnp.where(amax > 0, 127.0 / amax, 0.0)
+    return jnp.rint(g * inv[..., None]).astype(jnp.int8), scale
+
+
+@pytest.mark.parametrize("U,L,F,bf", [
+    (4, 3, 512, 512),
+    (7, 5, 300, 128),     # odd U, F not a multiple of block_f
+    (3, 2, 130, 64),      # F < 2*block_f and non-multiple
+    (2, 2, 7, 4),         # tiny, non-multiple
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_adel_agg_q8_sweep(U, L, F, bf, dtype):
+    """Fused dequantize+weight+accumulate vs the pure-jnp oracle (the
+    acceptance tolerance is atol 1e-2 in interpret mode)."""
+    q, scale = _quantize(_qs((U, L, F), 0))
+    c = jax.random.uniform(jax.random.PRNGKey(1), (U, L))
+    out = adel_agg_q8(q, scale.astype(dtype), c.astype(dtype),
+                      block_f=bf, interpret=True)
+    assert out.shape == (L, F) and out.dtype == jnp.float32
+    ref = adel_agg_q8_ref(q, scale.astype(dtype), c.astype(dtype))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref, np.float32),
+                               atol=1e-2, rtol=1e-2)
+
+
+def test_adel_agg_q8_zero_coefficient_rows():
+    """Clients with all-zero Eq. 5 coefficients (deadline misses at depth
+    0) must contribute nothing — dropping their rows gives the same sum."""
+    U, L, F = 6, 4, 96
+    q, scale = _quantize(_qs((U, L, F), 2))
+    c = jax.random.uniform(jax.random.PRNGKey(3), (U, L))
+    c = c.at[1].set(0.0).at[4].set(0.0)
+    out = adel_agg_q8(q, scale, c, block_f=64, interpret=True)
+    keep = jnp.asarray([0, 2, 3, 5])
+    ref = adel_agg_q8_ref(q[keep], scale[keep], c[keep])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_adel_agg_q8_zero_scale_layer():
+    """An all-zero delta layer quantizes to scale 0 and must aggregate to
+    exactly zero (the inv-scale guard, not NaN/inf)."""
+    U, L, F = 3, 2, 64
+    g = _qs((U, L, F), 4).at[:, 1, :].set(0.0)
+    q, scale = _quantize(g)
+    c = jnp.ones((U, L))
+    out = adel_agg_q8(q, scale, c, block_f=64, interpret=True)
+    assert np.all(np.isfinite(np.asarray(out)))
+    np.testing.assert_array_equal(np.asarray(out[1]), 0.0)
+
+
+def test_adel_agg_q8_dequant_error_bound():
+    """End-to-end quantize -> fused aggregate stays within the absmax/254
+    per-element bound times the summed coefficients."""
+    U, L, F = 5, 3, 256
+    g = _qs((U, L, F), 5)
+    q, scale = _quantize(g)
+    c = jax.random.uniform(jax.random.PRNGKey(6), (U, L))
+    out = adel_agg_q8(q, scale, c, block_f=128, interpret=True)
+    dense = adel_agg_ref(g, c)
+    bound = jnp.sum(c * jnp.max(jnp.abs(g), axis=-1) / 254.0, axis=0)
+    err = jnp.max(jnp.abs(out - dense), axis=-1)
+    assert np.all(np.asarray(err) <= np.asarray(bound) * 1.001)
 
 
 def test_adel_agg_pytree_matches_reference_path():
