@@ -1,0 +1,83 @@
+"""Async sweep — round-synchronous aggregation vs the buffered semi-async
+backend's staleness-weighted delayed gradients, under the same ``T_max``.
+
+Three arms per fleet scenario, all sharing the engine's deadline budget
+(``T_max = rounds * L * 0.5`` — identical across arms because the model
+and round count match):
+
+* ``adel-sync``     — ADEL's adaptive deadlines, round-synchronous
+                      aggregation (the scenario's default backend): work
+                      past the deadline is simply lost,
+* ``salf-buffered`` — SALF's fixed deadline + the buffered backend: the
+                      deadline never adapts, so the carry buffer is the
+                      only channel recovering stragglers' unfinished
+                      layers (folded later with weight ``lam**tau``),
+* ``adel-buffered`` — both: adaptive deadlines AND the carry buffer.
+
+Emits ``experiments/results/async_sweep.json`` in the
+``{scenario: {arm: history}}`` layout plus one telemetry event stream per
+arm (``events/async_sweep.<scenario>.<arm>.jsonl`` — the clock-model
+ledger grows the ``carried_in/carried_out/stale`` columns); rendered by
+``benchmarks/report.py`` (staleness section) and gated in CI by
+``benchmarks.run --check-against``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import cached_result, events_path, save_result
+from repro.fl.spec import ExecSpec
+
+SCENARIO_NAMES = ("longtail-mobile-diurnal", "bimodal-edge-markov")
+
+# staleness decay of the delayed-gradient fold, w(tau) = LAM ** tau
+LAM = 0.5
+
+
+def _arms() -> tuple:
+    buffered = ExecSpec(backend="buffered", lam=LAM)
+    return (("adel-sync", "adel", None),
+            ("salf-buffered", "salf", buffered),
+            ("adel-buffered", "adel", buffered))
+
+
+def run(quick: bool = False) -> dict:
+    cached = cached_result("async_sweep")
+    if cached is not None:
+        return cached
+    from repro.fleet.scenarios import get_scenario, run_scenario
+
+    fleet_size = 200 if quick else 400
+    rounds = 5 if quick else 10
+    result = {}
+    for name in SCENARIO_NAMES:
+        base = get_scenario(name)
+        base = dataclasses.replace(base, n_train=1200 if quick else 2500,
+                                   n_test=400)
+        print(f"[async_sweep] {name}: fleet={fleet_size} rounds={rounds} "
+              f"lam={LAM}")
+        row = {}
+        for arm, method, spec in _arms():
+            scn = dataclasses.replace(base, method=method)
+            hist = run_scenario(
+                scn, rounds=rounds, fleet_size=fleet_size, exec=spec,
+                solver_steps=400, eval_every=2, verbose=False,
+                events=events_path(f"async_sweep.{name}.{arm}"))
+            acc = hist["accuracy"][-1] if hist["accuracy"] else 0.0
+            drift = (hist.get("telemetry") or {}).get("drift", {})
+            carried = drift.get("carried_in_total")
+            extra = (f" carried_in={carried} "
+                     f"stale_mean={drift.get('stale_mean', '—')}"
+                     if carried is not None else "")
+            print(f"  [{arm:13s}] rounds="
+                  f"{hist['rounds'][-1] if hist['rounds'] else 0}"
+                  f"  final_acc={acc:.4f}  wall={hist['wall_s']:.1f}s"
+                  f"{extra}")
+            row[arm] = hist
+        result[name] = row
+    save_result("async_sweep", result)
+    return result
+
+
+if __name__ == "__main__":
+    run()

@@ -186,6 +186,48 @@ def section_replan_sweep() -> str:
     return "\n".join(out)
 
 
+def section_async_sweep() -> str:
+    """Round-synchronous vs buffered semi-async aggregation under the same
+    ``T_max`` (``benchmarks/async_sweep.py``): final accuracy per arm plus
+    the carry-buffer staleness statistics of the buffered arms."""
+    fn = os.path.join(RESULTS, "results", "async_sweep.json")
+    if not os.path.exists(fn):
+        return ""
+    with open(fn) as f:
+        res = json.load(f)
+    out = ["### async_sweep (staleness-weighted delayed gradients, "
+           "same T_max)\n",
+           "carried in = buffered late contributions folded into a later "
+           "round's update (weight lam**tau); stale_mean = their mean "
+           "staleness in rounds; dropped = expired (> max_age) or "
+           "ring-evicted.\n",
+           "| scenario | adel-sync | salf-buffered | adel-buffered | "
+           "carried in (salf/adel) | stale_mean | dropped |",
+           "|---|---|---|---|---|---|---|"]
+    for scn, row in sorted(res.items()):
+        if not isinstance(row, dict):
+            continue
+        cells, carried, stale, dropped = [], [], [], []
+        for arm in ("adel-sync", "salf-buffered", "adel-buffered"):
+            d = row.get(arm)
+            if isinstance(d, dict) and d.get("accuracy"):
+                cells.append(f"{d['accuracy'][-1]:.3f}")
+            else:
+                cells.append("—")
+            if arm != "adel-sync" and isinstance(d, dict):
+                drift = (d.get("telemetry") or {}).get("drift", {})
+                carried.append(str(drift.get("carried_in_total", "—")))
+                if "stale_mean" in drift:
+                    stale.append(f"{drift['stale_mean']:.2f}")
+                dropped.append(str(drift.get("carried_dropped_total", "—")))
+        out.append(f"| {scn} | " + " | ".join(cells)
+                   + f" | {'/'.join(carried) or '—'}"
+                   + f" | {'/'.join(stale) or '—'}"
+                   + f" | {'/'.join(dropped) or '—'} |")
+    out.append("")
+    return "\n".join(out)
+
+
 def section_telemetry() -> str:
     """Round-runtime telemetry recorded by the instrumented suites
     (``History.telemetry`` blocks inside ``fleet_smoke.json``).
@@ -287,6 +329,9 @@ def section_repro() -> str:
     replan = section_replan_sweep()
     if replan:
         out.append(replan)
+    async_ = section_async_sweep()
+    if async_:
+        out.append(async_)
     lm = section_lm_smoke()
     if lm:
         out.append(lm)

@@ -27,7 +27,7 @@ import time
 
 SUITE_NAMES = ("fig2_mnist", "fig3_cifar", "fig4_robustness",
                "table2_budgets", "roofline", "fleet_smoke",
-               "backend_sweep", "replan_sweep", "lm_smoke")
+               "backend_sweep", "replan_sweep", "async_sweep", "lm_smoke")
 
 # metric-field classification for the regression gate
 _TIME_KEYS = ("wall_s", "wall_per_round_s")
@@ -38,9 +38,10 @@ _BYTES_KEYS = ("bytes_per_round_logical", "bytes_per_round_wire")
 
 
 def _suites() -> dict:
-    from benchmarks import (backend_sweep, fig2_mnist, fig3_cifar,
-                            fig4_robustness, fleet_smoke, lm_smoke,
-                            replan_sweep, roofline, table2_budgets)
+    from benchmarks import (async_sweep, backend_sweep, fig2_mnist,
+                            fig3_cifar, fig4_robustness, fleet_smoke,
+                            lm_smoke, replan_sweep, roofline,
+                            table2_budgets)
     return {
         "fig2_mnist": fig2_mnist.run,
         "fig3_cifar": fig3_cifar.run,
@@ -50,6 +51,7 @@ def _suites() -> dict:
         "fleet_smoke": fleet_smoke.run,
         "backend_sweep": backend_sweep.run,
         "replan_sweep": replan_sweep.run,
+        "async_sweep": async_sweep.run,
         "lm_smoke": lm_smoke.run,
     }
 
@@ -253,6 +255,19 @@ def _derive(name: str, result: dict) -> str:
                     for t in ("never", "every-k", "drift") if t in row)
                 pieces.append(f"{scn.split('-')[0]}:{accs}")
             return "never/every-k/drift " + " ".join(pieces)
+        if name == "async_sweep":
+            pieces = []
+            for scn, row in result.items():
+                accs = "/".join(
+                    f"{row[a]['accuracy'][-1]:.3f}"
+                    for a in ("adel-sync", "salf-buffered", "adel-buffered")
+                    if a in row and row[a].get("accuracy"))
+                carried = sum(
+                    (row[a].get("telemetry") or {}).get("drift", {})
+                    .get("carried_in_total", 0) for a in row)
+                pieces.append(f"{scn.split('-')[0]}:{accs} "
+                              f"carried:{carried}")
+            return "sync/salf-buf/adel-buf " + " ".join(pieces)
         if name == "table2_budgets":
             accs = []
             for k, v in result.items():

@@ -13,9 +13,10 @@ from typing import Optional
 
 from repro.core.compression import CompressionConfig
 from repro.core.replan import ReplanConfig
+from repro.fl.spec import ExecSpec
 
-__all__ = ["ArchConfig", "CompressionConfig", "FleetConfig", "InputShape",
-           "INPUT_SHAPES", "ReplanConfig", "pad_vocab"]
+__all__ = ["ArchConfig", "CompressionConfig", "ExecSpec", "FleetConfig",
+           "InputShape", "INPUT_SHAPES", "ReplanConfig", "pad_vocab"]
 
 
 def pad_vocab(v: int, multiple: int = 512) -> int:
@@ -227,8 +228,14 @@ class FleetConfig:
     availability_kwargs: tuple = ()
     cohort_size: int = 32          # U clients planned per round
     cohort_strategy: str = "uniform"   # uniform | power-of-choice | stratified
+    # full execution spec (repro.fl.spec.ExecSpec). When set it is the
+    # single source of truth for backend/chunk/compression/staleness; the
+    # legacy backend/chunk_size/compression fields below then act as the
+    # resolve() base they always were (exec wins). None keeps legacy-only
+    # configs bit-identical.
+    exec: Optional[ExecSpec] = None
     # execution backend (repro.fl.backends):
-    # dense | chunked | shard_map | temporal
+    # dense | chunked | shard_map | temporal | buffered
     backend: str = "chunked"
     chunk_size: int = 16           # client-shard axis chunk (chunked backend)
     # online re-planning block (repro.core.replan): trigger "never" keeps
@@ -244,6 +251,15 @@ class FleetConfig:
 
     def availability_dict(self) -> dict:
         return dict(self.availability_kwargs)
+
+    def exec_spec(self) -> ExecSpec:
+        """The effective execution spec: ``exec`` when set, else an
+        :class:`ExecSpec` assembled from the legacy backend / chunk_size /
+        compression fields (identical resolution either way)."""
+        if self.exec is not None:
+            return self.exec
+        return ExecSpec(backend=self.backend, chunk_size=self.chunk_size,
+                        compression=self.compression)
 
 
 @dataclasses.dataclass(frozen=True)

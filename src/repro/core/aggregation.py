@@ -31,6 +31,7 @@ import jax.numpy as jnp
 __all__ = [
     "layer_coefficients",
     "weight_by_layer",
+    "aggregate_with_coeffs",
     "aggregate_grads",
     "aggregate_grads_chunk",
     "aggregate_grads_local",
@@ -89,6 +90,22 @@ def _weight_leaf(g: jnp.ndarray, ids: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarra
     # stacked: g is (U, L, ...); weight (U, L) broadcast over trailing dims
     w = jnp.take(c, ids, axis=1)                  # (U, L)
     return jnp.einsum("ul,ul...->l...", w, g)
+
+
+def aggregate_with_coeffs(grads: PyTree, layer_ids: PyTree,
+                          coeffs: jnp.ndarray) -> PyTree:
+    """Reduce stacked per-client grads with EXPLICIT coefficients.
+
+    ``agg^l = sum_u coeffs[u, l] g_u^l`` — the raw coefficient fold that
+    :func:`aggregate_grads` specializes with the Eq. 5 on-time
+    coefficients. The buffered backend calls it directly with
+    staleness-decayed late-set coefficients whose (mask, p) were fixed at
+    the round the work belongs to.
+
+    grads leaves: (U,) + param.shape; coeffs: (U, L).
+    """
+    return jax.tree.map(lambda g, ids: _weight_leaf(g, ids, coeffs),
+                        grads, layer_ids)
 
 
 def aggregate_grads(grads: PyTree, layer_ids: PyTree, mask: jnp.ndarray,

@@ -24,6 +24,8 @@ __all__ = [
     "sample_depths",
     "contribution_mask",
     "exact_p_layers",
+    "late_p_layers",
+    "late_arrival_delays",
     "sample_round",
 ]
 
@@ -65,6 +67,39 @@ def exact_p_layers(lam: jnp.ndarray, L: int) -> jnp.ndarray:
     logq = log_q_gamma_all(L, lam)          # (U, L): [u, s-1] = log Q(s, lam_u)
     logp = jnp.flip(logq.sum(0), axis=-1)   # layer l -> sum_u log Q(L+1-l, ·)
     return jnp.exp(logp)
+
+
+def late_p_layers(lam: jnp.ndarray, L: int) -> jnp.ndarray:
+    """Exact zero-LATE-contributor probability per layer.
+
+    The buffered (semi-async) backend folds the COMPLEMENT of the on-time
+    set: user u is late at layer l iff z_u < L + 1 - l. Mirroring
+    :func:`exact_p_layers`, the probability that NO user is late at layer l
+    is ``prod_u (1 - Q(L+1-l, lambda_u))`` — the bias-correction constant
+    for the Eq. 5 coefficient fold applied to the late mask. Returns shape
+    (L,), entry l-1 = p_late^l.
+    """
+    logq = log_q_gamma_all(L, lam)          # (U, L): [u, s-1] = log Q(s, lam_u)
+    q = jnp.flip(jnp.exp(logq), axis=-1)    # [u, l-1] = P[u late at layer l]
+    return jnp.prod(1.0 - q, axis=0)
+
+
+def late_arrival_delays(depth: jnp.ndarray, layer_s: jnp.ndarray,
+                        B: jnp.ndarray, L: int) -> jnp.ndarray:
+    """Expected extra simulated time (past the deadline) for each straggler
+    to finish its remaining ``L - z_u`` layer-gradients and upload.
+
+    Per-layer backprop time is Exp(S/P) with mean ``layer_s = S_u / P_u``
+    (the same clock that makes z_u Poisson), so the expected residual work
+    is ``max(L - z_u, 0) * S_u / P_u`` plus the comm/setup overhead ``B_u``
+    paid again for the late upload. The buffered backend banks a
+    straggler's finished layers at deadline time and folds them once the
+    simulated clock passes ``round_end + late_arrival_delays(...)``.
+    """
+    depth = jnp.asarray(depth, jnp.float32)
+    rem = jnp.maximum(jnp.float32(L) - depth, 0.0)
+    return rem * jnp.asarray(layer_s, jnp.float32) + jnp.asarray(B,
+                                                                 jnp.float32)
 
 
 def sample_round(key: jax.Array, T_d, m, cfg: AnalysisConfig):

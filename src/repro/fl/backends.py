@@ -23,8 +23,13 @@ computed and aggregated:
   :func:`repro.core.aggregation.weight_by_layer` (the big-arch LM layout
   from ``launch.steps.make_train_step``), so peak memory is ONE delta
   pytree regardless of cohort size. Required for 480B-class architectures.
+* :class:`BufferedBackend`  — the semi-async (delayed-gradient) variant of
+  dense: layers a straggler did NOT finish by the deadline are banked in a
+  server-side carry buffer and folded into a later round's update with
+  staleness weight ``lam ** tau`` (see the class docstring). ``lam=0``
+  delegates every round to the dense step — trajectory-bit-identical.
 
-All four produce the same updates up to float summation order, which
+All of them produce the same updates up to float summation order, which
 ``tests/test_backends.py`` asserts end-to-end. Each backend keeps its own
 jit cache keyed by ``(bias_correct, hetero)``, so retracing happens at most
 once per aggregation rule; HeteroFL width-overlap aggregation
@@ -39,8 +44,11 @@ runtime's round loop never reads a params buffer after handing it to
 ``donate=False``. The chunked backend only donates in its final apply step
 (every chunk partial reads the same params).
 
-Backends are selected by name: ``make_backend("dense" | "chunked" |
-"shard_map" | "temporal", model, ...)``.
+Backends are selected through :class:`repro.fl.spec.ExecSpec`
+(``make_backend(exec=spec, model)``) or by legacy name: ``make_backend(
+"dense" | "chunked" | "shard_map" | "temporal" | "buffered", model, ...)``
+— both resolve through :meth:`ExecSpec.resolve`, so trajectories are
+bit-identical either way.
 
 Compression: every backend accepts a ``compression=`` spec
 (:mod:`repro.core.compression` — ``"int8"`` symmetric quantization or
@@ -73,15 +81,22 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro import obs
 from repro.core.aggregation import (aggregate_grads, aggregate_grads_chunk,
                                     aggregate_grads_local,
+                                    aggregate_with_coeffs,
                                     hetero_overlap_mean,
                                     hetero_overlap_partials,
                                     layer_coefficients, weight_by_layer)
 from repro.core.compression import (aggregate_compressed, compress_deltas,
                                     make_compression, payload_bytes)
+from repro.core.straggler import late_arrival_delays, late_p_layers
 from repro.fl.client import batched_client_deltas, local_update
+# the canonical name tuples live next to ExecSpec (re-exported here for
+# back-compat: `from repro.fl.backends import BACKENDS` keeps working)
+from repro.fl.spec import AGG_IMPLS, BACKENDS, ExecSpec
 
 try:                                     # jax >= 0.5
     from jax import shard_map as _shard_map
@@ -89,14 +104,11 @@ except ImportError:                      # jax 0.4.x
     from jax.experimental.shard_map import shard_map as _shard_map
 from jax.sharding import PartitionSpec as P
 
-__all__ = ["BACKENDS", "ExecutionBackend", "DenseBackend", "ChunkedBackend",
-           "ShardMapBackend", "TemporalBackend", "make_backend"]
+__all__ = ["BACKENDS", "AGG_IMPLS", "ExecSpec", "ExecutionBackend",
+           "DenseBackend", "ChunkedBackend", "ShardMapBackend",
+           "TemporalBackend", "BufferedBackend", "make_backend"]
 
 PyTree = Any
-
-BACKENDS = ("dense", "chunked", "shard_map", "temporal")
-
-AGG_IMPLS = ("jnp", "pallas")
 
 
 def _sub32(w: jnp.ndarray, d: jnp.ndarray) -> jnp.ndarray:
@@ -120,6 +132,10 @@ class ExecutionBackend:
     """
 
     name = "base"
+    #: backends that carry state across rounds (the buffered backend) need
+    #: the runtime's per-round :class:`repro.fl.runtime.RoundContext`
+    #: (simulated clock + straggler-model rates) passed as ``ctx=``
+    needs_ctx = False
 
     def __init__(self, model, *, local_iters: int = 1, l2: float = 0.0,
                  donate: bool = True, compression=None,
@@ -192,8 +208,15 @@ class ExecutionBackend:
         """Smallest padded cohort width >= U this backend can execute."""
         return int(U)
 
+    def reset_state(self) -> None:
+        """Clear any cross-round server-side state (carry buffers). The
+        runtime calls this at the start of every ``run`` so one backend
+        instance can drive several independent trainings. Stateless
+        backends are a no-op."""
+
     def run_round(self, params: PyTree, xb, yb, wb, mask, p, eta, *,
-                  bias_correct: bool, wmasks: PyTree | None = None) -> PyTree:
+                  bias_correct: bool, wmasks: PyTree | None = None,
+                  ctx=None) -> PyTree:
         raise NotImplementedError
 
     def describe(self) -> dict:
@@ -254,7 +277,7 @@ class DenseBackend(ExecutionBackend):
         return self._steps[key]
 
     def run_round(self, params, xb, yb, wb, mask, p, eta, *,
-                  bias_correct, wmasks=None):
+                  bias_correct, wmasks=None, ctx=None):
         self._check_rule(wmasks)
         step = self._step(bool(bias_correct), wmasks is not None)
         return self._traced_fused(step, params, xb, yb, wb, mask, p, eta,
@@ -382,7 +405,7 @@ class ChunkedBackend(ExecutionBackend):
         return out
 
     def run_round(self, params, xb, yb, wb, mask, p, eta, *,
-                  bias_correct, wmasks=None):
+                  bias_correct, wmasks=None, ctx=None):
         self._check_rule(wmasks)
         U = int(mask.shape[0])
         c = min(self.chunk_size, U)
@@ -516,7 +539,7 @@ class ShardMapBackend(ExecutionBackend):
         return self._steps[key]
 
     def run_round(self, params, xb, yb, wb, mask, p, eta, *,
-                  bias_correct, wmasks=None):
+                  bias_correct, wmasks=None, ctx=None):
         self._check_rule(wmasks)
         step = self._step(bool(bias_correct), wmasks is not None)
         return self._traced_fused(step, params, xb, yb, wb, mask, p, eta,
@@ -634,39 +657,309 @@ class TemporalBackend(ExecutionBackend):
         return self._steps[key]
 
     def run_round(self, params, xb, yb, wb, mask, p, eta, *,
-                  bias_correct, wmasks=None):
+                  bias_correct, wmasks=None, ctx=None):
         self._check_rule(wmasks)
         step = self._step(bool(bias_correct), wmasks is not None)
         return self._traced_fused(step, params, xb, yb, wb, mask, p, eta,
                                   wmasks)
 
 
-def make_backend(backend, model, *, chunk_size: int = 16, mesh=None,
-                 local_iters: int = 1, l2: float = 0.0,
+class BufferedBackend(DenseBackend):
+    """Semi-async delayed-gradient execution: stragglers' unfinished layers
+    are banked and folded into later rounds with staleness decay.
+
+    ADEL-FL's round-synchronous aggregation discards every layer a client
+    did not finish by the deadline. Following the delayed-gradient line
+    (*Stragglers Are Not Disaster*, arxiv 2102.06329; *TimelyFL*, arxiv
+    2304.06947), this backend keeps that work: the straggler continues its
+    backward pass past the deadline, and the layers it finishes LATE —
+    exactly the complement ``1 - mask`` of the round's contribution mask —
+    arrive at the server once the simulated clock reaches
+
+        ``arrival_u = round_end + max(L - z_u, 0) * S_u / P_u + B_u``
+
+    (:func:`repro.core.straggler.late_arrival_delays` — the same
+    exponential per-layer clock that makes ``z_u`` Poisson). Each later
+    round ``t`` folds every buffered contribution whose arrival the clock
+    has passed into the server update with weight ``lam ** tau``
+    (``tau = t - work_round >= 1``), through the Eq. 5 layer-wise
+    coefficient path: the banked coefficients are
+    :func:`repro.core.aggregation.layer_coefficients` evaluated on the
+    LATE mask with the late-set zero-contributor probabilities
+    :func:`repro.core.straggler.late_p_layers`, so at weight 1 the fold is
+    an unbiased estimate of the late set's FedAvg layer mean
+    (``tests/test_unbiasedness.py``).
+
+    The carry buffer is a ring of ``buffer_cap`` slots (one per banked
+    round), each holding device payloads — float32 delta leaves, or, under
+    ``compression=``, the int8 WIRE tuples the on-time reduction already
+    computed (the buffer never re-materializes dequantized f32; the fold
+    goes through :func:`repro.core.compression.aggregate_compressed` with
+    explicit coefficients). Slot payloads are fresh jit outputs and are
+    never donated, so they survive the params donation of later round
+    steps. Work older than ``max_age`` rounds, or evicted by the ring, is
+    dropped (counted in the ``carried_dropped`` ledger column).
+
+    ``lam=0`` (the default) delegates every round to the inherited dense
+    step — trajectory-BIT-identical to ``backend="dense"``, which the
+    backend-equivalence suite asserts. ``lam>0`` needs the runtime's
+    :class:`repro.fl.runtime.RoundContext` (``ctx=``) for the simulated
+    clock and straggler rates, and rejects HeteroFL width-mask rounds
+    (the width-overlap mean has no late-set analogue).
+    """
+
+    name = "buffered"
+
+    def __init__(self, model, *, lam: float = 0.0, max_age: int = 4,
+                 buffer_cap: int = 4, local_iters: int = 1, l2: float = 0.0,
                  donate: bool = True, compression=None,
-                 agg_impl: str = "jnp") -> ExecutionBackend:
-    """Resolve a backend by name (``"dense" | "chunked" | "shard_map" |
-    "temporal"``) or pass an :class:`ExecutionBackend` instance through
+                 agg_impl: str = "jnp"):
+        super().__init__(model, local_iters=local_iters, l2=l2,
+                         donate=donate, compression=compression,
+                         agg_impl=agg_impl)
+        if not 0.0 <= float(lam) <= 1.0:
+            raise ValueError(f"lam={lam} must be in [0, 1]")
+        self.lam = float(lam)
+        self.max_age = int(max_age)
+        self.buffer_cap = int(buffer_cap)
+        self._mains: dict[tuple, Callable] = {}
+        self._fold_step = None
+        self._slots: list[dict] = []     # FIFO ring of banked rounds
+        self.last_carry: dict = {}
+
+    @property
+    def needs_ctx(self) -> bool:        # type: ignore[override]
+        return self.lam > 0.0
+
+    def reset_state(self) -> None:
+        self._slots = []
+        self.last_carry = {}
+
+    def describe(self):
+        return {**super().describe(), "lam": self.lam,
+                "max_age": self.max_age, "buffer_cap": self.buffer_cap}
+
+    # jit steps ---------------------------------------------------------
+    def _main(self, bias_correct: bool, bank: bool) -> Callable:
+        """Fused local-train + on-time Eq. 5 aggregate, optionally also
+        returning the round's bankable payload (the wire format under
+        compression, float32 delta leaves otherwise)."""
+        key = (bias_correct, bank)
+        if key not in self._mains:
+            comp = self.compression
+
+            def step(params, xb, yb, wb, mask, p, eta):
+                deltas = self._deltas(params, xb, yb, wb, eta)
+                ids = self.model.layer_ids(params)
+                banked = None
+                if comp.mode != "none":
+                    payload = compress_deltas(deltas, ids, comp)
+                    agg = aggregate_compressed(
+                        payload, params, ids, mask, p, cfg=comp,
+                        bias_correct=bias_correct, agg_impl=self.agg_impl)
+                    banked = payload       # the SAME int8 wire tuples
+                else:
+                    banked = jax.tree.map(
+                        lambda d: d.astype(jnp.float32), deltas)
+                    if self.agg_impl == "pallas":
+                        from repro.kernels.ops import adel_aggregate_pallas
+                        agg = adel_aggregate_pallas(
+                            deltas, ids, mask, p, bias_correct=bias_correct)
+                    else:
+                        agg = aggregate_grads(deltas, ids, mask, p,
+                                              bias_correct=bias_correct)
+                new = jax.tree.map(_sub32, params, agg)
+                return (new, banked) if bank else new
+
+            self._mains[key] = jax.jit(step,
+                                       donate_argnums=self._donate_params)
+        return self._mains[key]
+
+    def _fold(self) -> Callable:
+        """Fold one carry slot into params: ``params - sum_u (c_late[u] *
+        w[u]) . delta_u`` — w carries the staleness decay and arrival
+        eligibility. Only params is donated; the slot payload may fold
+        again (clients of one round arrive at different times)."""
+        if self._fold_step is None:
+            comp = self.compression
+
+            def fold(params, banked, c_late, w):
+                ids = self.model.layer_ids(params)
+                coeffs = c_late * w[:, None]
+                if comp.mode != "none":
+                    agg = aggregate_compressed(
+                        banked, params, ids, None, None, cfg=comp,
+                        coeffs=coeffs, agg_impl=self.agg_impl)
+                elif self.agg_impl == "pallas":
+                    from repro.kernels.ops import adel_aggregate_pallas
+                    agg = adel_aggregate_pallas(banked, ids, None, None,
+                                                coeffs=coeffs)
+                else:
+                    agg = aggregate_with_coeffs(banked, ids, coeffs)
+                return jax.tree.map(_sub32, params, agg)
+
+            self._fold_step = jax.jit(fold,
+                                      donate_argnums=self._donate_params)
+        return self._fold_step
+
+    # round -------------------------------------------------------------
+    def run_round(self, params, xb, yb, wb, mask, p, eta, *,
+                  bias_correct, wmasks=None, ctx=None):
+        if self.lam == 0.0:
+            # exact round-synchronous semantics: the inherited dense step,
+            # bit for bit (no carry, no extra jit)
+            return super().run_round(params, xb, yb, wb, mask, p, eta,
+                                     bias_correct=bias_correct,
+                                     wmasks=wmasks)
+        if wmasks is not None:
+            raise ValueError("buffered backend with lam>0 is incompatible "
+                             "with HeteroFL width-mask aggregation")
+        if ctx is None:
+            raise ValueError("buffered backend with lam>0 needs the "
+                             "runtime's RoundContext (ctx=): the carry "
+                             "buffer is driven by the simulated clock")
+        self._check_rule(wmasks)
+        L = int(mask.shape[1])
+        U_pad = int(mask.shape[0])
+        U_act = int(ctx.U_act)
+        t = int(ctx.t)
+        mask_h = np.asarray(mask, np.float32)
+        depth = mask_h.sum(1)                         # (U_pad,) realized z
+        real = np.arange(U_pad) < U_act
+        late_rows = real & (depth < L)
+
+        # 1. fold decisions, entirely host-side (slot metadata): which
+        #    banked clients' arrivals has the simulated clock passed?
+        folds, dropped, stale = [], 0, {}
+        for slot in self._slots:
+            pend = slot["pending"]
+            if not pend.any():
+                continue
+            tau = t - slot["round"]
+            if tau > self.max_age:
+                dropped += int(pend.sum())
+                pend[:] = False
+                continue
+            elig = pend & (slot["arrival"] <= float(ctx.sim_end))
+            if elig.any():
+                w = np.where(elig, np.float32(self.lam) ** tau,
+                             np.float32(0.0)).astype(np.float32)
+                folds.append((slot, w))
+                stale[tau] = stale.get(tau, 0) + int(elig.sum())
+                pend &= ~elig
+
+        # 2. this round's late-set coefficients: Eq. 5 on the COMPLEMENT
+        #    mask with the late-set zero-contributor probabilities
+        bank = bool(late_rows.any())
+        if bank:
+            late_mask = jnp.asarray((1.0 - mask_h) * real[:, None],
+                                    jnp.float32)
+            p_late = late_p_layers(jnp.asarray(ctx.lam, jnp.float32), L)
+            c_late = layer_coefficients(late_mask, p_late,
+                                        bias_correct=bool(bias_correct))
+
+        # 3. the fused train + on-time aggregate (+ bankable payload)
+        tracer = self.tracer
+        step = self._main(bool(bias_correct), bank)
+        with tracer.span("local_train", backend=self.name, fused=True):
+            out = step(params, xb, yb, wb, mask, p, eta)
+            if tracer.active:
+                jax.block_until_ready(out)
+        params, banked = out if bank else (out, None)
+        if tracer.active:
+            self._count_bytes(params, U_pad)
+
+        # 4. fold every arrived carry slot (params flows through, donated)
+        if folds:
+            fold = self._fold()
+            with tracer.span("aggregate", backend=self.name,
+                             carried=sum(int((w > 0).sum())
+                                         for _, w in folds)):
+                for slot, w in folds:
+                    params = fold(params, slot["banked"], slot["c_late"],
+                                  jnp.asarray(w))
+                if tracer.active:
+                    jax.block_until_ready(params)
+
+        # 5. bank this round's late work (ring eviction drops the oldest)
+        if bank:
+            delays = late_arrival_delays(depth[:U_act], ctx.layer_s, ctx.B,
+                                         L)
+            arrival = np.full(U_pad, np.inf, np.float32)
+            arrival[:U_act] = float(ctx.sim_end) + np.asarray(delays)
+            if len(self._slots) >= self.buffer_cap:
+                evicted = self._slots.pop(0)
+                dropped += int(evicted["pending"].sum())
+            self._slots.append({"round": t, "banked": banked,
+                                "c_late": c_late, "arrival": arrival,
+                                "pending": late_rows.copy()})
+
+        carried_in = sum(stale.values())
+        carried_out = sum(int(s["pending"].sum()) for s in self._slots)
+        self.last_carry = {"carried_in": carried_in,
+                           "carried_out": carried_out,
+                           "carried_dropped": dropped,
+                           "stale": stale}
+        tracer.count("carried_in", carried_in, backend=self.name)
+        tracer.count("carried_out", carried_out, backend=self.name)
+        if dropped:
+            tracer.count("carried_dropped", dropped, backend=self.name)
+        return params
+
+
+def make_backend(backend=None, model=None, *, exec: ExecSpec | None = None,
+                 chunk_size: int | None = None, mesh=None,
+                 local_iters: int | None = None, l2: float | None = None,
+                 donate: bool | None = None, compression=None,
+                 agg_impl: str | None = None, lam: float | None = None,
+                 max_age: int | None = None,
+                 buffer_cap: int | None = None) -> ExecutionBackend:
+    """Build an :class:`ExecutionBackend` from an
+    :class:`repro.fl.spec.ExecSpec` (``exec=``, or an ExecSpec as the
+    first positional argument) or from the legacy kwargs — both funnel
+    through :meth:`ExecSpec.resolve`, so the two call forms are
+    equivalent. An :class:`ExecutionBackend` instance passes through
     unchanged.
 
-    ``compression`` is a :mod:`repro.core.compression` spec (None | mode
-    string | ``(mode, top_k)`` | :class:`CompressionConfig`) selecting the
+    Legacy kwargs default to None (= the spec's value): ``backend`` names
+    one of :data:`BACKENDS`; ``compression`` is a
+    :mod:`repro.core.compression` spec (None | mode string |
+    ``(mode, top_k)`` | :class:`CompressionConfig`) selecting the
     client->server wire format the reduction consumes; ``agg_impl``
     (``"jnp" | "pallas"``) picks the aggregation implementation — "pallas"
     routes stacked-layer folds through the fused kernels (``adel_agg`` /
-    ``adel_agg_q8``, interpret mode on CPU) on the dense and temporal
-    backends and on every compressed non-shard_map path.
+    ``adel_agg_q8``, interpret mode on CPU) on the dense, temporal and
+    buffered backends and on every compressed non-shard_map path;
+    ``lam`` / ``max_age`` / ``buffer_cap`` are the buffered backend's
+    staleness knobs. Knobs the selected backend would silently ignore
+    warn (or raise, under ``REPRO_EXEC_STRICT=1``) via
+    :meth:`ExecSpec.validate`.
     """
     if isinstance(backend, ExecutionBackend):
         return backend
-    kw = dict(local_iters=local_iters, l2=l2, donate=donate,
-              compression=compression, agg_impl=agg_impl)
-    if backend == "dense":
+    if isinstance(backend, ExecSpec):
+        exec, backend = (backend if exec is None else exec), None
+    legacy = dict(backend=backend, chunk_size=chunk_size, mesh=mesh,
+                  local_iters=local_iters, l2=l2, donate=donate,
+                  compression=compression, agg_impl=agg_impl, lam=lam,
+                  max_age=max_age, buffer_cap=buffer_cap)
+    has_legacy = any(v is not None for v in legacy.values())
+    # a complete ExecSpec was validated by the resolve() that built it;
+    # re-validate only when legacy kwargs modify it
+    spec = ExecSpec.resolve(exec, validate=has_legacy or exec is None,
+                            **legacy)
+    if isinstance(spec.backend, ExecutionBackend):
+        return spec.backend
+    kw = spec.backend_kwargs()
+    if spec.backend == "dense":
         return DenseBackend(model, **kw)
-    if backend == "chunked":
-        return ChunkedBackend(model, chunk_size=chunk_size, **kw)
-    if backend == "shard_map":
-        return ShardMapBackend(model, mesh=mesh, **kw)
-    if backend == "temporal":
+    if spec.backend == "chunked":
+        return ChunkedBackend(model, chunk_size=spec.chunk_size, **kw)
+    if spec.backend == "shard_map":
+        return ShardMapBackend(model, mesh=spec.mesh, **kw)
+    if spec.backend == "temporal":
         return TemporalBackend(model, **kw)
-    raise ValueError(f"unknown backend {backend!r}; known: {BACKENDS}")
+    if spec.backend == "buffered":
+        return BufferedBackend(model, lam=spec.lam, max_age=spec.max_age,
+                               buffer_cap=spec.buffer_cap, **kw)
+    raise ValueError(f"unknown backend {spec.backend!r}; known: {BACKENDS}")

@@ -28,8 +28,12 @@ The three axes of variation are all pluggable:
   and eval metrics (classification accuracy vs token accuracy /
   perplexity) — supplied to :meth:`RoundRuntime.run` as ``eval_fn``.
 * HOW a round executes is an :class:`repro.fl.backends.ExecutionBackend`
-  (``dense`` / ``chunked`` / ``shard_map`` / ``temporal``), all of which
-  donate the incoming ``params`` buffers to the round step.
+  (``dense`` / ``chunked`` / ``shard_map`` / ``temporal`` / ``buffered``),
+  selected through one :class:`repro.fl.spec.ExecSpec`; all of them donate
+  the incoming ``params`` buffers to the round step. Stateful backends
+  (the buffered semi-async carry buffer) additionally receive a
+  :class:`RoundContext` each round — the simulated clock span plus the
+  straggler-model rates — so in-flight work can cross round boundaries.
 * WHERE the clients come from is a cohort source:
   :class:`StaticCohortSource` replays one pre-stacked population every
   round (``repro.fl.server.run_federated`` and the LM driver
@@ -68,11 +72,13 @@ from repro.core.baselines import Policy, RoundPlan
 from repro.core.replan import Replanner, make_replan
 from repro.fl.backends import make_backend
 from repro.fl.client import sample_client_batches
+from repro.fl.spec import ExecSpec
 
 PyTree = Any
 
 __all__ = ["ModelAPI", "History", "Cohort", "StaticCohortSource",
-           "RoundRuntime", "probe_s_max", "evaluate", "eval_metrics"]
+           "RoundContext", "RoundRuntime", "probe_s_max", "evaluate",
+           "eval_metrics"]
 
 
 @dataclasses.dataclass
@@ -215,31 +221,83 @@ class StaticCohortSource:
         return self._cohort
 
 
+@dataclasses.dataclass
+class RoundContext:
+    """The round's view of the simulated clock and straggler model, for
+    backends that carry work across round boundaries (the buffered
+    semi-async backend).
+
+    ``sim_start``/``sim_end`` are the round's simulated-clock span
+    (``sim_end - sim_start`` = planned deadline); ``lam`` the realized
+    Poisson rates of the straggler draw; ``layer_s`` the mean per-layer
+    backprop time ``S_u / P_u`` (the exponential clock); ``B`` the comm/
+    setup overhead — all over the ACTIVE (unpadded) cohort rows, so a
+    backend can model when a straggler's in-flight work lands.
+    """
+
+    t: int
+    sim_start: float
+    sim_end: float
+    U_act: int
+    lam: np.ndarray        # (U_act,)
+    layer_s: np.ndarray    # (U_act,)
+    B: np.ndarray          # (U_act,)
+
+
+def _round_context(t: int, elapsed: float, plan: RoundPlan, view_cfg,
+                   U_act: int) -> RoundContext:
+    """Recover the straggler-model rates the plan was drawn under. Both
+    policy families price a client's layer clock as Exp(S_u / P_u) with
+    deadline ``plan.elapsed`` (B1-B3), so ``lam = P/S * max(T - B, 0)``
+    reproduces the rate regardless of how S was chosen (B3 scaling or the
+    baselines' fixed batch)."""
+    T_d = float(plan.elapsed)
+    P = np.asarray(view_cfg.P, np.float32)[:U_act]
+    B = np.asarray(view_cfg.B_eff, np.float32)[:U_act]
+    S = np.asarray(plan.batch_sizes, np.float32)
+    S = (np.full(U_act, float(S), np.float32) if S.ndim == 0
+         else S[:U_act])
+    lam = P / np.maximum(S, 1.0) * np.maximum(T_d - B, 0.0)
+    layer_s = S / np.maximum(P, 1e-9)
+    return RoundContext(t=t, sim_start=float(elapsed),
+                        sim_end=float(elapsed) + T_d, U_act=int(U_act),
+                        lam=lam, layer_s=layer_s, B=B)
+
+
 class RoundRuntime:
     """The single federated round loop, parameterized by execution backend.
 
-    ``backend`` is a name (``"dense" | "chunked" | "shard_map" |
-    "temporal"``) or an :class:`repro.fl.backends.ExecutionBackend`
-    instance; ``chunk_size`` / ``mesh`` configure the chunked / shard_map
-    backends. ``donate=False`` disables params-buffer donation in the
-    round steps (callers that re-read params they handed to the backend).
+    HOW rounds execute is an :class:`repro.fl.spec.ExecSpec` (``exec=``):
+    backend selection (``dense | chunked | shard_map | temporal |
+    buffered``), its knobs (``chunk_size`` / ``mesh`` / staleness), the
+    local-update shape (``local_iters`` / ``l2``), params-buffer donation,
+    and the client->server wire format + aggregation implementation
+    (``compression`` / ``agg_impl``). The individual kwargs remain as
+    deprecated aliases — both forms funnel through
+    :meth:`ExecSpec.resolve`, so trajectories are bit-identical either
+    way. ``backend`` may also be an
+    :class:`repro.fl.backends.ExecutionBackend` instance (passed through).
+
     ``tracer`` (:class:`repro.obs.Tracer`) enables structured telemetry —
-    phase spans, counters, and the per-round clock-model ledger — for the
-    runtime AND the backend; the default :data:`repro.obs.NULL_TRACER`
-    records nothing and perturbs nothing. ``compression`` / ``agg_impl``
-    select the client->server wire format and aggregation implementation
-    (:mod:`repro.core.compression`, :func:`repro.fl.backends.make_backend`).
+    phase spans, counters, and the per-round clock-model ledger (including
+    the buffered backend's ``carried_in``/``carried_out`` columns) — for
+    the runtime AND the backend; the default :data:`repro.obs.NULL_TRACER`
+    records nothing and perturbs nothing.
     """
 
     def __init__(self, model: ModelAPI, policy: Policy, *,
-                 backend="dense", chunk_size: int = 16, mesh=None,
-                 local_iters: int = 1, l2: float = 0.0, donate: bool = True,
-                 compression=None, agg_impl: str = "jnp", tracer=None):
+                 exec: Optional[ExecSpec] = None, backend=None,
+                 chunk_size: Optional[int] = None, mesh=None,
+                 local_iters: Optional[int] = None,
+                 l2: Optional[float] = None, donate: Optional[bool] = None,
+                 compression=None, agg_impl: Optional[str] = None,
+                 tracer=None):
         self.model = model
         self.policy = policy
         self.tracer = tracer if tracer is not None else obs.NULL_TRACER
-        self.backend = make_backend(backend, model, chunk_size=chunk_size,
-                                    mesh=mesh, local_iters=local_iters, l2=l2,
+        self.backend = make_backend(backend, model, exec=exec,
+                                    chunk_size=chunk_size, mesh=mesh,
+                                    local_iters=local_iters, l2=l2,
                                     donate=donate, compression=compression,
                                     agg_impl=agg_impl)
         self.backend.set_tracer(self.tracer)
@@ -335,6 +393,8 @@ class RoundRuntime:
         key, k_init = jax.random.split(key)
         params = model.init(k_init)
         U_pad = backend.cohort_pad(source.cohort_size)
+        backend.reset_state()        # stateful backends: fresh carry buffer
+        needs_ctx = bool(getattr(backend, "needs_ctx", False))
 
         tracer = self.tracer
         hist = History(method=method or policy.name)
@@ -383,18 +443,20 @@ class RoundRuntime:
                 wmasks = (None if plan.width_ratios is None else
                           self._width_masks(params, plan.width_ratios,
                                             U_pad))
+            view_cfg = (cohort.view if cohort.view is not None
+                        else policy.cfg)
+            ctx = (_round_context(t, elapsed, plan, view_cfg, U_act)
+                   if needs_ctx else None)
             params = backend.run_round(params, xb, yb, wb, mask, plan.p,
                                        jnp.float32(eta[t]),
                                        bias_correct=bool(plan.bias_correct),
-                                       wmasks=wmasks)
+                                       wmasks=wmasks, ctx=ctx)
             elapsed += plan.elapsed
             if tracer.active:
                 # the clock-model ledger row: planned deadline vs simulated
                 # clock vs measured wall vs the exponential model's view
                 jax.block_until_ready(params)
                 wall_now = obs.now()
-                view_cfg = (cohort.view if cohort.view is not None
-                            else policy.cfg)
                 tracer.count("batch_elements_real",
                              int(np.minimum(np.asarray(plan.batch_sizes,
                                                        np.float64)[:U_act],
@@ -406,7 +468,8 @@ class RoundRuntime:
                     U_pad=U_pad, s_max=s_max, sim_total=elapsed,
                     wall_round_s=wall_now - wall_round0,
                     wall_total_s=wall_now - wall_start,
-                    available=cohort.available))
+                    available=cohort.available,
+                    carry=getattr(backend, "last_carry", None) or None))
             if (t % eval_every == 0) or (t == rounds - 1):
                 with tracer.span("eval"):
                     acc, loss = eval_fn(params)

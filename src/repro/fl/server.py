@@ -6,10 +6,13 @@ pre-stacked client arrays in a :class:`repro.fl.runtime.StaticCohortSource`
 :class:`repro.fl.runtime.RoundRuntime`, which owns policy planning, cohort
 padding, the simulated R1/R2 clock, eval cadence, and the
 :class:`repro.fl.runtime.History` record. HOW each round executes is an
-interchangeable :mod:`repro.fl.backends` backend — ``dense`` (one vmap over
-the cohort, the default here), ``chunked`` (sequential software psum), or
-``shard_map`` (a real client mesh axis with ``jax.lax.psum``) — all
-numerically equivalent up to float summation order.
+:class:`repro.fl.spec.ExecSpec` (``exec=``) selecting an interchangeable
+:mod:`repro.fl.backends` backend — ``dense`` (one vmap over the cohort,
+the default here), ``chunked`` (sequential software psum), ``shard_map``
+(a real client mesh axis with ``jax.lax.psum``), ``temporal``
+(grad-accumulation scan), or ``buffered`` (semi-async delayed gradients)
+— the synchronous ones numerically equivalent up to float summation
+order.
 
 ``ModelAPI`` / ``History`` / ``evaluate`` / ``eval_metrics`` are defined in
 :mod:`repro.fl.runtime` and re-exported here for compatibility.
@@ -23,6 +26,7 @@ from repro.core.types import AnalysisConfig
 from repro.fl.runtime import (History, ModelAPI, RoundRuntime,
                               StaticCohortSource, eval_metrics, evaluate,
                               probe_s_max)
+from repro.fl.spec import ExecSpec
 
 __all__ = ["ModelAPI", "History", "evaluate", "eval_metrics",
            "run_federated"]
@@ -32,15 +36,26 @@ PyTree = object
 
 def run_federated(model: ModelAPI, policy: Policy, cfg: AnalysisConfig,
                   client_x, client_y, n_per_client, test_x, test_y, *, key,
-                  eta: np.ndarray | None = None, local_iters: int = 1,
-                  l2: float = 0.0, s_max: int | None = None,
+                  eta: np.ndarray | None = None,
+                  exec: ExecSpec | None = None,
+                  local_iters: int | None = None,
+                  l2: float | None = None, s_max: int | None = None,
                   eval_every: int = 1, verbose: bool = False,
-                  backend="dense", chunk_size: int = 16,
-                  mesh=None, replan=None, donate: bool = True,
-                  compression=None, agg_impl: str = "jnp",
+                  backend=None, chunk_size: int | None = None,
+                  mesh=None, replan=None, donate: bool | None = None,
+                  compression=None, agg_impl: str | None = None,
                   eval_fn=None, on_round=None,
                   tracer=None) -> tuple[PyTree, History]:
     """Run up to R rounds, stopping when the simulated clock exceeds T_max.
+
+    HOW rounds execute is one :class:`repro.fl.spec.ExecSpec` (``exec=``):
+    backend choice (dense is the default here), ``chunk_size`` / ``mesh``
+    / staleness knobs, ``local_iters`` / ``l2``, params donation, and
+    ``compression`` / ``agg_impl``. The individual kwargs are deprecated
+    aliases kept for compatibility; both forms resolve through
+    :meth:`ExecSpec.resolve` (inapplicable-knob combinations warn, or
+    raise under ``REPRO_EXEC_STRICT=1``) and produce bit-identical
+    trajectories.
 
     ``replan`` (None | trigger name | ``repro.core.replan.ReplanConfig``)
     enables online remaining-horizon re-solves of Problem 2 (ADEL policy
@@ -48,19 +63,20 @@ def run_federated(model: ModelAPI, policy: Policy, cfg: AnalysisConfig,
     trigger that fires here — it re-solves the tail against the same
     constants with the exact un-spent budget.
 
-    ``eval_fn`` / ``on_round`` / ``donate`` are forwarded to
+    ``eval_fn`` / ``on_round`` are forwarded to
     :meth:`repro.fl.runtime.RoundRuntime.run` — task-specific eval metrics
-    (:mod:`repro.fl.tasks`), a per-round observer (checkpointing), and
-    params-buffer donation in the backend round steps. ``tracer``
-    (:class:`repro.obs.Tracer`) enables structured telemetry — phase
-    spans, counters, and the clock-model ledger in ``History.telemetry``.
+    (:mod:`repro.fl.tasks`) and a per-round observer (checkpointing).
+    ``tracer`` (:class:`repro.obs.Tracer`) enables structured telemetry —
+    phase spans, counters, and the clock-model ledger in
+    ``History.telemetry`` (including the buffered backend's
+    ``carried_in`` / ``carried_out`` columns).
     """
     eta = cfg.eta if eta is None else np.asarray(eta, np.float32)
     if s_max is None:
         # largest batch any client can be assigned under the policy
         s_max = max(min(probe_s_max(policy, cfg.R),
                         int(client_y.shape[1])), 2)
-    runtime = RoundRuntime(model, policy, backend=backend,
+    runtime = RoundRuntime(model, policy, exec=exec, backend=backend,
                            chunk_size=chunk_size, mesh=mesh,
                            local_iters=local_iters, l2=l2, donate=donate,
                            compression=compression, agg_impl=agg_impl,

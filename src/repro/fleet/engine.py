@@ -30,11 +30,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.baselines import Policy, make_policy
-from repro.core.compression import make_compression
 from repro.core.scheduler import solve
 from repro.core.types import AnalysisConfig
 from repro.fl.partition import dirichlet_partition, iid_partition, stack_clients
 from repro.fl.runtime import Cohort, ModelAPI, RoundRuntime, probe_s_max
+from repro.fl.spec import ExecSpec
 from repro.fleet.availability import AvailabilityModel
 from repro.fleet.cohort import cohort_view, sample_cohort
 from repro.fleet.profiles import Fleet
@@ -167,23 +167,34 @@ class FleetCohortSource:
 def run_fleet(model: ModelAPI, fleet: Fleet, availability: AvailabilityModel,
               data: FleetData, *, method: str = "adel", rounds: int = 20,
               cohort_size: int = 32, cohort_strategy: str = "uniform",
-              backend="chunked", chunk_size: int = 16, mesh=None,
+              exec: Optional[ExecSpec] = None,
+              backend=None, chunk_size: Optional[int] = None, mesh=None,
               T_max: Optional[float] = None,
               eta0: float = 2.0, eta_decay: float = 1.0,
               solver: str = "adam", solver_steps: int = 600,
-              local_iters: int = 1, l2: float = 0.0,
+              local_iters: Optional[int] = None, l2: Optional[float] = None,
               s_max: Optional[int] = None, eval_every: int = 1,
               seed: int = 0, verbose: bool = False,
-              replan=None, donate: bool = True,
-              compression=None, agg_impl: str = "jnp",
+              replan=None, donate: Optional[bool] = None,
+              compression=None, agg_impl: Optional[str] = None,
               eval_metrics=None, tracer=None) -> tuple:
     """Run up to ``rounds`` federated rounds against a simulated fleet.
 
     Returns ``(params, History)``; the History carries the same fields as
     :func:`repro.fl.server.run_federated` plus per-round reachable-device
-    counts, so ``benchmarks/report.py`` consumes it unchanged. ``backend``
-    selects the execution backend
-    (``"chunked" | "dense" | "shard_map" | "temporal"``).
+    counts, so ``benchmarks/report.py`` consumes it unchanged.
+
+    HOW rounds execute is one :class:`repro.fl.spec.ExecSpec` (``exec=``),
+    resolved against this front-end's base spec (``backend="chunked"``);
+    the individual ``backend`` / ``chunk_size`` / ``mesh`` / ``donate`` /
+    ``compression`` / ``agg_impl`` kwargs remain as deprecated aliases —
+    both forms funnel through :meth:`ExecSpec.resolve` and give
+    bit-identical trajectories. The chunked backend's chunk is clamped to
+    the cohort size; the buffered backend's staleness knobs (``lam`` /
+    ``max_age`` / ``buffer_cap``) ride on the spec. The spec's
+    ``compression`` is also priced into the Problem-2 planning config
+    (``comm_scale``) before solving.
+
     ``replan`` (None | trigger name | ``repro.core.replan.ReplanConfig``)
     enables availability-aware online re-solving of the remaining-horizon
     Problem 2 (``method="adel"`` only): the trigger watches the reachable
@@ -207,10 +218,19 @@ def run_fleet(model: ModelAPI, fleet: Fleet, availability: AvailabilityModel,
         # same calibration as the seed benchmarks: avg depth ~50% of layers
         T_max = rounds * model.L * 0.5
 
+    spec = ExecSpec.resolve(exec, base=ExecSpec(backend="chunked"),
+                            backend=backend, chunk_size=chunk_size,
+                            mesh=mesh, local_iters=local_iters, l2=l2,
+                            donate=donate, compression=compression,
+                            agg_impl=agg_impl)
+    if spec.backend == "chunked":
+        spec = dataclasses.replace(
+            spec, chunk_size=min(spec.chunk_size, cohort_size))
+
     ref = reference_config(fleet, U=cohort_size, L=model.L, R=rounds,
                            T_max=T_max, eta0=eta0, eta_decay=eta_decay,
                            seed=seed)
-    comp = make_compression(compression)
+    comp = spec.compression
     if comp.mode != "none":
         # price the compressed wire into the Problem-2 planning config
         # BEFORE solving: every B_u shrinks by the wire ratio (B_eff), so
@@ -252,11 +272,7 @@ def run_fleet(model: ModelAPI, fleet: Fleet, availability: AvailabilityModel,
                     4 * data.n_pad)
     s_max = max(s_max, 2)
 
-    runtime = RoundRuntime(model, policy, backend=backend,
-                           chunk_size=min(chunk_size, cohort_size),
-                           mesh=mesh, local_iters=local_iters, l2=l2,
-                           donate=donate, compression=comp,
-                           agg_impl=agg_impl, tracer=tracer)
+    runtime = RoundRuntime(model, policy, exec=spec, tracer=tracer)
     source = FleetCohortSource(fleet, availability, data, ref,
                                cohort_size=cohort_size,
                                strategy=cohort_strategy, seed=seed)

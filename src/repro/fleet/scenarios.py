@@ -19,8 +19,8 @@ import os
 from typing import Optional
 
 from repro import obs
-from repro.configs.base import CompressionConfig, FleetConfig, ReplanConfig
-from repro.core.compression import MODES as COMPRESSION_MODES
+from repro.configs.base import (CompressionConfig, ExecSpec, FleetConfig,
+                                ReplanConfig)
 from repro.core.compression import make_compression
 from repro.core.replan import TRIGGERS
 from repro.data.synthetic import make_image_dataset
@@ -53,13 +53,14 @@ class Scenario:
 def _scn(name, preset, size, availability, akw=(), method="adel",
          strategy="uniform", alpha=0.5, note="", cohort=32,
          replan=ReplanConfig(), compression=CompressionConfig(),
-         **kw) -> Scenario:
+         exec=None, **kw) -> Scenario:
     return Scenario(
         name=name, method=method, alpha=alpha, note=note,
         fleet=FleetConfig(preset=preset, size=size, availability=availability,
                           availability_kwargs=tuple(akw),
                           cohort_strategy=strategy, cohort_size=cohort,
-                          replan=replan, compression=compression),
+                          replan=replan, compression=compression,
+                          exec=exec),
         **kw)
 
 
@@ -110,6 +111,21 @@ SCENARIOS = {s.name: s for s in [
               "int8 client->server payloads: the reduction consumes the "
               "quantized wire format and the solver prices B_u at 1/4 — "
               "the matched-accuracy compression comparison"),
+    _scn("longtail-mobile-buffered", "longtail-mobile", 600, "diurnal",
+         akw=(("mean", 0.6), ("amplitude", 0.35), ("period", 12.0)),
+         exec=ExecSpec(backend="buffered", lam=0.5),
+         note="same population and seeds as longtail-mobile-diurnal on the "
+              "buffered semi-async backend: layers a straggler misses at "
+              "the deadline are carried server-side and folded into later "
+              "rounds with staleness weight 0.5**tau"),
+    _scn("bimodal-edge-buffered-salf", "bimodal-edge", 500, "markov",
+         akw=(("p_off_to_on", 0.35), ("p_on_to_off", 0.12)),
+         method="salf", strategy="stratified",
+         exec=ExecSpec(backend="buffered", lam=0.6, max_age=3),
+         note="fixed-deadline SALF + carry buffer on the sticky-outage "
+              "edge fleet: the deadline never adapts, so the buffered "
+              "delayed gradients are the only channel recovering the "
+              "stragglers' unfinished layers"),
     _scn("lm-uniform-bernoulli", "uniform", 60, "bernoulli",
          akw=(("rate", 0.7),), model="lm", cohort=8, rounds=8, eta0=0.5,
          note="reduced LM arch on synthetic token streams against a churny "
@@ -127,6 +143,7 @@ def get_scenario(name: str) -> Scenario:
 def run_scenario(scn: Scenario, *, rounds: Optional[int] = None,
                  fleet_size: Optional[int] = None,
                  cohort_size: Optional[int] = None,
+                 exec: Optional[ExecSpec] = None,
                  backend: Optional[str] = None,
                  replan=None, replan_every: Optional[int] = None,
                  compression=None, topk_frac: Optional[float] = None,
@@ -135,21 +152,24 @@ def run_scenario(scn: Scenario, *, rounds: Optional[int] = None,
                  verbose: bool = True, events: Optional[str] = None,
                  tracer=None) -> dict:
     """Run one scenario; returns the History dict (+ fleet/availability
-    descriptions) consumable by ``benchmarks/report.py``. ``backend``
-    overrides the FleetConfig's execution backend (dense/chunked/shard_map);
-    ``replan`` (trigger name or ``ReplanConfig``) and ``replan_every``
-    override the FleetConfig's online re-planning block. ``events`` writes
-    the structured telemetry stream (phase spans, clock-model ledger) to a
-    JSONL file for ``python -m repro.obs.timeline``; ``tracer`` passes an
-    already-built :class:`repro.obs.Tracer` instead (the caller keeps
-    ownership — it is not closed here)."""
+    descriptions) consumable by ``benchmarks/report.py``.
+
+    ``exec`` (:class:`repro.fl.spec.ExecSpec`) overrides the scenario's
+    execution spec wholesale; the ``backend`` / ``compression`` /
+    ``topk_frac`` kwargs remain as deprecated aliases layered on the
+    FleetConfig's resolved spec (:meth:`FleetConfig.exec_spec`) through
+    the same :meth:`ExecSpec.resolve` path. ``replan`` (trigger name or
+    ``ReplanConfig``) and ``replan_every`` override the FleetConfig's
+    online re-planning block. ``events`` writes the structured telemetry
+    stream (phase spans, clock-model ledger, the buffered backend's carry
+    columns) to a JSONL file for ``python -m repro.obs.timeline``;
+    ``tracer`` passes an already-built :class:`repro.obs.Tracer` instead
+    (the caller keeps ownership — it is not closed here)."""
     fc = scn.fleet
     if fleet_size is not None:
         fc = dataclasses.replace(fc, size=fleet_size)
     if cohort_size is not None:
         fc = dataclasses.replace(fc, cohort_size=cohort_size)
-    if backend is not None:
-        fc = dataclasses.replace(fc, backend=backend)
     if replan is not None:
         rp = (replan if isinstance(replan, ReplanConfig)
               else dataclasses.replace(fc.replan, trigger=replan))
@@ -157,12 +177,14 @@ def run_scenario(scn: Scenario, *, rounds: Optional[int] = None,
     if replan_every is not None:
         fc = dataclasses.replace(
             fc, replan=dataclasses.replace(fc.replan, every=replan_every))
-    if compression is not None:
-        fc = dataclasses.replace(fc, compression=make_compression(compression))
+    spec = ExecSpec.resolve(
+        exec, base=fc.exec_spec(), backend=backend,
+        compression=(make_compression(compression)
+                     if compression is not None else None))
     if topk_frac is not None:
-        fc = dataclasses.replace(
-            fc, compression=dataclasses.replace(fc.compression,
-                                                top_k=float(topk_frac)))
+        spec = dataclasses.replace(
+            spec, compression=dataclasses.replace(spec.compression,
+                                                  top_k=float(topk_frac)))
     rounds = scn.rounds if rounds is None else rounds
 
     fleet = fleet_from_config(fc)
@@ -196,10 +218,9 @@ def run_scenario(scn: Scenario, *, rounds: Optional[int] = None,
         _, hist = run_fleet(
             model, fleet, avail, data, method=scn.method, rounds=rounds,
             cohort_size=fc.cohort_size, cohort_strategy=fc.cohort_strategy,
-            backend=fc.backend, chunk_size=fc.chunk_size, eta0=scn.eta0,
+            exec=spec, eta0=scn.eta0,
             solver_steps=solver_steps, eval_every=eval_every, seed=seed,
-            verbose=verbose, replan=fc.replan,
-            compression=fc.compression, eval_metrics=eval_m,
+            verbose=verbose, replan=fc.replan, eval_metrics=eval_m,
             tracer=tracer)
     finally:
         if own_tracer:
@@ -212,9 +233,10 @@ def run_scenario(scn: Scenario, *, rounds: Optional[int] = None,
     out["fleet"] = fleet.describe()
     out["availability"] = avail.describe()
     out["cohort"] = {"size": fc.cohort_size, "strategy": fc.cohort_strategy}
-    out["backend"] = fc.backend
+    out["backend"] = spec.backend
     out["replan"] = dataclasses.asdict(fc.replan)
-    out["compression"] = dataclasses.asdict(fc.compression)
+    out["compression"] = dataclasses.asdict(spec.compression)
+    out["exec"] = spec.as_dict()
     return out
 
 
@@ -241,22 +263,16 @@ def main(argv=None) -> None:
     ap.add_argument("--rounds", type=int, default=None)
     ap.add_argument("--fleet-size", type=int, default=None)
     ap.add_argument("--cohort", type=int, default=None)
-    ap.add_argument("--backend", default=None,
-                    choices=["dense", "chunked", "shard_map", "temporal"],
-                    help="execution backend override (repro.fl.backends)")
     ap.add_argument("--replan", default=None, choices=list(TRIGGERS),
                     help="online re-planning trigger override "
                          "(repro.core.replan; scenarios carry their own "
                          "default in FleetConfig.replan)")
     ap.add_argument("--replan-every", type=int, default=None,
                     help="every-k re-plan period override")
-    ap.add_argument("--compression", default=None,
-                    choices=list(COMPRESSION_MODES),
-                    help="client->server wire compression override "
-                         "(repro.core.compression): int8 symmetric "
-                         "quantization or topk8 sparsification")
-    ap.add_argument("--topk-frac", type=float, default=None,
-                    help="kept fraction per (client, layer) in topk8 mode")
+    # the shared execution-spec flag block (--backend / --compression /
+    # --topk-frac / --agg-impl / --lam / ...) — one surface with
+    # repro.launch.train, derived from repro.fl.spec.ExecSpec
+    ExecSpec.add_cli_args(ap)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--solver-steps", type=int, default=600)
     ap.add_argument("--events", default=None, metavar="PATH",
@@ -271,13 +287,14 @@ def main(argv=None) -> None:
 
     if args.list or not args.run:
         print(f"{'scenario':38s} {'fleet':28s} {'avail':10s} "
-              f"{'cohort':22s} {'method':9s} replan")
+              f"{'cohort':22s} {'method':9s} {'backend':9s} replan")
         for s in SCENARIOS.values():
             fc = s.fleet
             print(f"{s.name:38s} {fc.preset + ' x' + str(fc.size):28s} "
                   f"{fc.availability:10s} "
                   f"{str(fc.cohort_size) + ' ' + fc.cohort_strategy:22s} "
-                  f"{s.method:9s} {fc.replan.trigger}")
+                  f"{s.method:9s} {fc.exec_spec().backend:9s} "
+                  f"{fc.replan.trigger}")
             if s.note:
                 print(f"    {s.note}")
         return
@@ -286,11 +303,10 @@ def main(argv=None) -> None:
         scn = get_scenario(args.run)
     except KeyError as e:
         ap.error(str(e.args[0]))
+    spec = ExecSpec.from_cli(args, base=scn.fleet.exec_spec())
     res = run_scenario(scn, rounds=args.rounds, fleet_size=args.fleet_size,
-                       cohort_size=args.cohort, backend=args.backend,
+                       cohort_size=args.cohort, exec=spec,
                        replan=args.replan, replan_every=args.replan_every,
-                       compression=args.compression,
-                       topk_frac=args.topk_frac,
                        seed=args.seed, solver_steps=args.solver_steps,
                        verbose=not args.quiet, events=args.events)
     acc = res["accuracy"][-1] if res["accuracy"] else float("nan")

@@ -8,9 +8,12 @@ image and fleet workloads — so the paper's full pipeline (Problem-2
 schedule -> per-round straggler draws (B1-B3) -> deadline-truncated
 layer-wise aggregation (Eq. 5) -> SGD) plus online re-planning, every
 execution backend (``dense`` / ``chunked`` / ``shard_map`` / ``temporal``
-— the grad-accumulation client layout required for the big archs), and
-HeteroFL width scaling all work on LM configs with no LM-specific loop
-code. Checkpointing rides the runtime's ``on_round`` hook.
+— the grad-accumulation client layout required for the big archs — /
+``buffered``, the semi-async delayed-gradient backend), and HeteroFL
+width scaling all work on LM configs with no LM-specific loop code. The
+execution surface is one :class:`repro.fl.spec.ExecSpec` (``exec=`` /
+the shared ``--backend/--compression/--lam/...`` CLI group).
+Checkpointing rides the runtime's ``on_round`` hook.
 
 On the CPU container use --reduced (default); the full configs are
 exercised via dryrun.py.
@@ -32,13 +35,11 @@ from repro import obs
 from repro.checkpoint import save_checkpoint
 from repro.configs import get_config
 from repro.core.baselines import make_policy
-from repro.core.compression import MODES as COMPRESSION_MODES
-from repro.core.compression import make_compression
 from repro.core.replan import TRIGGERS, ReplanConfig
 from repro.core.scheduler import solve
 from repro.core.types import AnalysisConfig
-from repro.fl.backends import BACKENDS
 from repro.fl.runtime import History, RoundRuntime, probe_s_max
+from repro.fl.spec import ExecSpec
 from repro.fl.tasks import lm_task
 
 
@@ -47,9 +48,11 @@ def run_training(arch: str, *, method: str = "adel", rounds: int = 40,
                  n_seq: int = 96, eta0: float = 0.5, seed: int = 0,
                  reduced: bool = True, solver: str = "adam",
                  solver_steps: int | None = None,
-                 backend: str = "dense", chunk_size: int = 16, mesh=None,
-                 replan=None, local_iters: int = 1, donate: bool = True,
-                 compression=None, agg_impl: str = "jnp",
+                 exec: ExecSpec | None = None,
+                 backend: str | None = None, chunk_size: int | None = None,
+                 mesh=None, replan=None, local_iters: int | None = None,
+                 donate: bool | None = None,
+                 compression=None, agg_impl: str | None = None,
                  s_max_cap: int = 32, eval_every: int | None = None,
                  ckpt: str | None = None, ckpt_every: int | None = None,
                  verbose: bool = True, tracer=None) -> tuple[object, History]:
@@ -59,23 +62,35 @@ def run_training(arch: str, *, method: str = "adel", rounds: int = 40,
     (perplexity = exp; see :func:`repro.fl.tasks.lm_task` for why the
     synthetic stream has no meaningful held-out split).
 
-    ``backend`` selects the execution backend (``temporal`` is the
-    big-arch grad-accumulation layout), ``replan`` the online re-planning
-    trigger (None | "never" | "every-k" | "drift" |
-    :class:`repro.core.replan.ReplanConfig`), ``ckpt`` a checkpoint path
-    saved every ``ckpt_every`` rounds (default R/4) through the runtime's
-    ``on_round`` hook, ``tracer`` a :class:`repro.obs.Tracer` for
-    structured telemetry (phase spans + clock-model ledger in
-    ``History.telemetry``).
+    HOW rounds execute is one :class:`repro.fl.spec.ExecSpec` (``exec=``):
+    backend choice (``dense`` default; ``temporal`` is the big-arch
+    grad-accumulation layout, ``buffered`` the semi-async delayed-gradient
+    backend), ``chunk_size`` / ``mesh``, ``local_iters``, donation,
+    ``compression`` / ``agg_impl``, and the staleness knobs. The
+    individual kwargs remain as deprecated aliases; both forms funnel
+    through :meth:`ExecSpec.resolve` (bit-identical either way). The
+    spec's ``compression`` is priced into the Problem-2 plan before
+    solving.
+
+    ``replan`` selects the online re-planning trigger (None | "never" |
+    "every-k" | "drift" | :class:`repro.core.replan.ReplanConfig`),
+    ``ckpt`` a checkpoint path saved every ``ckpt_every`` rounds (default
+    R/4) through the runtime's ``on_round`` hook, ``tracer`` a
+    :class:`repro.obs.Tracer` for structured telemetry (phase spans +
+    clock-model ledger in ``History.telemetry``).
     """
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
 
+    spec = ExecSpec.resolve(exec, backend=backend, chunk_size=chunk_size,
+                            mesh=mesh, local_iters=local_iters,
+                            donate=donate, compression=compression,
+                            agg_impl=agg_impl)
     task = lm_task(cfg, U=U, seq=seq, n_seq=n_seq, seed=seed)
     acfg = AnalysisConfig.default(U=U, L=task.model.L, R=rounds, T_max=tmax,
                                   eta0=eta0, seed=seed)
-    comp = make_compression(compression)
+    comp = spec.compression
     if comp.mode != "none":
         # price the compressed wire into the Problem-2 plan: B_u shrinks by
         # the wire ratio, so the solved schedule re-spends the freed
@@ -100,11 +115,7 @@ def run_training(arch: str, *, method: str = "adel", rounds: int = 40,
     s_max = max(min(probe_s_max(policy, rounds), s_max_cap,
                     4 * task.n_per_client), 2)
 
-    runtime = RoundRuntime(task.model, policy, backend=backend,
-                           chunk_size=chunk_size, mesh=mesh,
-                           local_iters=local_iters, donate=donate,
-                           compression=comp, agg_impl=agg_impl,
-                           tracer=tracer)
+    runtime = RoundRuntime(task.model, policy, exec=spec, tracer=tracer)
 
     on_round = None
     if ckpt:
@@ -114,7 +125,7 @@ def run_training(arch: str, *, method: str = "adel", rounds: int = 40,
             if (t + 1) % every == 0 or t == rounds - 1:
                 save_checkpoint(ckpt, params, step=t + 1,
                                 meta={"arch": cfg.name, "method": method,
-                                      "backend": backend})
+                                      "backend": spec.backend})
 
     params, hist = runtime.run(
         task.source(), rounds=rounds, T_max=tmax, eta=acfg.eta, s_max=s_max,
@@ -126,7 +137,7 @@ def run_training(arch: str, *, method: str = "adel", rounds: int = 40,
         # params the periodic hook may have missed
         save_checkpoint(ckpt, params, step=hist.rounds[-1] if hist.rounds
                         else 0, meta={"arch": cfg.name, "method": method,
-                                      "backend": backend})
+                                      "backend": spec.backend})
     return params, hist
 
 
@@ -174,29 +185,14 @@ def main(argv=None):
                     help="reduced arch for the CPU container (default)")
     ap.add_argument("--full", dest="reduced", action="store_false",
                     help="use the full (non-reduced) config — TPU only")
-    ap.add_argument("--backend", default="dense", choices=list(BACKENDS),
-                    help="execution backend (repro.fl.backends); temporal "
-                         "is the big-arch grad-accumulation layout")
-    ap.add_argument("--chunk-size", type=int, default=16)
     ap.add_argument("--replan", default=None, choices=list(TRIGGERS),
                     help="online re-planning trigger (repro.core.replan)")
     ap.add_argument("--replan-every", type=int, default=None,
                     help="every-k re-plan period")
-    ap.add_argument("--no-donate", dest="donate", action="store_false",
-                    help="disable params-buffer donation in the round step")
-    ap.add_argument("--compression", default=None,
-                    choices=list(COMPRESSION_MODES),
-                    help="client->server wire compression "
-                         "(repro.core.compression): int8 symmetric "
-                         "quantization or topk8 sparsification; the "
-                         "backend's reduction consumes the compressed "
-                         "payload and the solver prices B_u by the ratio")
-    ap.add_argument("--topk-frac", type=float, default=None,
-                    help="kept fraction per (client, layer) in topk8 mode")
-    ap.add_argument("--agg-impl", default="jnp", choices=["jnp", "pallas"],
-                    help="aggregation implementation: pallas routes the "
-                         "Eq. 5 fold through the fused kernels "
-                         "(adel_agg / adel_agg_q8; interpret mode on CPU)")
+    # the shared execution-spec flag block (--backend / --chunk-size /
+    # --no-donate / --compression / --agg-impl / --lam / ...) — one
+    # surface with repro.fleet.scenarios, derived from repro.fl.spec
+    ExecSpec.add_cli_args(ap)
     ap.add_argument("--solver", default="adam",
                     choices=["adam", "trust-constr"])
     ap.add_argument("--ckpt", default=None)
@@ -214,9 +210,7 @@ def main(argv=None):
     replan = args.replan
     if replan is not None and args.replan_every is not None:
         replan = ReplanConfig(trigger=replan, every=args.replan_every)
-    compression = args.compression
-    if compression is not None and args.topk_frac is not None:
-        compression = (compression, args.topk_frac)
+    spec = ExecSpec.from_cli(args)
     tracer = obs.make_tracer(args.events)
     t0 = obs.now()
     with _profile(args.profile_dir):
@@ -225,11 +219,7 @@ def main(argv=None):
                                tmax=args.tmax, U=args.clients, eta0=args.eta0,
                                seq=args.seq, seed=args.seed,
                                reduced=args.reduced, solver=args.solver,
-                               backend=args.backend,
-                               chunk_size=args.chunk_size,
-                               replan=replan, donate=args.donate,
-                               compression=compression,
-                               agg_impl=args.agg_impl,
+                               exec=spec, replan=replan,
                                ckpt=args.ckpt, tracer=tracer)
     tracer.close()
     loss = hist.train_loss[-1]
@@ -242,7 +232,8 @@ def main(argv=None):
     if args.out:
         with open(args.out, "w") as f:
             json.dump({**hist.as_dict(), "arch": args.arch,
-                       "backend": args.backend}, f, indent=1)
+                       "backend": spec.backend,
+                       "exec": spec.as_dict()}, f, indent=1)
     return 0
 
 

@@ -59,7 +59,7 @@ def expected_depth(lam: np.ndarray, L: int) -> np.ndarray:
 
 def round_record(*, t: int, plan, cfg, L: int, U_act: int, U_pad: int,
                  s_max: int, sim_total: float, wall_round_s: float,
-                 wall_total_s: float, available=None) -> dict:
+                 wall_total_s: float, available=None, carry=None) -> dict:
     """One clock-model ledger row for executed round ``t`` (0-based).
 
     ``plan`` is the round's :class:`repro.core.baselines.RoundPlan`;
@@ -69,6 +69,15 @@ def round_record(*, t: int, plan, cfg, L: int, U_act: int, U_pad: int,
     predictions computable. When the view's population does not line up
     with the executed cohort (defensive: custom sources), the prediction
     fields are omitted rather than fabricated.
+
+    ``carry`` is the buffered (semi-async) backend's per-round carry stats
+    (``ExecutionBackend.last_carry``): ``carried_in`` — buffered client
+    contributions folded into THIS round's update, ``carried_out`` — still
+    pending in the buffer after the round, ``carried_dropped`` — expired
+    (``> max_age``) or ring-evicted, and ``stale`` — the staleness
+    histogram ``{tau: count}`` of this round's folds. The columns land
+    next to ``depth_real`` so the clock ledger shows where missed-deadline
+    work went.
     """
     mask = np.asarray(plan.mask, np.float32)[:U_act]          # (U_act, L)
     S = np.asarray(plan.batch_sizes, np.float64)[:U_act]      # (U_act,)
@@ -94,6 +103,14 @@ def round_record(*, t: int, plan, cfg, L: int, U_act: int, U_pad: int,
     }
     if available is not None:
         rec["available"] = int(available)
+    if carry is not None:
+        rec["carried_in"] = int(carry.get("carried_in", 0))
+        rec["carried_out"] = int(carry.get("carried_out", 0))
+        rec["carried_dropped"] = int(carry.get("carried_dropped", 0))
+        # JSON object keys are strings; normalize so round-tripped rows
+        # and in-process rows aggregate identically
+        rec["stale"] = {str(k): int(v)
+                        for k, v in (carry.get("stale") or {}).items()}
     p = np.asarray(plan.p, np.float64)
     if p.size:
         rec["p1_pred"] = float(p[0])
@@ -171,4 +188,17 @@ def drift_summary(rows) -> dict:
         out["deadline_vs_full_wait"] = round(
             float(sum(r["T_deadline"] for r in rows) / max(sum(preds),
                                                            1e-9)), 4)
+    carried = [r for r in rows if "carried_in" in r]
+    if carried:
+        out["carried_in_total"] = int(sum(r["carried_in"] for r in carried))
+        out["carried_dropped_total"] = int(
+            sum(r.get("carried_dropped", 0) for r in carried))
+        out["carried_peak"] = int(max(r["carried_out"] for r in carried))
+        stale_n = stale_sum = 0
+        for r in carried:
+            for tau, n in (r.get("stale") or {}).items():
+                stale_n += int(n)
+                stale_sum += int(n) * float(tau)
+        if stale_n:
+            out["stale_mean"] = round(stale_sum / stale_n, 4)
     return out

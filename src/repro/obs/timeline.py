@@ -129,9 +129,12 @@ def render(records: list[dict], *, title: str = "") -> str:
         out.append(_table(["round", "T_t", "sim", "wall_s", "pred_full",
                            "depth_pred", "depth_real", "p1_pred"], rows))
 
+        # buffered (semi-async) runs add the carry-buffer columns: what
+        # missed-deadline work was folded in / still pending / dropped
+        carried = any("carried_in" in r for r in ledger)
         rows = []
         for r in ledger:
-            rows.append([
+            row = [
                 str(r.get("round", r.get("t", 0) + 1)),
                 str(r.get("available", "—")),
                 str(r["cohort"]),
@@ -140,10 +143,24 @@ def render(records: list[dict], *, title: str = "") -> str:
                 str(r["zero_contrib"]),
                 str(r["worst_miss"]),
                 f"{r['batch_real']}/{r['batch_padded']}",
-            ])
+            ]
+            if carried:
+                stale = r.get("stale") or {}
+                row += [
+                    str(r.get("carried_in", "—")),
+                    str(r.get("carried_out", "—")),
+                    str(r.get("carried_dropped", "—")),
+                    ",".join(f"{tau}:{n}" for tau, n in
+                             sorted(stale.items(),
+                                    key=lambda kv: int(kv[0]))) or "—",
+                ]
+            rows.append(row)
+        headers = ["round", "avail", "cohort", "full", "missed", "zero",
+                   "worst_miss", "batch real/pad"]
+        if carried:
+            headers += ["carry_in", "carry_out", "dropped", "stale tau:n"]
         out.append("\n-- stragglers / deadline misses --")
-        out.append(_table(["round", "avail", "cohort", "full", "missed",
-                           "zero", "worst_miss", "batch real/pad"], rows))
+        out.append(_table(headers, rows))
 
         drift = drift_summary(ledger)
         if drift:

@@ -1,10 +1,13 @@
-"""Execution-backend equivalence: dense / chunked / shard_map / temporal
-produce the same History trajectories (up to float summation order) for
-ADEL and SALF, and HeteroFL width masks flow through every backend.
+"""Execution-backend equivalence: dense / chunked / shard_map / temporal /
+buffered(lam=0) produce the same History trajectories (up to float
+summation order) for ADEL and SALF, HeteroFL width masks flow through
+every backend, and the ``ExecSpec`` surface resolves identically to the
+legacy kwargs.
 
 The multi-device shard_map case needs ``XLA_FLAGS=
 --xla_force_host_platform_device_count=N`` set BEFORE jax initializes, so it
 runs in a subprocess (>= 4 host devices, per the acceptance criteria)."""
+import argparse
 import os
 import subprocess
 import sys
@@ -19,9 +22,9 @@ from repro.core.baselines import make_policy
 from repro.core.scheduler import solve
 from repro.core.types import AnalysisConfig
 from repro.data.synthetic import make_image_dataset
-from repro.fl.backends import (BACKENDS, ChunkedBackend, DenseBackend,
-                               ShardMapBackend, TemporalBackend,
-                               make_backend)
+from repro.fl.backends import (BACKENDS, BufferedBackend, ChunkedBackend,
+                               DenseBackend, ExecSpec, ShardMapBackend,
+                               TemporalBackend, make_backend)
 from repro.fl.partition import dirichlet_partition, stack_clients
 from repro.fl.server import run_federated
 from repro.models.paper_models import make_mlp
@@ -47,10 +50,14 @@ def setup():
     return model, cfg, data, schedule
 
 
-def _run(setup, method, backend, chunk_size=3, **kw):
+def _run(setup, method, backend, chunk_size=None, **kw):
     model, cfg, data, schedule = setup
     policy = make_policy(method, cfg,
                          schedule=schedule if method == "adel" else None)
+    # chunk_size only applies to the chunked backend; passing it elsewhere
+    # now (correctly) warns through ExecSpec.resolve
+    if chunk_size is None and backend == "chunked":
+        chunk_size = 3
     _, hist = run_federated(model, policy, cfg, *data,
                             key=jax.random.PRNGKey(0), backend=backend,
                             chunk_size=chunk_size, **kw)
@@ -209,8 +216,9 @@ def test_compressed_byte_counters(setup):
         sink = obs.MemorySink()
         policy = make_policy("adel", cfg, schedule=schedule)
         run_federated(model, policy, cfg, *data, key=jax.random.PRNGKey(0),
-                      backend=backend, chunk_size=3, compression="int8",
-                      tracer=obs.Tracer(sink))
+                      backend=backend,
+                      chunk_size=3 if backend == "chunked" else None,
+                      compression="int8", tracer=obs.Tracer(sink))
         ctr = {}
         for r in sink.records:
             if r.get("kind") == "count" and "bytes" in r.get("name", ""):
@@ -223,6 +231,174 @@ def test_compressed_byte_counters(setup):
     # dense / shard_map (1 host device) / temporal count the same padded
     # cohort; chunked pads 8 clients to 3 chunks of 3
     assert totals["dense"] == totals["temporal"]
+
+
+# ---------------------------------------------------------------------------
+# ExecSpec: one execution surface for every entry point
+# ---------------------------------------------------------------------------
+
+
+def _assert_bit_identical(a, b):
+    assert a.rounds == b.rounds
+    np.testing.assert_array_equal(np.asarray(a.deadlines),
+                                  np.asarray(b.deadlines))
+    np.testing.assert_array_equal(np.asarray(a.times), np.asarray(b.times))
+    np.testing.assert_array_equal(np.asarray(a.accuracy),
+                                  np.asarray(b.accuracy))
+    np.testing.assert_array_equal(np.asarray(a.train_loss),
+                                  np.asarray(b.train_loss))
+
+
+def test_execspec_roundtrip_and_resolve():
+    spec = ExecSpec(backend="chunked", chunk_size=4, compression="int8",
+                    agg_impl="pallas")
+    # the legacy compression spec forms normalize on construction
+    assert spec.compression.mode == "int8"
+    d = spec.as_dict()
+    assert d["backend"] == "chunked" and d["compression"]["mode"] == "int8"
+    # legacy kwargs overlay through THE parsing path; None means "keep"
+    r = ExecSpec.resolve(spec, agg_impl="jnp")
+    assert r.agg_impl == "jnp" and r.chunk_size == 4
+    assert ExecSpec.resolve(spec) == spec
+    with pytest.raises(TypeError, match="unknown execution kwargs"):
+        ExecSpec.resolve(spec, not_a_knob=1)
+    with pytest.raises(ValueError, match="unknown backend"):
+        ExecSpec(backend="nope")
+    with pytest.raises(ValueError):
+        ExecSpec(lam=1.5)
+
+
+def test_execspec_warns_on_ignored_knobs():
+    with pytest.warns(UserWarning, match="chunk_size"):
+        ExecSpec.resolve(backend="dense", chunk_size=4)
+    with pytest.warns(UserWarning, match="staleness"):
+        ExecSpec.resolve(backend="dense", lam=0.5)
+    with pytest.raises(ValueError, match="mesh"):
+        ExecSpec.resolve(backend="dense", mesh=object(), strict=True)
+
+
+def test_execspec_strict_env(monkeypatch):
+    monkeypatch.setenv("REPRO_EXEC_STRICT", "1")
+    with pytest.raises(ValueError, match="chunk_size"):
+        ExecSpec.resolve(backend="temporal", chunk_size=4)
+
+
+def test_execspec_cli_roundtrip():
+    ap = argparse.ArgumentParser()
+    ExecSpec.add_cli_args(ap)
+    args = ap.parse_args(["--backend", "buffered", "--lam", "0.3",
+                          "--compression", "int8"])
+    spec = ExecSpec.from_cli(args)
+    assert spec.backend == "buffered" and spec.lam == 0.3
+    assert spec.compression.mode == "int8"
+    # no flags -> the front-end's base spec rides through unchanged
+    assert ExecSpec.from_cli(ap.parse_args([]),
+                             base=ExecSpec(backend="chunked",
+                                           chunk_size=4)) == \
+        ExecSpec(backend="chunked", chunk_size=4)
+
+
+def test_make_backend_accepts_spec_and_legacy():
+    model = make_mlp()
+    spec = ExecSpec(backend="chunked", chunk_size=8)
+    a = make_backend(exec=spec, model=model)
+    b = make_backend("chunked", model, chunk_size=8)
+    assert type(a) is type(b) is ChunkedBackend
+    assert a.chunk_size == b.chunk_size == 8
+    # an ExecSpec in the positional selector slot works too
+    c = make_backend(spec, model)
+    assert isinstance(c, ChunkedBackend) and c.chunk_size == 8
+    buf = make_backend("buffered", model, lam=0.25, max_age=2)
+    assert isinstance(buf, BufferedBackend)
+    assert buf.lam == 0.25 and buf.max_age == 2
+    assert not buf.needs_ctx ^ (buf.lam > 0)
+
+
+@pytest.mark.parametrize("backend", list(BACKENDS))
+def test_execspec_equals_legacy_kwargs(setup, backend):
+    """run_federated(backend=...) and run_federated(exec=ExecSpec(...))
+    must produce bit-identical Histories on every backend."""
+    model, cfg, data, schedule = setup
+    kw = {"chunk_size": 3} if backend == "chunked" else {}
+    legacy = _run(setup, "adel", backend, **kw)
+    policy = make_policy("adel", cfg, schedule=schedule)
+    _, spec_hist = run_federated(model, policy, cfg, *data,
+                                 key=jax.random.PRNGKey(0),
+                                 exec=ExecSpec(backend=backend, **kw))
+    _assert_bit_identical(legacy, spec_hist)
+
+
+# ---------------------------------------------------------------------------
+# buffered (semi-async) backend: staleness-weighted delayed gradients
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ["adel", "salf"])
+def test_buffered_lam0_bit_identical_to_dense(setup, method):
+    """lam=0 is exact round-synchronous semantics: the buffered backend
+    delegates every round to the inherited dense step, bit for bit."""
+    _assert_bit_identical(_run(setup, method, "dense"),
+                          _run(setup, method, "buffered"))
+
+
+def _run_buffered(setup, method="adel", lam=0.6, tracer=None, backend=None,
+                  **spec_kw):
+    model, cfg, data, schedule = setup
+    policy = make_policy(method, cfg,
+                         schedule=schedule if method == "adel" else None)
+    exec_spec = (None if backend is not None
+                 else ExecSpec(backend="buffered", lam=lam, **spec_kw))
+    return run_federated(model, policy, cfg, *data,
+                         key=jax.random.PRNGKey(0), exec=exec_spec,
+                         backend=backend, tracer=tracer)
+
+
+def test_buffered_carries_late_work(setup):
+    """lam>0 banks stragglers' unfinished layers and folds them into later
+    rounds; the ledger rows carry the carried_in/out/stale columns and the
+    drift summary aggregates them."""
+    from repro import obs
+    from repro.obs.ledger import drift_summary, ledger_rows
+    sink = obs.MemorySink()
+    _, hist = _run_buffered(setup, tracer=obs.Tracer(sink))
+    rows = ledger_rows(sink.records)
+    assert rows
+    assert any(r.get("carried_in", 0) > 0 for r in rows), rows
+    assert any(r.get("carried_out", 0) > 0 for r in rows)
+    # staleness of every fold is >= 1 round (work banked at round t is
+    # never folded before round t+1)
+    taus = {int(tau) for r in rows for tau in (r.get("stale") or {})}
+    assert taus and min(taus) >= 1
+    drift = drift_summary(rows)
+    assert drift.get("carried_in_total", 0) > 0
+    assert drift.get("stale_mean", 0.0) >= 1.0
+    assert np.isfinite(hist.accuracy[-1])
+
+
+def test_buffered_int8_banks_wire_format(setup):
+    """Under compression the carry buffer stores the int8 WIRE tuples the
+    on-time reduction consumed — never re-materialized dense float32."""
+    bk = make_backend("buffered", make_mlp(), lam=0.6, compression="int8")
+    _, hist = _run_buffered(setup, backend=bk)
+    assert bk.last_carry["carried_in"] > 0 or bk.last_carry["carried_out"] > 0
+    assert bk._slots, "expected banked late work in the carry ring"
+    q, scale = bk._slots[-1]["banked"][0][:2]
+    assert q.dtype == jnp.int8 and scale.dtype == jnp.float32
+    assert np.isfinite(hist.accuracy[-1])
+
+
+def test_buffered_heterofl_lam_positive_rejected(setup):
+    with pytest.raises(ValueError, match="HeteroFL"):
+        _run_buffered(setup, method="heterofl")
+
+
+def test_buffered_reset_state_between_runs(setup):
+    """A backend instance reused across runs must not leak carry slots."""
+    bk = make_backend("buffered", make_mlp(), lam=0.6)
+    _run_buffered(setup, backend=bk)
+    assert bk._slots
+    bk.reset_state()
+    assert not bk._slots and not bk.last_carry
 
 
 _MULTIDEV_SCRIPT = textwrap.dedent("""

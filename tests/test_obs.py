@@ -41,9 +41,11 @@ def setup():
     return model, cfg, data, schedule
 
 
-def _run(setup, backend, tracer=None, chunk_size=3):
+def _run(setup, backend, tracer=None, chunk_size=None):
     model, cfg, data, schedule = setup
     policy = make_policy("adel", cfg, schedule=schedule)
+    if chunk_size is None and backend == "chunked":
+        chunk_size = 3
     _, hist = run_federated(model, policy, cfg, *data,
                             key=jax.random.PRNGKey(0), backend=backend,
                             chunk_size=chunk_size, tracer=tracer)

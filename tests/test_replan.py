@@ -212,7 +212,8 @@ def _run_static(fl_setup, backend, replan):
     policy = make_policy("adel", cfg, schedule=schedule)
     _, hist = run_federated(model, policy, cfg, *data,
                             key=jax.random.PRNGKey(0), backend=backend,
-                            chunk_size=3, replan=replan)
+                            chunk_size=3 if backend == "chunked" else None,
+                            replan=replan)
     return hist
 
 

@@ -81,8 +81,9 @@ def _legacy_loop(cfg, task, acfg, schedule, eval_rows):
 def _runtime_losses(task, acfg, schedule, backend="temporal", **kw):
     policy = make_policy("adel", acfg, schedule=schedule)
     s_max = max(min(probe_s_max(policy, ROUNDS), 32), 2)
+    chunk = kw.pop("chunk_size", 2 if backend == "chunked" else None)
     runtime = RoundRuntime(task.model, policy, backend=backend,
-                           chunk_size=kw.pop("chunk_size", 2), **kw)
+                           chunk_size=chunk, **kw)
     _, hist = runtime.run(task.source(), rounds=ROUNDS, T_max=TMAX,
                           eta=acfg.eta, s_max=s_max,
                           key=jax.random.PRNGKey(SEED),
@@ -161,8 +162,9 @@ def test_donation_safety(setup, backend):
     on_round hook) reads them afterwards."""
     _, task, acfg, schedule = setup
     policy = make_policy("adel", acfg, schedule=schedule)
-    probe = _DonationProbe(make_backend(backend, task.model, chunk_size=2,
-                                        donate=True))
+    probe = _DonationProbe(make_backend(
+        backend, task.model, donate=True,
+        chunk_size=2 if backend == "chunked" else None))
     runtime = RoundRuntime(task.model, policy, backend=probe)
     rounds = 4
     seen = []

@@ -1,11 +1,16 @@
 """Lemma 2 (unbiasedness): E[w~_{t+1}] = w_{t+1} (vanilla FedAvg), given the
-batches — the aggregation randomness is only the straggler draw."""
+batches — the aggregation randomness is only the straggler draw. The same
+property holds for the buffered backend's LATE-set fold (the complement
+mask with the late-set zero-contributor probabilities) at staleness
+weight 1."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.aggregation import aggregate_grads
-from repro.core.straggler import contribution_mask, exact_p_layers, sample_depths
+from repro.core.aggregation import (aggregate_grads, aggregate_with_coeffs,
+                                    layer_coefficients)
+from repro.core.straggler import (contribution_mask, exact_p_layers,
+                                  late_p_layers, sample_depths)
 
 
 def test_unbiased_montecarlo():
@@ -36,6 +41,55 @@ def test_unbiased_montecarlo():
     err = np.abs(mean - np.asarray(fedavg))
     # Eq. (5) in gradient form: E[g~^l] = (1-p_l) * mean_masked / (1-p_l) = g^l
     assert np.all(err <= 4.5 * se + 2e-3), (err.max(), se.max())
+
+
+def test_late_fold_unbiased_montecarlo():
+    """The buffered backend's delayed-gradient fold is unbiased: Eq. 5's
+    coefficient path applied to the LATE mask ``1 - mask`` with the
+    late-set zero-contributor probabilities
+    (:func:`repro.core.straggler.late_p_layers`) estimates the same
+    FedAvg layer mean — so at staleness weight ``w(tau) = 1`` the carried
+    fold adds an unbiased estimate of exactly the update the synchronous
+    round discarded."""
+    U, L, F = 8, 5, 12
+    g = jax.random.normal(jax.random.PRNGKey(1), (U, L, F))
+    ids = jnp.arange(L)
+    lam = jnp.full((U,), 5.0, jnp.float32)   # exchangeable rates (B3)
+    p_late = late_p_layers(lam, L)           # (L,)
+    fedavg = g.mean(0)
+
+    n = 6000
+    keys = jax.random.split(jax.random.PRNGKey(43), n)
+
+    def one(k):
+        z = sample_depths(k, lam)
+        late = 1.0 - contribution_mask(z, L)          # layers missed at T_d
+        coeffs = layer_coefficients(late, p_late)     # Eq. 5 on the late set
+        return aggregate_with_coeffs({"w": g}, {"w": ids}, coeffs)["w"]
+
+    agg = jax.vmap(one)(keys)                          # (n, L, F)
+    mean = np.asarray(agg.mean(0))
+    se = np.asarray(agg.std(0)) / np.sqrt(n)
+    err = np.abs(mean - np.asarray(fedavg))
+    assert np.all(err <= 4.5 * se + 2e-3), (err.max(), se.max())
+
+
+def test_late_p_layers_mirrors_exact_p():
+    """p_late^l is the exact probability that NO client is late at layer l
+    — checked against a direct Monte-Carlo estimate."""
+    U, L = 6, 4
+    lam = jnp.asarray([2.0, 3.0, 5.0, 7.0, 4.0, 6.0], jnp.float32)
+    p_late = np.asarray(late_p_layers(lam, L))
+    n = 20000
+    keys = jax.random.split(jax.random.PRNGKey(7), n)
+    z = jax.vmap(lambda k: sample_depths(k, lam))(keys)     # (n, U)
+    late = 1.0 - jax.vmap(lambda zz: contribution_mask(zz, L))(z)
+    mc = np.asarray((late.sum(axis=1) == 0).mean(axis=0))   # (L,)
+    np.testing.assert_allclose(p_late, mc, atol=0.02)
+    # sanity: deeper layers are MORE often all-on-time?  no — layer l needs
+    # depth >= L+1-l, so the layer-1 requirement is the harshest and being
+    # late there is most likely: p_late increases with l
+    assert np.all(np.diff(p_late) >= -1e-6)
 
 
 def test_layer_preserved_when_empty():
