@@ -1,0 +1,87 @@
+"""Fleet-scale — per-round wall time vs population size at a FIXED cohort.
+
+The Population API's acceptance bar: simulation cost must be O(cohort),
+not O(fleet). A lazy :class:`~repro.fleet.population.ParametricPopulation`
+(longtail-mobile, bernoulli churn, 4 edge regions, hierarchical two-tier
+aggregation) is swept from 10k to 1M devices with the cohort pinned, and
+the per-round wall time is expected to stay ~flat — ``flat_ratio``
+(1M-per-round over 10k-per-round) should sit near 1.0 and must not exceed
+1.5x. An untimed warm-up run absorbs jit compilation so the ratio compares
+steady-state rounds, not compile cost.
+"""
+from __future__ import annotations
+
+from benchmarks.common import cached_result, events_path, save_result
+
+SIZES = (10_000, 100_000, 1_000_000)
+COHORT = 16
+FLAT_BOUND = 1.5
+
+
+def run(quick: bool = False) -> dict:
+    cached = cached_result("fleet_scale")
+    if cached is not None:
+        return cached
+    from repro import obs
+    from repro.data.synthetic import make_image_dataset
+    from repro.fl.spec import ExecSpec
+    from repro.fleet.engine import partition_fleet, run_fleet
+    from repro.fleet.population import make_population
+    from repro.models.paper_models import make_mlp
+
+    rounds = 3 if quick else 5
+    x_tr, y_tr, x_te, y_te = make_image_dataset(
+        "mnist", n_train=800 if quick else 1600, n_test=300, seed=0,
+        noise_std=1.0)
+    # 64 virtual shards; device ids index them modulo, so the SAME data
+    # serves every population size (only WHO trains varies with size)
+    data = partition_fleet(x_tr, y_tr, x_te, y_te, 64, alpha=0.5, seed=0)
+
+    def population(size: int):
+        return make_population(
+            "parametric:longtail-mobile", size=size,
+            availability="bernoulli", availability_kwargs=(("rate", 0.7),),
+            regions=4)
+
+    def sweep(size: int, *, rounds: int, tracer=None):
+        return run_fleet(make_mlp(), population(size), data=data,
+                         method="adel", rounds=rounds, cohort_size=COHORT,
+                         solver_steps=300, eval_every=max(rounds // 2, 1),
+                         seed=0, verbose=False,
+                         exec=ExecSpec(backend="hierarchical", regions=4),
+                         tracer=tracer)
+
+    print(f"[fleet_scale] warm-up (jit) at fleet={SIZES[0]}")
+    sweep(SIZES[0], rounds=1)
+
+    result = {}
+    for size in SIZES:
+        tracer = obs.make_tracer(events_path(f"fleet_scale.{size}"))
+        t0 = obs.now()
+        _, hist = sweep(size, rounds=rounds, tracer=tracer)
+        wall = obs.now() - t0
+        tracer.close()
+        row = {"fleet_size": size, "rounds": rounds, "cohort": COHORT,
+               "wall_s": round(wall, 3),
+               "wall_per_round_s": round(wall / rounds, 4),
+               "final_acc": round(float(hist.accuracy[-1]), 4)
+               if hist.accuracy else 0.0,
+               "available_last": int(hist.available[-1])
+               if hist.available else 0}
+        print(f"[fleet_scale] fleet={size:>9,d} cohort={COHORT} "
+              f"rounds={rounds} wall/round={row['wall_per_round_s']:.3f}s "
+              f"final_acc={row['final_acc']:.4f}")
+        result[f"fleet_{size}"] = row
+
+    lo = result[f"fleet_{SIZES[0]}"]["wall_per_round_s"]
+    hi = result[f"fleet_{SIZES[-1]}"]["wall_per_round_s"]
+    result["flat_ratio"] = round(hi / max(lo, 1e-9), 3)
+    verdict = "OK" if result["flat_ratio"] <= FLAT_BOUND else "VIOLATION"
+    print(f"[fleet_scale] per-round {SIZES[0]:,d}->{SIZES[-1]:,d}: "
+          f"x{result['flat_ratio']} (bound {FLAT_BOUND}x) {verdict}")
+    save_result("fleet_scale", result)
+    return result
+
+
+if __name__ == "__main__":
+    run()

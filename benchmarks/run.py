@@ -26,7 +26,7 @@ import os
 import time
 
 SUITE_NAMES = ("fig2_mnist", "fig3_cifar", "fig4_robustness",
-               "table2_budgets", "roofline", "fleet_smoke",
+               "table2_budgets", "roofline", "fleet_smoke", "fleet_scale",
                "backend_sweep", "replan_sweep", "async_sweep", "lm_smoke")
 
 # metric-field classification for the regression gate
@@ -39,8 +39,8 @@ _BYTES_KEYS = ("bytes_per_round_logical", "bytes_per_round_wire")
 
 def _suites() -> dict:
     from benchmarks import (async_sweep, backend_sweep, fig2_mnist,
-                            fig3_cifar, fig4_robustness, fleet_smoke,
-                            lm_smoke, replan_sweep, roofline,
+                            fig3_cifar, fig4_robustness, fleet_scale,
+                            fleet_smoke, lm_smoke, replan_sweep, roofline,
                             table2_budgets)
     return {
         "fig2_mnist": fig2_mnist.run,
@@ -49,6 +49,7 @@ def _suites() -> dict:
         "table2_budgets": table2_budgets.run,
         "roofline": roofline.run,
         "fleet_smoke": fleet_smoke.run,
+        "fleet_scale": fleet_scale.run,
         "backend_sweep": backend_sweep.run,
         "replan_sweep": replan_sweep.run,
         "async_sweep": async_sweep.run,
@@ -255,6 +256,13 @@ def _derive(name: str, result: dict) -> str:
                     for t in ("never", "every-k", "drift") if t in row)
                 pieces.append(f"{scn.split('-')[0]}:{accs}")
             return "never/every-k/drift " + " ".join(pieces)
+        if name == "fleet_scale":
+            rows = sorted(((v["fleet_size"], v) for k, v in result.items()
+                           if isinstance(v, dict) and "fleet_size" in v))
+            walls = " ".join(f"{n // 1000}k:{v['wall_per_round_s']:.2f}s"
+                             for n, v in rows)
+            return (f"per-round {walls} "
+                    f"flat x{result.get('flat_ratio', '?')}")
         if name == "async_sweep":
             pieces = []
             for scn, row in result.items():

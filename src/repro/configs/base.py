@@ -224,8 +224,17 @@ class FleetConfig:
     preset: str = "uniform"        # profiles.PRESETS key (ignored w/ trace)
     size: int = 500                # number of simulated devices
     trace_path: Optional[str] = None   # JSON device trace overrides preset
+    # population source spec (repro.fleet.population.PopulationSpec source
+    # forms: "PRESET" | "trace:PATH" | "mobiperf:PATH" |
+    # "parametric:PRESET"). When set it wins over preset/trace_path; None
+    # keeps legacy configs building the same MaterializedPopulation they
+    # always did.
+    population: Optional[str] = None
     availability: str = "always-on"    # availability.AVAILABILITY key
     availability_kwargs: tuple = ()
+    # edge-region count for hierarchical two-tier aggregation (device id %
+    # regions); 1 = flat single-server topology
+    regions: int = 1
     cohort_size: int = 32          # U clients planned per round
     cohort_strategy: str = "uniform"   # uniform | power-of-choice | stratified
     # full execution spec (repro.fl.spec.ExecSpec). When set it is the
@@ -251,6 +260,19 @@ class FleetConfig:
 
     def availability_dict(self) -> dict:
         return dict(self.availability_kwargs)
+
+    def population_spec(self):
+        """The config's :class:`repro.fleet.population.PopulationSpec`:
+        ``population`` when set, else the legacy preset/trace fields mapped
+        onto the spec's source forms (imported lazily — configs must stay
+        importable without the fleet subsystem)."""
+        from repro.fleet.population import PopulationSpec
+        source = self.population or (f"trace:{self.trace_path}"
+                                     if self.trace_path else self.preset)
+        return PopulationSpec(source=source, size=self.size,
+                              availability=self.availability,
+                              availability_kwargs=self.availability_kwargs,
+                              regions=self.regions, seed=self.seed)
 
     def exec_spec(self) -> ExecSpec:
         """The effective execution spec: ``exec`` when set, else an

@@ -151,6 +151,12 @@ def aggregate_grads_chunk(chunk_grads: PyTree, layer_ids: PyTree,
     chunk axis maps 1:1 onto a ``shard_map`` client mesh axis (swap the host
     loop for ``jax.lax.psum``).
 
+    The same identity powers hierarchical two-tier aggregation
+    (:class:`repro.fl.backends.HierarchicalBackend`): each edge REGION is
+    one "chunk" — its partial aggregate, evaluated against the global
+    counts, is what crosses the wide-area network, and the global fold is
+    just the sum of region partials.
+
     chunk_grads leaves: (U_chunk,) + param.shape; chunk_mask: (U_chunk, L).
     """
     c = layer_coefficients(chunk_mask, p, bias_correct=bias_correct,

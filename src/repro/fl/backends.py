@@ -28,6 +28,14 @@ computed and aggregated:
   server-side carry buffer and folded into a later round's update with
   staleness weight ``lam ** tau`` (see the class docstring). ``lam=0``
   delegates every round to the dense step — trajectory-bit-identical.
+* :class:`HierarchicalBackend` — two-tier edge aggregation: the cohort
+  partitions into edge regions (region ids from the round context's
+  population draw, or a contiguous fallback split), each region computes
+  its partial aggregate via the chunk machinery
+  (:func:`repro.core.aggregation.aggregate_grads_chunk` /
+  ``hetero_overlap_partials`` against GLOBAL counts; int8 wire payloads
+  stay compressed region-local), and one global Eq. 5 fold applies the
+  summed partials. A single region delegates to the dense step bit-exactly.
 
 All of them produce the same updates up to float summation order, which
 ``tests/test_backends.py`` asserts end-to-end. Each backend keeps its own
@@ -106,7 +114,8 @@ from jax.sharding import PartitionSpec as P
 
 __all__ = ["BACKENDS", "AGG_IMPLS", "ExecSpec", "ExecutionBackend",
            "DenseBackend", "ChunkedBackend", "ShardMapBackend",
-           "TemporalBackend", "BufferedBackend", "make_backend"]
+           "TemporalBackend", "BufferedBackend", "HierarchicalBackend",
+           "make_backend"]
 
 PyTree = Any
 
@@ -907,13 +916,169 @@ class BufferedBackend(DenseBackend):
         return params
 
 
+class HierarchicalBackend(ChunkedBackend):
+    """Two-tier edge aggregation: per-region partials + one global fold.
+
+    Million-device deployments do not reduce every client update at one
+    server: clients report to an edge aggregator for their REGION, and
+    only the per-region partial aggregates cross the wide-area network
+    (hierarchical FL à la HierFAVG, arxiv 1905.06641). This backend
+    reproduces that topology inside the unified runtime:
+
+    1. The padded cohort is partitioned into edge regions. Region ids come
+       from the round context (``ctx.regions`` — the population draw's
+       ``device_id % Population.regions``); without a context the cohort
+       splits into ``regions`` contiguous slices, so the backend works
+       under plain ``run_federated`` too.
+    2. Each region runs its clients' local updates and computes ONE
+       partial aggregate with the chunk machinery —
+       :func:`repro.core.aggregation.aggregate_grads_chunk` (or
+       ``hetero_overlap_partials`` for HeteroFL rounds) evaluated against
+       the GLOBAL per-layer contributor counts, so summing the partials
+       over regions is exactly the flat Eq. 5 fold on the whole cohort.
+       Under ``compression=``, each region's int8 wire payload is
+       dequantized+weighted+accumulated region-locally
+       (:func:`repro.core.compression.aggregate_compressed`) — only the
+       float32 partial crosses region boundaries, never per-client wire
+       tuples.
+    3. The server applies the summed partials in one donated step.
+
+    Regions are gathered through padded index maps (region width rounded
+    up to a multiple of 8, pad slots pointing at row 0 with a validity
+    column zeroing their mask rows), so jit retraces at most once per
+    distinct padded region width rather than per region census.
+
+    A single-region round (``regions=1``, or every sampled device in one
+    region) delegates to the dense step — bit-identical to
+    ``backend="dense"``, which ``tests/test_population.py`` asserts.
+    ``last_regions`` exposes the round's region census to the runtime's
+    ledger (``regions`` / ``region_max`` / ``region_pad`` columns).
+    """
+
+    name = "hierarchical"
+    needs_ctx = True
+
+    def __init__(self, model, *, regions: int = 4, chunk_size: int = 16,
+                 local_iters: int = 1, l2: float = 0.0, donate: bool = True,
+                 compression=None, agg_impl: str = "jnp"):
+        super().__init__(model, chunk_size=chunk_size,
+                         local_iters=local_iters, l2=l2, donate=donate,
+                         compression=compression, agg_impl=agg_impl)
+        self.regions = max(int(regions), 1)
+        self.last_regions: dict = {}
+
+    def cohort_pad(self, U: int) -> int:
+        # regions pad internally (multiple-of-8 gathers); the cohort axis
+        # itself needs no chunk-multiple padding
+        return int(U)
+
+    def reset_state(self) -> None:
+        self.last_regions = {}
+
+    def describe(self):
+        return {**super().describe(), "regions": self.regions}
+
+    def _region_groups(self, ctx, U: int) -> list[np.ndarray]:
+        """Per-region member indices into the padded cohort axis.
+
+        Pad rows (>= U_act) keep the region id of the fallback split or
+        id 0; their mask rows are all-zero either way, so they contribute
+        nothing regardless of which region gathers them.
+        """
+        ra = getattr(ctx, "regions", None) if ctx is not None else None
+        if ra is not None:
+            ra = np.asarray(ra, np.int64)
+            rid = np.zeros(U, np.int64)
+            rid[:min(len(ra), U)] = ra[:U]
+        else:
+            rid = (np.arange(U) * self.regions) // max(U, 1)
+        return [np.flatnonzero(rid == g) for g in np.unique(rid)]
+
+    def run_round(self, params, xb, yb, wb, mask, p, eta, *,
+                  bias_correct, wmasks=None, ctx=None):
+        self._check_rule(wmasks)
+        U = int(mask.shape[0])
+        groups = self._region_groups(ctx, U)
+        if len(groups) <= 1:
+            self.last_regions = {"regions": 1, "region_max": U,
+                                 "region_pad": U}
+            return self._dense.run_round(params, xb, yb, wb, mask, p, eta,
+                                         bias_correct=bias_correct,
+                                         wmasks=wmasks)
+        rmax = max(len(g) for g in groups)
+        r_pad = max(-(-rmax // 8) * 8, 8)
+        self.last_regions = {"regions": len(groups), "region_max": rmax,
+                             "region_pad": r_pad}
+        counts = mask.sum(0)              # (L,) GLOBAL contributor counts
+        tracer = self.tracer
+        hetero = wmasks is not None
+        gathers = []
+        for g in groups:
+            idx = np.zeros(r_pad, np.int64)
+            idx[:len(g)] = g
+            valid = np.zeros((r_pad, 1), np.float32)
+            valid[:len(g)] = 1.0
+            gathers.append((idx, jnp.asarray(valid)))
+
+        if self.compression.mode != "none":
+            payload_step = self._payload()
+            fold = self._fold(bool(bias_correct))
+            acc = jax.tree.map(lambda w: jnp.zeros(w.shape, jnp.float32),
+                               params)
+            for j, (idx, valid) in enumerate(gathers):
+                m_r = jnp.asarray(mask)[idx] * valid
+                with tracer.span("local_train", backend=self.name,
+                                 region=j):
+                    payload = payload_step(params, xb[idx], yb[idx],
+                                           wb[idx], eta)
+                    if tracer.active:
+                        jax.block_until_ready(payload)
+                if tracer.active:
+                    self._count_bytes(params, len(groups[j]))
+                acc = fold(acc, params, payload, m_r, p, counts)
+            with tracer.span("aggregate", backend=self.name,
+                             regions=len(groups)):
+                out = self._apply32(params, acc)
+                if tracer.active:
+                    jax.block_until_ready(out)
+            return out
+
+        step = self._chunk_step(bool(bias_correct), hetero)
+        num = den = agg = None
+        for j, (idx, valid) in enumerate(gathers):
+            m_r = jnp.asarray(mask)[idx] * valid
+            wm_r = (None if not hetero
+                    else jax.tree.map(lambda m: m[idx], wmasks))
+            with tracer.span("local_train", backend=self.name, region=j):
+                part = step(params, xb[idx], yb[idx], wb[idx], m_r, p, eta,
+                            counts, wm_r)
+                if tracer.active:
+                    jax.block_until_ready(part)
+            if tracer.active:
+                self._count_bytes(params, len(groups[j]))
+            if hetero:
+                n_p, d_p = part
+                num = n_p if num is None else jax.tree.map(jnp.add, num, n_p)
+                den = d_p if den is None else jax.tree.map(jnp.add, den, d_p)
+            else:
+                agg = part if agg is None else jax.tree.map(jnp.add, agg,
+                                                            part)
+        with tracer.span("aggregate", backend=self.name,
+                         regions=len(groups)):
+            out = (self._apply_hetero(params, num, den) if hetero
+                   else self._apply(params, agg))
+            if tracer.active:
+                jax.block_until_ready(out)
+        return out
+
+
 def make_backend(backend=None, model=None, *, exec: ExecSpec | None = None,
                  chunk_size: int | None = None, mesh=None,
                  local_iters: int | None = None, l2: float | None = None,
                  donate: bool | None = None, compression=None,
                  agg_impl: str | None = None, lam: float | None = None,
-                 max_age: int | None = None,
-                 buffer_cap: int | None = None) -> ExecutionBackend:
+                 max_age: int | None = None, buffer_cap: int | None = None,
+                 regions: int | None = None) -> ExecutionBackend:
     """Build an :class:`ExecutionBackend` from an
     :class:`repro.fl.spec.ExecSpec` (``exec=``, or an ExecSpec as the
     first positional argument) or from the legacy kwargs — both funnel
@@ -942,7 +1107,7 @@ def make_backend(backend=None, model=None, *, exec: ExecSpec | None = None,
     legacy = dict(backend=backend, chunk_size=chunk_size, mesh=mesh,
                   local_iters=local_iters, l2=l2, donate=donate,
                   compression=compression, agg_impl=agg_impl, lam=lam,
-                  max_age=max_age, buffer_cap=buffer_cap)
+                  max_age=max_age, buffer_cap=buffer_cap, regions=regions)
     has_legacy = any(v is not None for v in legacy.values())
     # a complete ExecSpec was validated by the resolve() that built it;
     # re-validate only when legacy kwargs modify it
@@ -962,4 +1127,7 @@ def make_backend(backend=None, model=None, *, exec: ExecSpec | None = None,
     if spec.backend == "buffered":
         return BufferedBackend(model, lam=spec.lam, max_age=spec.max_age,
                                buffer_cap=spec.buffer_cap, **kw)
+    if spec.backend == "hierarchical":
+        return HierarchicalBackend(model, regions=spec.regions,
+                                   chunk_size=spec.chunk_size, **kw)
     raise ValueError(f"unknown backend {spec.backend!r}; known: {BACKENDS}")

@@ -28,8 +28,9 @@ The three axes of variation are all pluggable:
   and eval metrics (classification accuracy vs token accuracy /
   perplexity) — supplied to :meth:`RoundRuntime.run` as ``eval_fn``.
 * HOW a round executes is an :class:`repro.fl.backends.ExecutionBackend`
-  (``dense`` / ``chunked`` / ``shard_map`` / ``temporal`` / ``buffered``),
-  selected through one :class:`repro.fl.spec.ExecSpec`; all of them donate
+  (``dense`` / ``chunked`` / ``shard_map`` / ``temporal`` / ``buffered`` /
+  ``hierarchical``), selected through one
+  :class:`repro.fl.spec.ExecSpec`; all of them donate
   the incoming ``params`` buffers to the round step. Stateful backends
   (the buffered semi-async carry buffer) additionally receive a
   :class:`RoundContext` each round — the simulated clock span plus the
@@ -192,7 +193,10 @@ class Cohort:
     labels from ``x``), ``counts``: (U_act,) valid samples per client.
     ``view`` is the per-round AnalysisConfig the policy should plan against
     (None keeps the policy's static config), ``available`` the
-    reachable-device count (None outside fleet runs).
+    reachable-device count (None outside fleet runs). ``regions`` is the
+    per-client edge-region id (``(U_act,)`` int32, from the population
+    draw) consumed by the hierarchical backend; None lets that backend
+    fall back to a contiguous split.
     """
 
     x: Any
@@ -200,6 +204,7 @@ class Cohort:
     counts: Any
     view: Any = None
     available: Optional[int] = None
+    regions: Optional[np.ndarray] = None
 
     @property
     def size(self) -> int:
@@ -242,10 +247,13 @@ class RoundContext:
     lam: np.ndarray        # (U_act,)
     layer_s: np.ndarray    # (U_act,)
     B: np.ndarray          # (U_act,)
+    # per-client edge-region ids from the cohort draw (hierarchical
+    # backend); None -> the backend's contiguous fallback split
+    regions: Any = None
 
 
 def _round_context(t: int, elapsed: float, plan: RoundPlan, view_cfg,
-                   U_act: int) -> RoundContext:
+                   U_act: int, regions=None) -> RoundContext:
     """Recover the straggler-model rates the plan was drawn under. Both
     policy families price a client's layer clock as Exp(S_u / P_u) with
     deadline ``plan.elapsed`` (B1-B3), so ``lam = P/S * max(T - B, 0)``
@@ -261,7 +269,7 @@ def _round_context(t: int, elapsed: float, plan: RoundPlan, view_cfg,
     layer_s = S / np.maximum(P, 1e-9)
     return RoundContext(t=t, sim_start=float(elapsed),
                         sim_end=float(elapsed) + T_d, U_act=int(U_act),
-                        lam=lam, layer_s=layer_s, B=B)
+                        lam=lam, layer_s=layer_s, B=B, regions=regions)
 
 
 class RoundRuntime:
@@ -445,7 +453,8 @@ class RoundRuntime:
                                             U_pad))
             view_cfg = (cohort.view if cohort.view is not None
                         else policy.cfg)
-            ctx = (_round_context(t, elapsed, plan, view_cfg, U_act)
+            ctx = (_round_context(t, elapsed, plan, view_cfg, U_act,
+                                  regions=cohort.regions)
                    if needs_ctx else None)
             params = backend.run_round(params, xb, yb, wb, mask, plan.p,
                                        jnp.float32(eta[t]),
@@ -469,7 +478,8 @@ class RoundRuntime:
                     wall_round_s=wall_now - wall_round0,
                     wall_total_s=wall_now - wall_start,
                     available=cohort.available,
-                    carry=getattr(backend, "last_carry", None) or None))
+                    carry=getattr(backend, "last_carry", None) or None,
+                    regions=getattr(backend, "last_regions", None) or None))
             if (t % eval_every == 0) or (t == rounds - 1):
                 with tracer.span("eval"):
                     acc, loss = eval_fn(params)

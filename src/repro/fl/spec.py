@@ -39,14 +39,17 @@ __all__ = ["BACKENDS", "AGG_IMPLS", "ExecSpec"]
 
 # dense: one vmap over the cohort; chunked: sequential software psum;
 # shard_map: a real client mesh axis; temporal: grad-accumulation scan;
-# buffered: dense + a staleness-weighted delayed-gradient carry buffer
-BACKENDS = ("dense", "chunked", "shard_map", "temporal", "buffered")
+# buffered: dense + a staleness-weighted delayed-gradient carry buffer;
+# hierarchical: per-edge-region partial aggregates + one global Eq. 5 fold
+BACKENDS = ("dense", "chunked", "shard_map", "temporal", "buffered",
+            "hierarchical")
 
 AGG_IMPLS = ("jnp", "pallas")
 
 # legacy-kwarg aliases `resolve` understands, in ExecSpec field order
 _FIELDS = ("backend", "chunk_size", "mesh", "local_iters", "l2", "donate",
-           "compression", "agg_impl", "lam", "max_age", "buffer_cap")
+           "compression", "agg_impl", "lam", "max_age", "buffer_cap",
+           "regions")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,6 +72,13 @@ class ExecSpec:
     semantics — bit-identical to ``backend="dense"``. ``max_age`` drops
     buffered work older than that many rounds; ``buffer_cap`` bounds the
     carry ring buffer (one slot per recent round).
+
+    ``regions`` is the ``hierarchical`` backend's FALLBACK edge-region
+    count: when the round context carries no per-device region ids (no
+    :class:`repro.fleet.population.Population` behind the cohort source),
+    the cohort splits into this many contiguous regions. Cohort region
+    ids from a population (``device id % population.regions``) always take
+    precedence. ``regions=1`` degenerates to the dense fold, bit-exactly.
     """
 
     backend: str = "dense"
@@ -83,6 +93,8 @@ class ExecSpec:
     lam: float = 0.0
     max_age: int = 4
     buffer_cap: int = 4
+    # hierarchical backend: fallback edge-region count (see class docstring)
+    regions: int = 4
 
     def __post_init__(self):
         # normalize the legacy compression spec forms (None | mode string |
@@ -101,6 +113,8 @@ class ExecSpec:
                              f"[0, 1] (w(tau) = lam ** tau)")
         if int(self.max_age) < 1 or int(self.buffer_cap) < 1:
             raise ValueError("max_age and buffer_cap must be >= 1")
+        if int(self.regions) < 1:
+            raise ValueError(f"regions must be >= 1, got {self.regions}")
 
     # ------------------------------------------------------------------
     @classmethod
@@ -164,6 +178,10 @@ class ExecSpec:
         if self.agg_impl == "pallas" and self.backend == "shard_map":
             issues.append("agg_impl='pallas' is ignored under shard_map "
                           "(shard-local folds run the jnp path)")
+        if self.regions != defaults.regions and \
+                self.backend != "hierarchical":
+            issues.append(f"regions={self.regions} is ignored by "
+                          f"backend={self.backend!r} (hierarchical only)")
         for msg in issues:
             if strict:
                 raise ValueError(f"ExecSpec: {msg}")

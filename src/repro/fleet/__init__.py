@@ -16,8 +16,18 @@ against realistic populations:
   (sine-wave day/night with per-device phase), ``markov`` (sticky on/off).
 * :mod:`repro.fleet.cohort` — per-round cohort sampling (``uniform``,
   ``power-of-choice`` by ``P_u``, ``stratified`` by tier) and
-  ``cohort_view``, which re-derives the :class:`AnalysisConfig` the
-  policies consume so ADEL/baselines see the sampled cohort's ``P``/``B``.
+  ``cohort_view``/``profile_view``, which re-derive the
+  :class:`AnalysisConfig` the policies consume so ADEL/baselines see the
+  sampled cohort's ``P``/``B``.
+* :mod:`repro.fleet.population` — the :class:`Population` protocol behind
+  million-device fleets: :class:`MaterializedPopulation` wraps a
+  :class:`Fleet` + availability model bit-for-bit, while
+  :class:`ParametricPopulation` draws device profiles lazily from
+  per-tier two-piece lognormal fits of a preset's quantile statistics,
+  so cost is O(cohort) regardless of fleet size.
+  :class:`PopulationSpec` / :func:`make_population` are the one front
+  door (``"PRESET"`` | ``"trace:PATH"`` | ``"mobiperf:PATH"`` |
+  ``"parametric:PRESET"``) with a shared ``--population`` CLI block.
 * :mod:`repro.fleet.engine` — ``run_fleet``, a thin fleet front-end over
   the unified :class:`repro.fl.runtime.RoundRuntime`: per-round
   availability/cohort/view sampling feeds any :mod:`repro.fl.backends`
@@ -43,15 +53,21 @@ remaining-horizon Problem-2 view from the currently-reachable population
 """
 from repro.fleet.availability import (AVAILABILITY, AvailabilityModel,
                                       make_availability)
-from repro.fleet.cohort import COHORT_STRATEGIES, cohort_view, sample_cohort
+from repro.fleet.cohort import (COHORT_STRATEGIES, cohort_view, profile_view,
+                                sample_cohort)
 from repro.fleet.engine import (FleetData, partition_fleet, reference_config,
                                 run_fleet)
+from repro.fleet.population import (CohortDraw, MaterializedPopulation,
+                                    ParametricPopulation, Population,
+                                    PopulationSpec, make_population)
 from repro.fleet.profiles import (PRESETS, Fleet, fleet_from_config,
                                   load_trace, make_fleet, save_trace)
 
 __all__ = [
-    "AVAILABILITY", "AvailabilityModel", "COHORT_STRATEGIES", "Fleet",
-    "FleetData", "PRESETS", "cohort_view", "fleet_from_config", "load_trace",
-    "make_availability", "make_fleet", "partition_fleet", "reference_config",
+    "AVAILABILITY", "AvailabilityModel", "COHORT_STRATEGIES", "CohortDraw",
+    "Fleet", "FleetData", "MaterializedPopulation", "PRESETS",
+    "ParametricPopulation", "Population", "PopulationSpec", "cohort_view",
+    "fleet_from_config", "load_trace", "make_availability", "make_fleet",
+    "make_population", "partition_fleet", "profile_view", "reference_config",
     "run_fleet", "sample_cohort", "save_trace",
 ]

@@ -26,6 +26,20 @@ the re-planning subsystem (:mod:`repro.core.replan`): ``reachable_probs(t)``
 gives each device's marginal reachability probability in a future round
 ``t`` conditioned on the model's current state, and ``expected_reachable(t0,
 horizon)`` the expected reachable counts for the next ``horizon`` rounds.
+
+For populations too large to instantiate a per-device model
+(:class:`repro.fleet.population.ParametricPopulation`), every class also
+answers the STATELESS fleet-wide marginal rate ``marginal_rate(t,
+**kwargs)`` — the probability a generic device is reachable in round ``t``
+with per-device state (Markov stickiness, diurnal phases) averaged out:
+
+* ``always-on`` — 1.
+* ``bernoulli`` — ``rate``.
+* ``diurnal``   — the per-device probability averaged over the phase
+  distribution U(0, phase_spread), clipped to [0, 1] after averaging (the
+  per-device clip is approximated; exact when ``mean +- amplitude`` stays
+  inside [0, 1]).
+* ``markov``    — the stationary rate (temporal correlation averaged out).
 """
 from __future__ import annotations
 
@@ -73,6 +87,13 @@ class AvailabilityModel:
     def describe(self) -> dict:
         return {"name": self.name, "n": self.n}
 
+    @classmethod
+    def marginal_rate(cls, t: int, **kwargs) -> float:  # pragma: no cover
+        """Stateless fleet-wide reachability rate at round ``t`` (see the
+        module docstring) — the analytic hook parametric populations use
+        instead of instantiating an ``n``-device model."""
+        raise NotImplementedError
+
 
 class AlwaysOn(AvailabilityModel):
     name = "always-on"
@@ -82,6 +103,10 @@ class AlwaysOn(AvailabilityModel):
 
     def reachable_probs(self, t: int) -> np.ndarray:
         return np.ones(self.n)
+
+    @classmethod
+    def marginal_rate(cls, t: int, **kwargs) -> float:
+        return 1.0
 
 
 class Bernoulli(AvailabilityModel):
@@ -96,6 +121,10 @@ class Bernoulli(AvailabilityModel):
 
     def reachable_probs(self, t: int) -> np.ndarray:
         return np.full(self.n, self.rate)
+
+    @classmethod
+    def marginal_rate(cls, t: int, rate: float = 0.8, **kwargs) -> float:
+        return float(rate)
 
     def describe(self) -> dict:
         return {"name": self.name, "n": self.n, "rate": self.rate}
@@ -126,6 +155,21 @@ class Diurnal(AvailabilityModel):
 
     def reachable_probs(self, t: int) -> np.ndarray:
         return self.prob(t)
+
+    @classmethod
+    def marginal_rate(cls, t: int, mean: float = 0.65,
+                      amplitude: float = 0.3, period: float = 24.0,
+                      phase_spread: float = 2.0 * np.pi,
+                      **kwargs) -> float:
+        """Phase-averaged rate: E_phi[mean + amplitude sin(a + phi)] with
+        phi ~ U(0, phase_spread) integrates to amplitude (cos a -
+        cos(a + spread)) / spread; the [0, 1] clip is applied AFTER the
+        phase average (see the module docstring for the approximation)."""
+        a = 2.0 * np.pi * float(t) / float(period)
+        spread = max(float(phase_spread), 1e-9)
+        mean_sin = (np.cos(a) - np.cos(a + spread)) / spread
+        return float(np.clip(float(mean) + float(amplitude) * mean_sin,
+                             0.0, 1.0))
 
     def describe(self) -> dict:
         return {"name": self.name, "n": self.n, "mean": self.mean,
@@ -164,6 +208,15 @@ class Markov(AvailabilityModel):
         lam = (1.0 - self.p_up - self.p_down) ** k
         return self.stationary + (self.state.astype(float)
                                   - self.stationary) * lam
+
+    @classmethod
+    def marginal_rate(cls, t: int, p_off_to_on: float = 0.3,
+                      p_on_to_off: float = 0.1, **kwargs) -> float:
+        """Stationary rate — the chain's temporal stickiness is averaged
+        out (states started from the stationary distribution stay there
+        marginally)."""
+        return float(p_off_to_on) / max(float(p_off_to_on)
+                                        + float(p_on_to_off), 1e-12)
 
     def describe(self) -> dict:
         return {"name": self.name, "n": self.n, "p_off_to_on": self.p_up,

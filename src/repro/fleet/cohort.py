@@ -25,7 +25,8 @@ import numpy as np
 from repro.core.types import AnalysisConfig
 from repro.fleet.profiles import Fleet
 
-__all__ = ["COHORT_STRATEGIES", "sample_cohort", "cohort_view"]
+__all__ = ["COHORT_STRATEGIES", "sample_cohort", "cohort_view",
+           "profile_view"]
 
 COHORT_STRATEGIES = ("uniform", "power-of-choice", "stratified")
 
@@ -78,10 +79,22 @@ def sample_cohort(rng: np.random.Generator, available: np.ndarray,
         f"unknown cohort strategy {strategy!r}; known: {COHORT_STRATEGIES}")
 
 
+def profile_view(base: AnalysisConfig, P: np.ndarray,
+                 B: np.ndarray) -> AnalysisConfig:
+    """The round's AnalysisConfig from the cohort's sampled profiles.
+
+    The population-protocol form of :func:`cohort_view`: any
+    :class:`repro.fleet.population.Population` hands over the cohort's
+    ``(P, B)`` arrays directly (materialized gathers, parametric lazy
+    draws) and the view never touches fleet-sized state.
+    """
+    U = len(P)
+    sigma2 = np.full((U,), float(np.mean(base.sigma2)), np.float32)
+    return dataclasses.replace(base, U=U, P=np.asarray(P, np.float32),
+                               B=np.asarray(B, np.float32), sigma2=sigma2)
+
+
 def cohort_view(base: AnalysisConfig, fleet: Fleet,
                 idx: np.ndarray) -> AnalysisConfig:
     """The round's AnalysisConfig: base constants with the cohort's U/P/B."""
-    U = len(idx)
-    sigma2 = np.full((U,), float(np.mean(base.sigma2)), np.float32)
-    return dataclasses.replace(base, U=U, P=fleet.P[idx], B=fleet.B[idx],
-                               sigma2=sigma2)
+    return profile_view(base, fleet.P[idx], fleet.B[idx])

@@ -1,29 +1,43 @@
 """``run_fleet``: the fleet-scale front-end over the unified round runtime.
 
-``run_fleet`` decouples the *population* (thousands of devices) from the
-*cohort* (the ``U`` clients a round plans for) and is now a thin wrapper:
+``run_fleet`` decouples the *population* (up to millions of devices, via
+the :class:`repro.fleet.population.Population` protocol) from the *cohort*
+(the ``U`` clients a round plans for) and is a thin wrapper:
 
-1. it builds the Problem-2 planning config (:func:`reference_config`) and
-   the policy, probes ``s_max`` against a synthetic best-case device, and
-2. wraps availability + cohort sampling + per-round view derivation in a
+1. it builds the Problem-2 planning config (:func:`reference_config`, from
+   the population's ``plan_profile``) and the policy, probes ``s_max``
+   against the population's best-case device, and
+2. wraps the population's per-round cohort draws + view derivation in a
    :class:`FleetCohortSource`, then hands the loop to
    :class:`repro.fl.runtime.RoundRuntime`.
 
-Per round the source decides who is reachable (availability model), picks
-at most ``cohort_size`` devices (cohort sampler), re-derives the
-AnalysisConfig the policy sees (``cohort_view``), and stacks only the
-sampled cohort's shards at a fixed ``n_pad`` — never a ``(fleet, N, ...)``
-array. The runtime pads the cohort axis to the execution backend's fixed
-width and runs the round on any :mod:`repro.fl.backends` backend:
-``chunked`` (default here — sequential software psum via
-``aggregate_grads_chunk``), ``dense``, or ``shard_map`` (the chunk axis as
-a real client mesh axis). HeteroFL width masks flow through all three, so
-the same fleet scenario can compare layer-depth and width-scaling policies.
+Per round the population decides who is reachable and picks at most
+``cohort_size`` devices (``Population.sample_cohort``), the source
+re-derives the AnalysisConfig the policy sees (``profile_view``) and
+stacks only the sampled cohort's shards at a fixed ``n_pad`` — never a
+``(fleet, N, ...)`` array. Device ids map onto data shards by ``id %
+len(parts)`` (identity for materialized fleets sized to their data), so a
+million-device :class:`~repro.fleet.population.ParametricPopulation` can
+train against a bounded shard set with O(cohort) per-round cost. The
+runtime pads the cohort axis to the execution backend's fixed width and
+runs the round on any :mod:`repro.fl.backends` backend: ``chunked``
+(default here — sequential software psum via ``aggregate_grads_chunk``),
+``dense``, ``shard_map``, or ``hierarchical`` (edge-region partials +
+global Eq. 5 fold, fed by the cohort's region ids). HeteroFL width masks
+flow through all of them.
+
+The legacy ``run_fleet(model, fleet, availability, data)`` positional
+signature remains as a deprecated alias resolved onto
+``MaterializedPopulation`` (bit-identical trajectories; warns, or raises
+under ``REPRO_EXEC_STRICT=1`` — the same strictness toggle as
+:meth:`repro.fl.spec.ExecSpec.validate`).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import os
+import warnings
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -36,11 +50,37 @@ from repro.fl.partition import dirichlet_partition, iid_partition, stack_clients
 from repro.fl.runtime import Cohort, ModelAPI, RoundRuntime, probe_s_max
 from repro.fl.spec import ExecSpec
 from repro.fleet.availability import AvailabilityModel
-from repro.fleet.cohort import cohort_view, sample_cohort
+from repro.fleet.cohort import profile_view
+from repro.fleet.population import (MaterializedPopulation, Population,
+                                    PopulationSpec, make_population)
 from repro.fleet.profiles import Fleet
 
 __all__ = ["FleetData", "FleetCohortSource", "partition_fleet",
            "reference_config", "run_fleet"]
+
+
+def _legacy_fleet_shim(population, availability, data, *,
+                       where: str) -> tuple:
+    """Resolve the deprecated ``(fleet, availability, data)`` calling form
+    onto a :class:`MaterializedPopulation` (warn; raise in strict mode)."""
+    if isinstance(population, Fleet):
+        msg = (f"{where}(model, fleet, availability, data) is deprecated; "
+               f"pass a Population — e.g. MaterializedPopulation(fleet, "
+               f"availability) or make_population(spec) — followed by data")
+        if bool(os.environ.get("REPRO_EXEC_STRICT")):
+            raise ValueError(f"{msg} (REPRO_EXEC_STRICT=1)")
+        warnings.warn(msg, DeprecationWarning, stacklevel=3)
+        population = MaterializedPopulation(population, availability)
+        availability = None
+    elif isinstance(population, (str, dict, PopulationSpec)):
+        population = make_population(population)
+    if availability is not None and data is None:
+        # new positional form: (model, population, data)
+        data, availability = availability, None
+    if availability is not None:
+        raise TypeError(f"{where}: availability is part of the Population "
+                        f"(wrap it in MaterializedPopulation)")
+    return population, data
 
 
 @dataclasses.dataclass
@@ -74,98 +114,114 @@ def partition_fleet(x: np.ndarray, y: np.ndarray, x_test: np.ndarray,
     return FleetData(x=x, y=y, parts=parts, x_test=x_test, y_test=y_test)
 
 
-def reference_config(fleet: Fleet, *, U: int, L: int, R: int, T_max: float,
-                     eta0: float = 2.0, eta_decay: float = 1.0,
-                     seed: int = 0) -> AnalysisConfig:
+def reference_config(population: Union[Population, Fleet], *, U: int, L: int,
+                     R: int, T_max: float, eta0: float = 2.0,
+                     eta_decay: float = 1.0, seed: int = 0) -> AnalysisConfig:
     """Planning config for the Problem-2 solver: a quantile-spaced
-    representative cohort of the fleet (so the schedule reflects the real
-    P/B spread rather than one random draw)."""
-    q = (np.arange(U) + 0.5) / U
-    order = np.argsort(fleet.P)
-    pick = order[np.clip((q * fleet.size).astype(int), 0, fleet.size - 1)]
+    representative cohort of the population (so the schedule reflects the
+    real P/B spread rather than one random draw).
+
+    Accepts a :class:`~repro.fleet.population.Population` (via its
+    ``plan_profile``) or, for backward compatibility, a bare
+    :class:`Fleet` — the pick math is identical either way.
+    """
+    if isinstance(population, Fleet):
+        population = MaterializedPopulation(population)
+    P, B = population.plan_profile(int(U))
     base = AnalysisConfig.default(U=U, L=L, R=R, T_max=T_max, eta0=eta0,
                                   eta_decay=eta_decay, seed=seed)
-    return dataclasses.replace(base, P=fleet.P[pick].copy(),
-                               B=fleet.B[pick].copy())
+    return dataclasses.replace(base, P=P, B=B)
 
 
 class FleetCohortSource:
-    """Per-round availability draw -> cohort sample -> policy view -> the
-    sampled cohort's shards stacked at a fixed ``n_pad``."""
+    """Per-round population cohort draw -> policy view -> the sampled
+    cohort's shards stacked at a fixed ``n_pad``.
 
-    def __init__(self, fleet: Fleet, availability: AvailabilityModel,
-                 data: FleetData, ref: AnalysisConfig, *, cohort_size: int,
+    Accepts any :class:`~repro.fleet.population.Population`; the legacy
+    ``FleetCohortSource(fleet, availability, data, ref)`` positional form
+    is a deprecated alias resolved onto ``MaterializedPopulation`` with
+    identical draw sequences. Device ids index data shards modulo
+    ``len(data.parts)``, so a population larger than the shard count
+    virtually re-shards (identity mapping when they match).
+    """
+
+    def __init__(self, population: Union[Population, Fleet],
+                 availability: Optional[AvailabilityModel] = None,
+                 data: Optional[FleetData] = None,
+                 ref: Optional[AnalysisConfig] = None, *, cohort_size: int,
                  strategy: str = "uniform", seed: int = 0):
-        self.fleet = fleet
-        self.availability = availability
+        if (not isinstance(population, Fleet)
+                and isinstance(availability, FleetData) and ref is None):
+            # new positional form (population, data, ref): shift the
+            # operands out of the legacy (availability, data, ref) slots
+            availability, data, ref = None, availability, data
+        population, data = _legacy_fleet_shim(population, availability, data,
+                                              where="FleetCohortSource")
+        self.population: Population = population
         self.data = data
         self.ref = ref
         self.cohort_size = int(cohort_size)
         self.strategy = strategy
         self.rng = np.random.default_rng([2077, seed])
-        self._last_avail: Optional[np.ndarray] = None
-        availability.reset()
+        population.reset()
 
     @property
     def plan_rate_max(self) -> float:
         """Fastest compute rate any cohort can plan for — bounds a
         re-solve's m so batches stay within the probed ``s_max`` even when
         the fleet's fastest devices were offline at re-plan time."""
-        return float(self.fleet.P.max())
+        return float(self.population.rate_max)
 
     def round_cohort(self, t: int) -> Optional[Cohort]:
-        avail = self.availability.step(t)
-        self._last_avail = avail
-        idx = sample_cohort(self.rng, avail, self.fleet, self.cohort_size,
-                            self.strategy)
-        if len(idx) == 0:
+        draw = self.population.sample_cohort(t, self.rng,
+                                             U=self.cohort_size,
+                                             strategy=self.strategy)
+        if draw is None:
             return None
-        view = cohort_view(self.ref, self.fleet, idx)
-        xs, ys, counts = stack_clients(self.data.x, self.data.y,
-                                       [self.data.parts[u] for u in idx],
-                                       n_pad=self.data.n_pad)
+        view = profile_view(self.ref, draw.P, draw.B)
+        n_parts = len(self.data.parts)
+        xs, ys, counts = stack_clients(
+            self.data.x, self.data.y,
+            [self.data.parts[int(u) % n_parts] for u in draw.ids],
+            n_pad=self.data.n_pad)
         return Cohort(x=xs, y=ys, counts=counts, view=view,
-                      available=int(avail.sum()))
+                      available=draw.available, regions=draw.region)
 
     # ------------------------------------------------------------------
     def replan_view(self, t: int, budget_left: float,
                     eta_tail) -> AnalysisConfig:
-        """Remaining-horizon planning config re-estimated from the fleet's
+        """Remaining-horizon planning config re-estimated from the
         currently-reachable population (the online re-planning hook).
 
-        ``U_round`` carries the availability model's expected-reachable
-        forecast for every remaining round (clipped to the plannable cohort
-        size), so the re-solve steers deadline budget into the rounds that
-        will run with few contributors; ``U`` is its mean, and ``P``/``B``
-        are quantile-spaced over the devices reachable in the current round
-        (falling back to the whole fleet before the first draw) — tracking
-        both how MANY devices the rounds can plan for and WHICH compute-rate
-        spread they bring.
+        ``U_round`` carries the population's expected-reachable forecast
+        for every remaining round (clipped to the plannable cohort size),
+        so the re-solve steers deadline budget into the rounds that will
+        run with few contributors; ``U`` is its mean, and ``P``/``B`` come
+        from ``Population.replan_profile`` — quantile-spaced over the
+        devices reachable in the current round for materialized
+        populations, the fitted reference spread for parametric ones.
         """
         eta_tail = np.asarray(eta_tail, np.float32)
         rounds_left = len(eta_tail)
-        exp = self.availability.expected_reachable(t, rounds_left)
+        exp = self.population.expected_reachable(t, rounds_left)
         U_round = np.clip(np.round(exp), 2.0,
                           float(self.cohort_size)).astype(np.float32)
         U_est = int(np.clip(round(float(U_round.mean())), 2,
                             self.cohort_size))
-        pool = (np.flatnonzero(self._last_avail)
-                if self._last_avail is not None and self._last_avail.any()
-                else np.arange(self.fleet.size))
-        q = (np.arange(U_est) + 0.5) / U_est
-        order = pool[np.argsort(self.fleet.P[pool])]
-        pick = order[np.clip((q * len(order)).astype(int), 0,
-                             len(order) - 1)]
+        P, B = self.population.replan_profile(U_est)
         sigma2 = np.full((U_est,), float(np.mean(self.ref.sigma2)),
                          np.float32)
         return dataclasses.replace(
             self.ref, U=U_est, R=rounds_left, T_max=float(budget_left),
-            eta=eta_tail, P=self.fleet.P[pick].copy(),
-            B=self.fleet.B[pick].copy(), sigma2=sigma2, U_round=U_round)
+            eta=eta_tail, P=P, B=B, sigma2=sigma2, U_round=U_round)
 
 
-def run_fleet(model: ModelAPI, fleet: Fleet, availability: AvailabilityModel,
-              data: FleetData, *, method: str = "adel", rounds: int = 20,
+def run_fleet(model: ModelAPI, population: Union[Population, Fleet, str,
+                                                 dict, PopulationSpec] = None,
+              availability: Optional[AvailabilityModel] = None,
+              data: Optional[FleetData] = None, *,
+              fleet: Optional[Fleet] = None,
+              method: str = "adel", rounds: int = 20,
               cohort_size: int = 32, cohort_strategy: str = "uniform",
               exec: Optional[ExecSpec] = None,
               backend=None, chunk_size: Optional[int] = None, mesh=None,
@@ -178,11 +234,25 @@ def run_fleet(model: ModelAPI, fleet: Fleet, availability: AvailabilityModel,
               replan=None, donate: Optional[bool] = None,
               compression=None, agg_impl: Optional[str] = None,
               eval_metrics=None, tracer=None) -> tuple:
-    """Run up to ``rounds`` federated rounds against a simulated fleet.
+    """Run up to ``rounds`` federated rounds against a simulated population.
 
     Returns ``(params, History)``; the History carries the same fields as
     :func:`repro.fl.server.run_federated` plus per-round reachable-device
     counts, so ``benchmarks/report.py`` consumes it unchanged.
+
+    WHO the rounds run against is one
+    :class:`repro.fleet.population.Population` — ``run_fleet(model,
+    population, data)`` — or anything
+    :func:`repro.fleet.population.make_population` accepts (a spec string
+    such as ``"parametric:longtail-mobile"``, a dict, a
+    ``PopulationSpec``). The legacy ``run_fleet(model, fleet,
+    availability, data)`` positional signature and the ``fleet=`` kwarg
+    remain as deprecated aliases resolved onto
+    ``MaterializedPopulation(fleet, availability)`` with bit-identical
+    trajectories (DeprecationWarning; ValueError under
+    ``REPRO_EXEC_STRICT=1``). Device ids index ``data.parts`` modulo the
+    shard count, so parametric million-device populations train against a
+    bounded shard set.
 
     HOW rounds execute is one :class:`repro.fl.spec.ExecSpec` (``exec=``),
     resolved against this front-end's base spec (``backend="chunked"``);
@@ -191,9 +261,11 @@ def run_fleet(model: ModelAPI, fleet: Fleet, availability: AvailabilityModel,
     both forms funnel through :meth:`ExecSpec.resolve` and give
     bit-identical trajectories. The chunked backend's chunk is clamped to
     the cohort size; the buffered backend's staleness knobs (``lam`` /
-    ``max_age`` / ``buffer_cap``) ride on the spec. The spec's
-    ``compression`` is also priced into the Problem-2 planning config
-    (``comm_scale``) before solving.
+    ``max_age`` / ``buffer_cap``) and the hierarchical backend's
+    ``regions`` fallback ride on the spec (cohort region ids from the
+    population take precedence). The spec's ``compression`` is also
+    priced into the Problem-2 planning config (``comm_scale``) before
+    solving.
 
     ``replan`` (None | trigger name | ``repro.core.replan.ReplanConfig``)
     enables availability-aware online re-solving of the remaining-horizon
@@ -208,12 +280,16 @@ def run_fleet(model: ModelAPI, fleet: Fleet, availability: AvailabilityModel,
     telemetry — phase spans, counters, and the per-round clock-model
     ledger summarized into ``History.telemetry``.
     """
-    if fleet.size != len(data.parts):
-        raise ValueError(f"fleet size {fleet.size} != data shards "
-                         f"{len(data.parts)}")
-    if availability.n != fleet.size:
-        raise ValueError(f"availability model over {availability.n} devices "
-                         f"!= fleet size {fleet.size}")
+    if fleet is not None:
+        if population is not None:
+            raise TypeError("run_fleet: pass either population or the "
+                            "deprecated fleet=, not both")
+        population = fleet
+    population, data = _legacy_fleet_shim(population, availability, data,
+                                          where="run_fleet")
+    if data is None or not len(data.parts):
+        raise ValueError("run_fleet: data must be a FleetData with at least "
+                         "one shard")
     if T_max is None:
         # same calibration as the seed benchmarks: avg depth ~50% of layers
         T_max = rounds * model.L * 0.5
@@ -227,7 +303,7 @@ def run_fleet(model: ModelAPI, fleet: Fleet, availability: AvailabilityModel,
         spec = dataclasses.replace(
             spec, chunk_size=min(spec.chunk_size, cohort_size))
 
-    ref = reference_config(fleet, U=cohort_size, L=model.L, R=rounds,
+    ref = reference_config(population, U=cohort_size, L=model.L, R=rounds,
                            T_max=T_max, eta0=eta0, eta_decay=eta_decay,
                            seed=seed)
     comp = spec.compression
@@ -254,15 +330,17 @@ def run_fleet(model: ModelAPI, fleet: Fleet, availability: AvailabilityModel,
     policy: Policy = make_policy(method, ref, schedule=schedule)
 
     if s_max is None:
-        # probe against a synthetic best-case device (fleet-max P, fleet-min
-        # B): per-device batch sizes (ADEL's B3) grow with P_u and shrink
-        # with B_u, and the baselines' fixed batch uses the cohort MEANS —
-        # both are maximized by this one-device view, so no realized cohort
-        # (power-of-choice top picks, or a lucky tiny cohort under churn)
-        # can plan a batch that sample_client_batches would silently clip
+        # probe against a synthetic best-case device (population-max P,
+        # population-min B): per-device batch sizes (ADEL's B3) grow with
+        # P_u and shrink with B_u, and the baselines' fixed batch uses the
+        # cohort MEANS — both are maximized by this one-device view, so no
+        # realized cohort (power-of-choice top picks, or a lucky tiny
+        # cohort under churn) can plan a batch that sample_client_batches
+        # would silently clip
+        P_best, B_best = population.best_profile()
         view_best = dataclasses.replace(
-            ref, U=1, P=np.asarray([fleet.P.max()], np.float32),
-            B=np.asarray([fleet.B.min()], np.float32),
+            ref, U=1, P=np.asarray([P_best], np.float32),
+            B=np.asarray([B_best], np.float32),
             sigma2=np.asarray([float(np.mean(ref.sigma2))], np.float32))
         # memory bound: batches are drawn with replacement, so allow up to
         # 4x the largest shard before clipping a (rare) extreme plan — every
@@ -273,7 +351,7 @@ def run_fleet(model: ModelAPI, fleet: Fleet, availability: AvailabilityModel,
     s_max = max(s_max, 2)
 
     runtime = RoundRuntime(model, policy, exec=spec, tracer=tracer)
-    source = FleetCohortSource(fleet, availability, data, ref,
+    source = FleetCohortSource(population, data=data, ref=ref,
                                cohort_size=cohort_size,
                                strategy=cohort_strategy, seed=seed)
     test_x, test_y = jnp.asarray(data.x_test), jnp.asarray(data.y_test)

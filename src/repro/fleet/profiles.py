@@ -29,8 +29,8 @@ from typing import Callable
 
 import numpy as np
 
-__all__ = ["Fleet", "PRESETS", "preset", "make_fleet", "fleet_from_config",
-           "load_trace", "save_trace", "load_mobiperf"]
+__all__ = ["Fleet", "PRESETS", "preset", "make_fleet", "make_population",
+           "fleet_from_config", "load_trace", "save_trace", "load_mobiperf"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,7 +133,29 @@ def fleet_from_config(fc) -> Fleet:
     """Build a fleet from a :class:`repro.configs.FleetConfig` block."""
     if fc.trace_path:
         return load_trace(fc.trace_path)
+    if fc.preset not in PRESETS:
+        # an explicit error here (not just make_fleet's KeyError) so config
+        # typos name the config field AND the registry
+        raise ValueError(
+            f"FleetConfig.preset {fc.preset!r} is not a registered fleet "
+            f"preset; registered presets: {sorted(PRESETS)}")
     return make_fleet(fc.preset, fc.size, seed=fc.seed)
+
+
+def make_population(spec, **kwargs):
+    """Unified population factory (presets, traces, MobiPerf logs, and
+    lazy parametric populations behind one spec).
+
+    A convenience re-export of
+    :func:`repro.fleet.population.make_population` so the three fleet
+    constructors (:func:`make_fleet`, :func:`load_trace`,
+    :func:`load_mobiperf`) share one front door keyed by a spec
+    string/dict — see :class:`repro.fleet.population.PopulationSpec` for
+    the source forms. Imported lazily: ``population`` depends on this
+    module.
+    """
+    from repro.fleet.population import make_population as _make_population
+    return _make_population(spec, **kwargs)
 
 
 def save_trace(fleet: Fleet, path: str) -> str:

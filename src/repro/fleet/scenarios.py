@@ -24,9 +24,8 @@ from repro.configs.base import (CompressionConfig, ExecSpec, FleetConfig,
 from repro.core.compression import make_compression
 from repro.core.replan import TRIGGERS
 from repro.data.synthetic import make_image_dataset
-from repro.fleet.availability import make_availability
 from repro.fleet.engine import partition_fleet, run_fleet
-from repro.fleet.profiles import fleet_from_config
+from repro.fleet.population import PopulationSpec
 from repro.models.paper_models import make_cnn, make_mlp
 
 __all__ = ["Scenario", "SCENARIOS", "get_scenario", "run_scenario"]
@@ -53,14 +52,14 @@ class Scenario:
 def _scn(name, preset, size, availability, akw=(), method="adel",
          strategy="uniform", alpha=0.5, note="", cohort=32,
          replan=ReplanConfig(), compression=CompressionConfig(),
-         exec=None, **kw) -> Scenario:
+         exec=None, population=None, regions=1, **kw) -> Scenario:
     return Scenario(
         name=name, method=method, alpha=alpha, note=note,
         fleet=FleetConfig(preset=preset, size=size, availability=availability,
                           availability_kwargs=tuple(akw),
                           cohort_strategy=strategy, cohort_size=cohort,
                           replan=replan, compression=compression,
-                          exec=exec),
+                          exec=exec, population=population, regions=regions),
         **kw)
 
 
@@ -131,6 +130,15 @@ SCENARIOS = {s.name: s for s in [
          note="reduced LM arch on synthetic token streams against a churny "
               "fleet — the task-adapter path: same RoundRuntime, LM cohort "
               "source + token-loss eval via repro.fl.tasks"),
+    _scn("longtail-mobile-1m-hierarchical", "longtail-mobile", 1_000_000,
+         "bernoulli", akw=(("rate", 0.7),),
+         population="parametric:longtail-mobile", regions=4,
+         exec=ExecSpec(backend="hierarchical", regions=4),
+         rounds=6,
+         note="one million lazily-drawn devices (parametric population, "
+              "O(cohort) per round) aggregated through 4 edge regions: "
+              "per-region partials against global counts, one global Eq. 5 "
+              "fold — the two-tier topology of planet-scale deployments"),
 ]}
 
 
@@ -145,6 +153,7 @@ def run_scenario(scn: Scenario, *, rounds: Optional[int] = None,
                  cohort_size: Optional[int] = None,
                  exec: Optional[ExecSpec] = None,
                  backend: Optional[str] = None,
+                 population: Optional[PopulationSpec] = None,
                  replan=None, replan_every: Optional[int] = None,
                  compression=None, topk_frac: Optional[float] = None,
                  seed: int = 0,
@@ -158,11 +167,15 @@ def run_scenario(scn: Scenario, *, rounds: Optional[int] = None,
     execution spec wholesale; the ``backend`` / ``compression`` /
     ``topk_frac`` kwargs remain as deprecated aliases layered on the
     FleetConfig's resolved spec (:meth:`FleetConfig.exec_spec`) through
-    the same :meth:`ExecSpec.resolve` path. ``replan`` (trigger name or
-    ``ReplanConfig``) and ``replan_every`` override the FleetConfig's
-    online re-planning block. ``events`` writes the structured telemetry
-    stream (phase spans, clock-model ledger, the buffered backend's carry
-    columns) to a JSONL file for ``python -m repro.obs.timeline``;
+    the same :meth:`ExecSpec.resolve` path. ``population``
+    (:class:`repro.fleet.population.PopulationSpec` or a source string)
+    likewise overrides WHO the scenario runs against wholesale
+    (:meth:`FleetConfig.population_spec` is the base). ``replan`` (trigger
+    name or ``ReplanConfig``) and ``replan_every`` override the
+    FleetConfig's online re-planning block. ``events`` writes the
+    structured telemetry stream (phase spans, clock-model ledger, the
+    buffered backend's carry columns, the hierarchical backend's region
+    census) to a JSONL file for ``python -m repro.obs.timeline``;
     ``tracer`` passes an already-built :class:`repro.obs.Tracer` instead
     (the caller keeps ownership — it is not closed here)."""
     fc = scn.fleet
@@ -187,9 +200,19 @@ def run_scenario(scn: Scenario, *, rounds: Optional[int] = None,
                                                   top_k=float(topk_frac)))
     rounds = scn.rounds if rounds is None else rounds
 
-    fleet = fleet_from_config(fc)
-    avail = make_availability(fc.availability, fleet.size,
-                              seed=fc.seed + seed, **fc.availability_dict())
+    pspec = fc.population_spec()
+    if population is not None:
+        pspec = (population if isinstance(population, PopulationSpec)
+                 else PopulationSpec.resolve(base=pspec, source=population))
+    # availability seeded with fc.seed + run seed, exactly the legacy
+    # make_availability call — bit-identical trajectories through the
+    # Population front door
+    pop = pspec.build(avail_seed=fc.seed + seed)
+    # virtual data sharding (device id mod shards) caps the partition at
+    # 1024 shards, so million-device populations never materialize
+    # per-device arrays; populations at or below the cap keep the legacy
+    # one-shard-per-device layout
+    n_shards = min(pop.size, 1024)
     eval_m = None
     if scn.model == "lm":
         # task-adapter path: the same runtime trains a reduced LM arch on
@@ -199,14 +222,14 @@ def run_scenario(scn: Scenario, *, rounds: Optional[int] = None,
                                     make_lm_model)
         arch_cfg = get_config(scn.arch).reduced()
         model = make_lm_model(arch_cfg)
-        data = lm_fleet_data(arch_cfg, fleet.size, seq=32,
+        data = lm_fleet_data(arch_cfg, n_shards, seq=32,
                              rows_per_device=16, seed=seed)
         eval_m = lm_eval_metrics
     else:
         x_tr, y_tr, x_te, y_te = make_image_dataset(
             "mnist", n_train=scn.n_train, n_test=scn.n_test, seed=seed,
             noise_std=1.0)
-        data = partition_fleet(x_tr, y_tr, x_te, y_te, fleet.size,
+        data = partition_fleet(x_tr, y_tr, x_te, y_te, n_shards,
                                alpha=scn.alpha, seed=seed)
         model = make_cnn() if scn.model == "cnn" else make_mlp()
 
@@ -216,7 +239,7 @@ def run_scenario(scn: Scenario, *, rounds: Optional[int] = None,
     t0 = obs.now()
     try:
         _, hist = run_fleet(
-            model, fleet, avail, data, method=scn.method, rounds=rounds,
+            model, pop, data=data, method=scn.method, rounds=rounds,
             cohort_size=fc.cohort_size, cohort_strategy=fc.cohort_strategy,
             exec=spec, eta0=scn.eta0,
             solver_steps=solver_steps, eval_every=eval_every, seed=seed,
@@ -230,8 +253,10 @@ def run_scenario(scn: Scenario, *, rounds: Optional[int] = None,
     if events is not None:
         out["events_path"] = os.path.abspath(events)
     out["scenario"] = scn.name
-    out["fleet"] = fleet.describe()
-    out["availability"] = avail.describe()
+    desc = pop.describe()
+    out["fleet"] = desc["fleet"]
+    out["availability"] = desc["availability"]
+    out["population"] = pspec.as_dict()
     out["cohort"] = {"size": fc.cohort_size, "strategy": fc.cohort_strategy}
     out["backend"] = spec.backend
     out["replan"] = dataclasses.asdict(fc.replan)
@@ -261,7 +286,6 @@ def main(argv=None) -> None:
     ap.add_argument("--list", action="store_true", help="list scenarios")
     ap.add_argument("--run", default=None, metavar="NAME")
     ap.add_argument("--rounds", type=int, default=None)
-    ap.add_argument("--fleet-size", type=int, default=None)
     ap.add_argument("--cohort", type=int, default=None)
     ap.add_argument("--replan", default=None, choices=list(TRIGGERS),
                     help="online re-planning trigger override "
@@ -273,6 +297,9 @@ def main(argv=None) -> None:
     # --topk-frac / --agg-impl / --lam / ...) — one surface with
     # repro.launch.train, derived from repro.fl.spec.ExecSpec
     ExecSpec.add_cli_args(ap)
+    # the shared population flag block (--population / --fleet-size /
+    # --availability / --regions) — repro.fleet.population.PopulationSpec
+    PopulationSpec.add_cli_args(ap)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--solver-steps", type=int, default=600)
     ap.add_argument("--events", default=None, metavar="PATH",
@@ -304,8 +331,13 @@ def main(argv=None) -> None:
     except KeyError as e:
         ap.error(str(e.args[0]))
     spec = ExecSpec.from_cli(args, base=scn.fleet.exec_spec())
-    res = run_scenario(scn, rounds=args.rounds, fleet_size=args.fleet_size,
-                       cohort_size=args.cohort, exec=spec,
+    pop_flags = (args.population, args.fleet_size, args.availability,
+                 args.regions)
+    pspec = (PopulationSpec.from_cli(args,
+                                     base=scn.fleet.population_spec())
+             if any(v is not None for v in pop_flags) else None)
+    res = run_scenario(scn, rounds=args.rounds,
+                       cohort_size=args.cohort, exec=spec, population=pspec,
                        replan=args.replan, replan_every=args.replan_every,
                        seed=args.seed, solver_steps=args.solver_steps,
                        verbose=not args.quiet, events=args.events)

@@ -41,6 +41,7 @@ from repro.core.types import AnalysisConfig
 from repro.fl.runtime import History, RoundRuntime, probe_s_max
 from repro.fl.spec import ExecSpec
 from repro.fl.tasks import lm_task
+from repro.fleet.population import PopulationSpec
 
 
 def run_training(arch: str, *, method: str = "adel", rounds: int = 40,
@@ -53,6 +54,7 @@ def run_training(arch: str, *, method: str = "adel", rounds: int = 40,
                  mesh=None, replan=None, local_iters: int | None = None,
                  donate: bool | None = None,
                  compression=None, agg_impl: str | None = None,
+                 population=None,
                  s_max_cap: int = 32, eval_every: int | None = None,
                  ckpt: str | None = None, ckpt_every: int | None = None,
                  verbose: bool = True, tracer=None) -> tuple[object, History]:
@@ -78,6 +80,15 @@ def run_training(arch: str, *, method: str = "adel", rounds: int = 40,
     R/4) through the runtime's ``on_round`` hook, ``tracer`` a
     :class:`repro.obs.Tracer` for structured telemetry (phase spans +
     clock-model ledger in ``History.telemetry``).
+
+    ``population`` (None by default) switches WHO the LM trains against:
+    a :class:`repro.fleet.population.PopulationSpec` / source string /
+    :class:`Population` routes the run through
+    :func:`repro.fleet.engine.run_fleet` — per-round availability and
+    cohort sampling over a simulated device fleet (lazy parametric
+    populations scale to millions of devices) instead of the static
+    ``U``-client pool. The cohort size stays ``U``; ``ckpt`` is not
+    supported on the fleet path.
     """
     cfg = get_config(arch)
     if reduced:
@@ -87,6 +98,27 @@ def run_training(arch: str, *, method: str = "adel", rounds: int = 40,
                             mesh=mesh, local_iters=local_iters,
                             donate=donate, compression=compression,
                             agg_impl=agg_impl)
+    if population is not None:
+        if ckpt:
+            raise ValueError("ckpt= is not supported on the fleet "
+                             "(population=) path")
+        from repro.fl.tasks import (lm_eval_metrics, lm_fleet_data,
+                                    make_lm_model)
+        from repro.fleet.engine import run_fleet
+        from repro.fleet.population import make_population
+        pop = make_population(population)
+        model = make_lm_model(cfg)
+        # virtual sharding: device id mod shards, so million-device
+        # populations never materialize per-device token arrays
+        data = lm_fleet_data(cfg, min(pop.size, 1024), seq=seq,
+                             rows_per_device=max(n_seq // U, 4), seed=seed)
+        return run_fleet(
+            model, pop, data=data, method=method, rounds=rounds,
+            T_max=tmax, cohort_size=U, exec=spec, eta0=eta0,
+            solver=solver, solver_steps=solver_steps or 600,
+            eval_every=eval_every or max(rounds // 20, 1), seed=seed,
+            verbose=verbose, replan=replan, eval_metrics=lm_eval_metrics,
+            tracer=tracer)
     task = lm_task(cfg, U=U, seq=seq, n_seq=n_seq, seed=seed)
     acfg = AnalysisConfig.default(U=U, L=task.model.L, R=rounds, T_max=tmax,
                                   eta0=eta0, seed=seed)
@@ -193,6 +225,10 @@ def main(argv=None):
     # --no-donate / --compression / --agg-impl / --lam / ...) — one
     # surface with repro.fleet.scenarios, derived from repro.fl.spec
     ExecSpec.add_cli_args(ap)
+    # ... and the shared population flag block (--population / --fleet-size
+    # / --availability / --regions): any of these set routes the run over a
+    # simulated device fleet via repro.fleet.engine.run_fleet
+    PopulationSpec.add_cli_args(ap)
     ap.add_argument("--solver", default="adam",
                     choices=["adam", "trust-constr"])
     ap.add_argument("--ckpt", default=None)
@@ -211,6 +247,10 @@ def main(argv=None):
     if replan is not None and args.replan_every is not None:
         replan = ReplanConfig(trigger=replan, every=args.replan_every)
     spec = ExecSpec.from_cli(args)
+    pop_flags = (args.population, args.fleet_size, args.availability,
+                 args.regions)
+    pspec = (PopulationSpec.from_cli(args)
+             if any(v is not None for v in pop_flags) else None)
     tracer = obs.make_tracer(args.events)
     t0 = obs.now()
     with _profile(args.profile_dir):
@@ -219,7 +259,7 @@ def main(argv=None):
                                tmax=args.tmax, U=args.clients, eta0=args.eta0,
                                seq=args.seq, seed=args.seed,
                                reduced=args.reduced, solver=args.solver,
-                               exec=spec, replan=replan,
+                               exec=spec, replan=replan, population=pspec,
                                ckpt=args.ckpt, tracer=tracer)
     tracer.close()
     loss = hist.train_loss[-1]

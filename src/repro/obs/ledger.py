@@ -59,7 +59,8 @@ def expected_depth(lam: np.ndarray, L: int) -> np.ndarray:
 
 def round_record(*, t: int, plan, cfg, L: int, U_act: int, U_pad: int,
                  s_max: int, sim_total: float, wall_round_s: float,
-                 wall_total_s: float, available=None, carry=None) -> dict:
+                 wall_total_s: float, available=None, carry=None,
+                 regions=None) -> dict:
     """One clock-model ledger row for executed round ``t`` (0-based).
 
     ``plan`` is the round's :class:`repro.core.baselines.RoundPlan`;
@@ -78,6 +79,11 @@ def round_record(*, t: int, plan, cfg, L: int, U_act: int, U_pad: int,
     histogram ``{tau: count}`` of this round's folds. The columns land
     next to ``depth_real`` so the clock ledger shows where missed-deadline
     work went.
+
+    ``regions`` is the hierarchical backend's per-round region census
+    (``ExecutionBackend.last_regions``): ``regions`` — edge regions this
+    round actually folded, ``region_max`` — widest region census,
+    ``region_pad`` — the padded gather width each region executed at.
     """
     mask = np.asarray(plan.mask, np.float32)[:U_act]          # (U_act, L)
     S = np.asarray(plan.batch_sizes, np.float64)[:U_act]      # (U_act,)
@@ -111,6 +117,10 @@ def round_record(*, t: int, plan, cfg, L: int, U_act: int, U_pad: int,
         # and in-process rows aggregate identically
         rec["stale"] = {str(k): int(v)
                         for k, v in (carry.get("stale") or {}).items()}
+    if regions is not None:
+        rec["regions"] = int(regions.get("regions", 1))
+        rec["region_max"] = int(regions.get("region_max", U_act))
+        rec["region_pad"] = int(regions.get("region_pad", U_act))
     p = np.asarray(plan.p, np.float64)
     if p.size:
         rec["p1_pred"] = float(p[0])
@@ -201,4 +211,12 @@ def drift_summary(rows) -> dict:
                 stale_sum += int(n) * float(tau)
         if stale_n:
             out["stale_mean"] = round(stale_sum / stale_n, 4)
+    reg = [r for r in rows if "regions" in r]
+    if reg:
+        out["regions_max"] = int(max(r["regions"] for r in reg))
+        # gathered client-slots per real client: how much padded work the
+        # two-tier fold executed relative to a flat reduction
+        out["region_pad_overhead"] = round(float(np.mean(
+            [r["regions"] * r["region_pad"] / max(r["cohort"], 1)
+             for r in reg])), 4)
     return out

@@ -130,8 +130,10 @@ def render(records: list[dict], *, title: str = "") -> str:
                            "depth_pred", "depth_real", "p1_pred"], rows))
 
         # buffered (semi-async) runs add the carry-buffer columns: what
-        # missed-deadline work was folded in / still pending / dropped
+        # missed-deadline work was folded in / still pending / dropped;
+        # hierarchical runs add the per-round edge-region census
         carried = any("carried_in" in r for r in ledger)
+        has_regions = any("regions" in r for r in ledger)
         rows = []
         for r in ledger:
             row = [
@@ -154,11 +156,19 @@ def render(records: list[dict], *, title: str = "") -> str:
                              sorted(stale.items(),
                                     key=lambda kv: int(kv[0]))) or "—",
                 ]
+            if has_regions:
+                row += [
+                    str(r.get("regions", "—")),
+                    str(r.get("region_max", "—")),
+                    str(r.get("region_pad", "—")),
+                ]
             rows.append(row)
         headers = ["round", "avail", "cohort", "full", "missed", "zero",
                    "worst_miss", "batch real/pad"]
         if carried:
             headers += ["carry_in", "carry_out", "dropped", "stale tau:n"]
+        if has_regions:
+            headers += ["regions", "reg_max", "reg_pad"]
         out.append("\n-- stragglers / deadline misses --")
         out.append(_table(headers, rows))
 

@@ -1,0 +1,324 @@
+"""Population API: parametric-vs-materialized fidelity, cohort
+determinism, million-device O(cohort) sampling, hierarchical two-tier
+aggregation invariance, and legacy-vs-new ``run_fleet`` bit-identity."""
+import numpy as np
+import pytest
+
+from repro.configs.base import FleetConfig
+from repro.core.aggregation import aggregate_grads, aggregate_grads_chunk
+from repro.data.synthetic import make_image_dataset
+from repro.fl.spec import ExecSpec
+from repro.fleet.availability import make_availability
+from repro.fleet.engine import partition_fleet, reference_config, run_fleet
+from repro.fleet.population import (MaterializedPopulation,
+                                    ParametricPopulation, Population,
+                                    PopulationSpec, make_population)
+from repro.fleet.profiles import PRESETS, fleet_from_config, make_fleet
+from repro.models.paper_models import make_mlp
+
+
+@pytest.fixture(scope="module")
+def fleet_setup():
+    x_tr, y_tr, x_te, y_te = make_image_dataset(
+        "mnist", n_train=1000, n_test=250, seed=0, noise_std=1.0)
+    fleet = make_fleet("longtail-mobile", 200, seed=0)
+    data = partition_fleet(x_tr, y_tr, x_te, y_te, 200, alpha=0.5, seed=0)
+    return fleet, data
+
+
+# ---------------------------------------------------------------------------
+# parametric fidelity: lazy draws reproduce the preset's tier statistics
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("preset", sorted(PRESETS))
+def test_parametric_matches_preset_quantiles(preset):
+    """Lazy per-device draws reproduce the reference draw's recorded
+    P/B q05/q50/q95 per memory tier — the fleet_smoke contract stats."""
+    pop = ParametricPopulation(preset, 1_000_000, seed=0)
+    ref = make_fleet(preset, 4096, seed=0)
+    ids = np.arange(6000, dtype=np.int64) * 167         # spread over the pop
+    P, B, tier = pop.profiles(ids)
+    assert P.shape == B.shape == tier.shape == (6000,)
+    assert (P > 0).all() and (B > 0).all()
+    for k in np.unique(ref.tier):
+        sel, rsel = tier == k, ref.tier == k
+        if sel.sum() < 200:
+            continue
+        for drawn, refv in ((P[sel], ref.P[rsel]), (B[sel], ref.B[rsel])):
+            got = np.quantile(drawn, [0.05, 0.5, 0.95])
+            want = np.quantile(refv, [0.05, 0.5, 0.95])
+            np.testing.assert_allclose(got, want, rtol=0.30)
+    # tier mix matches the reference draw's
+    frac = np.bincount(tier, minlength=3) / len(tier)
+    want = np.bincount(ref.tier, minlength=3) / ref.size
+    np.testing.assert_allclose(frac, want, atol=0.05)
+
+
+def test_parametric_profiles_pure_in_device_id():
+    """A device's profile is a pure function of (seed, id): re-querying or
+    querying inside a different batch never changes it."""
+    pop = ParametricPopulation("bimodal-edge", 10**6, seed=3)
+    ids = np.asarray([7, 123_456, 999_999])
+    P1, B1, t1 = pop.profiles(ids)
+    P2, B2, t2 = ParametricPopulation("bimodal-edge", 10**6,
+                                      seed=3).profiles(ids)
+    np.testing.assert_array_equal(P1, P2)
+    np.testing.assert_array_equal(B1, B2)
+    np.testing.assert_array_equal(t1, t2)
+    Pb, _, _ = pop.profiles(np.arange(10**6 - 10, 10**6))
+    np.testing.assert_array_equal(Pb[-1], P1[-1])
+    # ... and a different seed gives a different population
+    P3, _, _ = ParametricPopulation("bimodal-edge", 10**6,
+                                    seed=4).profiles(ids)
+    assert not np.array_equal(P1, P3)
+
+
+# ---------------------------------------------------------------------------
+# cohort sampling: determinism + million-device scale
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", ["uniform", "power-of-choice",
+                                      "stratified"])
+def test_fixed_seed_identical_cohorts(strategy):
+    pop = ParametricPopulation("longtail-mobile", 500_000, seed=0,
+                               availability="bernoulli",
+                               availability_kwargs=(("rate", 0.7),))
+    draws1 = [pop.sample_cohort(t, np.random.default_rng([2077, 5]), U=16,
+                                strategy=strategy) for t in range(3)]
+    draws2 = [pop.sample_cohort(t, np.random.default_rng([2077, 5]), U=16,
+                                strategy=strategy) for t in range(3)]
+    for a, b in zip(draws1, draws2):
+        np.testing.assert_array_equal(a.ids, b.ids)
+        np.testing.assert_array_equal(a.P, b.P)
+        assert a.available == b.available
+
+
+def test_million_device_cohort_is_cohort_sized():
+    import time
+    pop = ParametricPopulation("longtail-mobile", 1_000_000, seed=0,
+                               availability="bernoulli",
+                               availability_kwargs=(("rate", 0.8),),
+                               regions=4)
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    draw = pop.sample_cohort(0, rng, U=64)
+    dt = time.perf_counter() - t0
+    assert dt < 1.0, f"million-device cohort draw took {dt:.2f}s"
+    assert draw.size == 64
+    assert len(np.unique(draw.ids)) == 64                # distinct devices
+    assert draw.ids.min() >= 0 and draw.ids.max() < 1_000_000
+    # Binomial(1e6, 0.8) concentrates hard around 800k
+    assert abs(draw.available - 800_000) < 5_000
+    np.testing.assert_array_equal(draw.region, draw.ids % 4)
+    # planning surface works without materializing the fleet
+    ref = reference_config(pop, U=16, L=4, R=5, T_max=20.0)
+    assert ref.P.shape == (16,) and (np.diff(ref.P) >= 0).all()
+    assert pop.expected_reachable(0, 3).shape == (3,)
+
+
+# ---------------------------------------------------------------------------
+# spec / constructor surface
+# ---------------------------------------------------------------------------
+
+def test_make_population_forms(fleet_setup):
+    fleet, _ = fleet_setup
+    # Population passthrough
+    pop = MaterializedPopulation(fleet)
+    assert make_population(pop) is pop
+    # bare Fleet wrap preserves the arrays bit-for-bit
+    wrapped = make_population(fleet)
+    assert isinstance(wrapped, MaterializedPopulation)
+    np.testing.assert_array_equal(wrapped.fleet.P, fleet.P)
+    # string source -> PopulationSpec.build
+    para = make_population("parametric:datacenter", size=10_000, regions=2)
+    assert isinstance(para, ParametricPopulation)
+    assert para.size == 10_000 and para.regions == 2
+    mat = make_population("uniform", size=64, availability="bernoulli",
+                          availability_kwargs=(("rate", 0.5),))
+    assert isinstance(mat, MaterializedPopulation) and mat.size == 64
+    # FleetConfig routes through the same spec
+    fc = FleetConfig(population="parametric:uniform", size=1000, regions=3)
+    spec = fc.population_spec()
+    assert spec.source == "parametric:uniform" and spec.regions == 3
+    assert spec.build().size == 1000
+
+
+def test_unknown_preset_lists_registered():
+    with pytest.raises(ValueError, match="registered presets"):
+        fleet_from_config(FleetConfig(preset="no-such-preset"))
+    with pytest.raises(ValueError, match="registered presets"):
+        make_population("parametric:no-such-preset", size=100)
+    with pytest.raises(ValueError, match="regions"):
+        PopulationSpec(source="uniform", regions=0)
+    with pytest.raises(TypeError, match="unknown"):
+        PopulationSpec.resolve(sise=100)
+
+
+def test_population_spec_resolve_precedence():
+    base = PopulationSpec(source="datacenter", size=300, regions=2)
+    # explicit overrides win over base; unset fields inherit
+    spec = PopulationSpec.resolve(base=base, size=900)
+    assert spec.source == "datacenter" and spec.size == 900
+    assert spec.regions == 2
+    # a full spec passes through untouched
+    assert PopulationSpec.resolve(base) is base
+
+
+# ---------------------------------------------------------------------------
+# legacy-vs-new run_fleet bit-identity + deprecation shims
+# ---------------------------------------------------------------------------
+
+def _legacy_run(fleet, data, **kw):
+    avail = make_availability("bernoulli", fleet.size, seed=7, rate=0.6)
+    with pytest.warns(DeprecationWarning):
+        return run_fleet(make_mlp(), fleet, avail, data, **kw)
+
+
+def test_legacy_positional_matches_population(fleet_setup):
+    """The deprecated (model, fleet, availability, data) signature and the
+    Population path produce byte-identical trajectories."""
+    fleet, data = fleet_setup
+    kw = dict(method="adel", rounds=4, cohort_size=12, chunk_size=6,
+              solver_steps=150, seed=0)
+    _, legacy = _legacy_run(fleet, data, **kw)
+    pop = MaterializedPopulation(
+        fleet, make_availability("bernoulli", fleet.size, seed=7, rate=0.6))
+    _, new = run_fleet(make_mlp(), pop, data=data, **kw)
+    assert legacy.rounds == new.rounds
+    assert legacy.available == new.available
+    np.testing.assert_array_equal(legacy.accuracy, new.accuracy)
+    np.testing.assert_array_equal(legacy.train_loss, new.train_loss)
+    np.testing.assert_array_equal(legacy.times, new.times)
+    np.testing.assert_array_equal(legacy.deadlines, new.deadlines)
+
+
+def test_legacy_shim_strict_mode(fleet_setup, monkeypatch):
+    fleet, data = fleet_setup
+    monkeypatch.setenv("REPRO_EXEC_STRICT", "1")
+    avail = make_availability("bernoulli", fleet.size, seed=7, rate=0.6)
+    with pytest.raises(ValueError, match="Population"):
+        run_fleet(make_mlp(), fleet, avail, data, rounds=1, cohort_size=4)
+
+
+# ---------------------------------------------------------------------------
+# hierarchical two-tier aggregation
+# ---------------------------------------------------------------------------
+
+def test_region_partition_aggregation_identity():
+    """Summing per-region partial aggregates (evaluated against GLOBAL
+    counts) equals the flat dense Eq. 5 fold — region count free."""
+    rng = np.random.default_rng(0)
+    U, L = 12, 4
+    grads = {"w": rng.normal(size=(U, L, 5)).astype(np.float32),
+             "b": rng.normal(size=(U, 3)).astype(np.float32)}
+    ids = {"w": np.arange(L, dtype=np.int32),
+           "b": np.asarray(2, np.int32)}
+    mask = (rng.random((U, L)) < 0.7).astype(np.float32)
+    p = np.asarray([0.1, 0.3, 0.2, 0.05], np.float32)
+    dense = aggregate_grads(grads, ids, mask, p)
+    counts = mask.sum(0)
+    for regions in (1, 3, 4):
+        rid = np.arange(U) % regions
+        acc = None
+        for g in range(regions):
+            sel = np.flatnonzero(rid == g)
+            part = aggregate_grads_chunk(
+                {k: v[sel] for k, v in grads.items()}, ids, mask[sel], p,
+                counts)
+            acc = part if acc is None else {
+                k: acc[k] + part[k] for k in acc}
+        for k in dense:
+            np.testing.assert_allclose(acc[k], dense[k], rtol=2e-5,
+                                       atol=2e-6)
+
+
+def test_hierarchical_single_region_bitexact_dense(fleet_setup):
+    """regions=1 must fall through to the dense round step — bit-exact."""
+    fleet, data = fleet_setup
+    hists = {}
+    for backend, regions in (("dense", 4), ("hierarchical", 1)):
+        pop = MaterializedPopulation(
+            fleet, make_availability("bernoulli", 200, seed=3, rate=0.6),
+            regions=1)
+        _, hists[backend] = run_fleet(
+            make_mlp(), pop, data=data, method="adel", rounds=3,
+            cohort_size=10, solver_steps=150, seed=0,
+            exec=ExecSpec(backend=backend, regions=regions))
+    a, b = hists["dense"], hists["hierarchical"]
+    assert a.available == b.available
+    np.testing.assert_array_equal(a.accuracy, b.accuracy)
+    np.testing.assert_array_equal(a.train_loss, b.train_loss)
+    np.testing.assert_array_equal(a.times, b.times)
+
+
+@pytest.mark.parametrize("method", ["adel", "heterofl"])
+def test_hierarchical_multi_region_equivalence(fleet_setup, method):
+    """4 edge regions vs flat dense: identical clock + cohort draws, same
+    learning trajectory up to float summation order."""
+    fleet, data = fleet_setup
+    hists = {}
+    for backend in ("dense", "hierarchical"):
+        pop = MaterializedPopulation(
+            fleet, make_availability("markov", 200, seed=1,
+                                     p_off_to_on=0.4, p_on_to_off=0.1),
+            regions=4)
+        _, hists[backend] = run_fleet(
+            make_mlp(), pop, data=data, method=method, rounds=4,
+            cohort_size=16, solver_steps=150, seed=0, eta0=1.0,
+            exec=ExecSpec(backend=backend, regions=4))
+    a, b = hists["dense"], hists["hierarchical"]
+    assert a.rounds == b.rounds and a.available == b.available
+    np.testing.assert_allclose(a.times, b.times, rtol=1e-6)
+    np.testing.assert_allclose(a.accuracy, b.accuracy, atol=0.015)
+    np.testing.assert_allclose(a.train_loss, b.train_loss, rtol=0.02,
+                               atol=0.02)
+
+
+def test_hierarchical_region_telemetry(fleet_setup):
+    """The runtime ledger records regions/region_max/region_pad when the
+    hierarchical backend runs."""
+    from repro import obs
+    fleet, data = fleet_setup
+    pop = MaterializedPopulation(
+        fleet, make_availability("bernoulli", 200, seed=3, rate=0.7),
+        regions=4)
+    tracer = obs.Tracer()
+    _, hist = run_fleet(make_mlp(), pop, data=data, method="adel", rounds=3,
+                        cohort_size=16, solver_steps=150, seed=0,
+                        exec=ExecSpec(backend="hierarchical", regions=4),
+                        tracer=tracer)
+    rows = tracer.rounds
+    assert rows and all("regions" in r for r in rows)
+    for r in rows:
+        assert 1 <= r["regions"] <= 4
+        assert r["region_pad"] >= r["region_max"]
+
+
+def test_parametric_end_to_end_o_cohort(fleet_setup):
+    """A million-device parametric population drives run_fleet at
+    O(cohort): virtual data shards, hierarchical fold, walltime bounded."""
+    import time
+    _, data = fleet_setup
+    pop = make_population("parametric:longtail-mobile", size=1_000_000,
+                          availability="bernoulli",
+                          availability_kwargs=(("rate", 0.7),), regions=4)
+    t0 = time.perf_counter()
+    _, hist = run_fleet(make_mlp(), pop, data=data, method="adel", rounds=3,
+                        cohort_size=16, solver_steps=150, seed=0,
+                        exec=ExecSpec(backend="hierarchical", regions=4))
+    dt = time.perf_counter() - t0
+    assert len(hist.accuracy) == 3
+    assert all(600_000 < a < 800_000 for a in hist.available)
+    assert dt < 120.0, f"1M-device 3-round run took {dt:.1f}s"
+
+
+def test_population_protocol_replan_surface():
+    """The replan hooks every trigger needs exist on both implementations."""
+    for pop in (make_population("uniform", size=128),
+                make_population("parametric:uniform", size=100_000)):
+        assert isinstance(pop, Population)
+        P, B = pop.replan_profile(8)
+        assert P.shape == B.shape == (8,)
+        assert pop.rate_max >= P.max() or pop.rate_max > 0
+        d = pop.describe()
+        assert {"fleet", "availability", "regions"} <= set(d)
