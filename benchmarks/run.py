@@ -27,7 +27,8 @@ import time
 
 SUITE_NAMES = ("fig2_mnist", "fig3_cifar", "fig4_robustness",
                "table2_budgets", "roofline", "fleet_smoke", "fleet_scale",
-               "backend_sweep", "replan_sweep", "async_sweep", "lm_smoke")
+               "backend_sweep", "replan_sweep", "async_sweep", "lm_smoke",
+               "pipeline_sweep")
 
 # metric-field classification for the regression gate
 _TIME_KEYS = ("wall_s", "wall_per_round_s")
@@ -40,8 +41,8 @@ _BYTES_KEYS = ("bytes_per_round_logical", "bytes_per_round_wire")
 def _suites() -> dict:
     from benchmarks import (async_sweep, backend_sweep, fig2_mnist,
                             fig3_cifar, fig4_robustness, fleet_scale,
-                            fleet_smoke, lm_smoke, replan_sweep, roofline,
-                            table2_budgets)
+                            fleet_smoke, lm_smoke, pipeline_sweep,
+                            replan_sweep, roofline, table2_budgets)
     return {
         "fig2_mnist": fig2_mnist.run,
         "fig3_cifar": fig3_cifar.run,
@@ -54,6 +55,7 @@ def _suites() -> dict:
         "replan_sweep": replan_sweep.run,
         "async_sweep": async_sweep.run,
         "lm_smoke": lm_smoke.run,
+        "pipeline_sweep": pipeline_sweep.run,
     }
 
 
@@ -248,6 +250,18 @@ def _derive(name: str, result: dict) -> str:
                 if isinstance(row, dict) and "final_loss" in row:
                     pieces.append(f"{backend}:{row['final_loss']:.3f}")
             return "token loss " + " ".join(pieces)
+        if name == "pipeline_sweep":
+            pieces = []
+            for cfg in ("lm", "fleet"):
+                row = result.get(cfg)
+                if not isinstance(row, dict) or "prefetch" not in row:
+                    continue
+                pieces.append(
+                    f"{cfg}:{row['serial']['wall_per_round_s']:.2f}->"
+                    f"{row['prefetch']['wall_per_round_s']:.2f}s/round"
+                    f"(+{row.get('speedup_pct', 0):.0f}%,"
+                    f"ovl {100 * row['prefetch']['overlap_frac']:.0f}%)")
+            return "serial->prefetch " + " ".join(pieces)
         if name == "replan_sweep":
             pieces = []
             for scn, row in result.items():

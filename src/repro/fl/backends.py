@@ -223,6 +223,40 @@ class ExecutionBackend:
         instance can drive several independent trainings. Stateless
         backends are a no-op."""
 
+    def warm_up(self, params: PyTree, xb, yb, wb, mask, p, eta, *,
+                bias_correct: bool = True, wmasks: PyTree | None = None,
+                ctx=None) -> float:
+        """AOT warm-up: trace + compile + execute the round step once for
+        the exact argument shapes/dtypes, leaving ``params`` and all
+        cross-round state untouched. Returns seconds spent.
+
+        ``jit.lower(...).compile()`` populates XLA's executable cache but
+        NOT jax's jit dispatch cache — the first real call would still pay
+        the full dispatch-path setup — so the warm-up EXECUTES the real
+        ``run_round`` on a private zero-filled copy of ``params``
+        (donation-safe) with the caller's round arrays, discards the
+        result, and calls :meth:`reset_state` to erase anything the dummy
+        round banked (the buffered carry slots, the hierarchical region
+        census). Host-side branch decisions (buffered's bank-or-not,
+        hierarchical's region split) read the real ``mask``/``ctx``
+        values, so the variant round 0 will run is the variant that gets
+        compiled. Telemetry is suppressed for the dummy round.
+        """
+        t0 = obs.now()
+        dummy = jax.tree.map(lambda a: jnp.zeros(jnp.shape(a),
+                                                 jnp.result_type(a)), params)
+        tracer = self.tracer
+        self.tracer = obs.NULL_TRACER
+        try:
+            out = self.run_round(dummy, xb, yb, wb, mask, p, eta,
+                                 bias_correct=bias_correct, wmasks=wmasks,
+                                 ctx=ctx)
+            jax.block_until_ready(out)
+        finally:
+            self.tracer = tracer
+            self.reset_state()
+        return obs.now() - t0
+
     def run_round(self, params: PyTree, xb, yb, wb, mask, p, eta, *,
                   bias_correct: bool, wmasks: PyTree | None = None,
                   ctx=None) -> PyTree:

@@ -58,9 +58,46 @@ vs simulated clock vs measured wall time vs the exponential model's
 predicted straggler depths). ``verbose=True`` renders from the same
 records via :mod:`repro.obs.format`, so printed and recorded numbers
 cannot drift apart; the aggregate lands in ``History.telemetry``.
+
+Pipelined execution (``ExecSpec.pipeline``) — the round loop runs in one
+of two modes, with bit-identical trajectories:
+
+* ``"serial"`` (default): plan round t, execute round t, repeat — the
+  classic loop.
+* ``"prefetch"``: a one-round-lookahead driver. Every host-only phase of
+  round t+1 — ``cohort`` sampling, the replan trigger + re-solve, the
+  PRNG key splits, the policy ``plan``, the ``T_max`` stop check, and the
+  minibatch ``stack`` (host numpy + H2D transfer) — runs on a worker
+  thread while round t's ``backend.run_round`` is in flight on the
+  device. Those phases read only sequential host state (source RNG,
+  schedule, replanner, the PLANNED clock — ``plan.elapsed`` is known
+  before execution), never round t's device results, which is what makes
+  the speculation exact. The two things that do read live state stay on
+  the main thread at consume time: HeteroFL width masks (need current
+  ``params``) and all telemetry emission (the worker only collects
+  timings; see :meth:`repro.obs.Tracer.span_record`). The prefetcher
+  keeps at most two rounds of stacked ``(xb, yb, wb, mask)`` buffers
+  alive (the in-flight round's and the prefetched round's — a double
+  buffer whose slots are dropped right after dispatch), and it never
+  touches ``params``, so round-step donation stays safe. After a skipped
+  round or a replan event the next round is planned inline (serial
+  fallback) — those rounds change the planning state the speculation
+  would have had to guess. Prefetch mode also AOT-warms the backend's
+  round step and the eval step (``backend.warm_up`` + one dummy eval)
+  before dispatching round 0, so first-round trace/compile cost moves
+  out of the measured round loop. Eval becomes non-blocking in BOTH
+  modes: ``eval_fn`` returns device scalars that sit in a pending ring
+  and are materialized to ``History`` floats only at report boundaries
+  (a rendered eval record, a replan event, an ``on_round`` hook, end of
+  run) — the only hard syncs left are the ones an active tracer
+  explicitly inserts. New counters: ``h2d_bytes`` (stacked bytes shipped
+  per round), ``prefetch_overlap_s`` (worker planning time hidden behind
+  device execution), ``dispatch_wait_s`` (main-thread stalls on the
+  prefetch future), ``warm_up_s``.
 """
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
 from typing import Any, Callable, Optional
 
@@ -140,24 +177,32 @@ def _jit_predict(model: ModelAPI):
 
 
 def evaluate(model: ModelAPI, params: PyTree, x: jnp.ndarray, y: jnp.ndarray,
-             batch: int = 512) -> float:
+             batch: int = 512) -> jnp.ndarray:
+    """Full test-set accuracy as a DEVICE scalar (no host sync).
+
+    Per-batch correct counts accumulate on-device, so every predict batch
+    dispatches asynchronously and the caller decides when (if ever) to
+    block — the round runtime defers the conversion to report boundaries.
+    ``float()`` the result for a Python number.
+    """
     n = x.shape[0]
-    correct = 0
     predict = _jit_predict(model)
+    correct = jnp.int32(0)
     for i in range(0, n, batch):
         logits = predict(params, x[i:i + batch])
-        correct += int((jnp.argmax(logits, -1) == y[i:i + batch]).sum())
-    return correct / n
+        correct = correct + (jnp.argmax(logits, -1) == y[i:i + batch]).sum()
+    return correct / float(n)
 
 
 def eval_metrics(model: ModelAPI, params: PyTree, test_x: jnp.ndarray,
                  test_y: jnp.ndarray, *, loss_samples: int = 256
-                 ) -> tuple[float, float]:
-    """(accuracy over the full test set, mean loss over a fixed head)."""
+                 ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(accuracy over the full test set, mean loss over a fixed head),
+    both device scalars — no host sync (see :func:`evaluate`)."""
     acc = evaluate(model, params, test_x, test_y)
     n = min(loss_samples, int(test_y.shape[0]))
-    loss = float(model.loss(params, test_x[:n], test_y[:n],
-                            jnp.full((n,), 1.0 / n, jnp.float32)))
+    loss = model.loss(params, test_x[:n], test_y[:n],
+                      jnp.full((n,), 1.0 / n, jnp.float32))
     return acc, loss
 
 
@@ -272,6 +317,36 @@ def _round_context(t: int, elapsed: float, plan: RoundPlan, view_cfg,
                         lam=lam, layer_s=layer_s, B=B, regions=regions)
 
 
+@dataclasses.dataclass
+class _Prepared:
+    """One planned round from the sequential host planner — everything the
+    dispatch step needs, plus the worker-side telemetry to re-emit on the
+    main thread. ``kind`` is ``"round"`` (executable), ``"skip"`` (empty
+    cohort), or ``"stop"`` (the T_max budget check failed). The stacked
+    device arrays are one slot of the prefetch double buffer;
+    :meth:`release` drops them right after dispatch."""
+
+    t: int
+    kind: str
+    spans: list                        # [(phase, t0, dur_s, attrs)]
+    t_start: float = 0.0               # worker wall window, for the
+    t_end: float = 0.0                 # prefetch_overlap_s counter
+    replan: Optional[tuple] = None     # (event record dict, solver steps)
+    cohort: Any = None
+    plan: Any = None
+    xb: Any = None
+    yb: Any = None
+    wb: Any = None
+    mask: Any = None
+    U_act: int = 0
+    view_cfg: Any = None
+    ctx: Any = None
+    h2d_bytes: int = 0
+
+    def release(self) -> None:
+        self.cohort = self.xb = self.yb = self.wb = self.mask = None
+
+
 class RoundRuntime:
     """The single federated round loop, parameterized by execution backend.
 
@@ -291,6 +366,10 @@ class RoundRuntime:
     the buffered backend's ``carried_in``/``carried_out`` columns) — for
     the runtime AND the backend; the default :data:`repro.obs.NULL_TRACER`
     records nothing and perturbs nothing.
+
+    ``ExecSpec.pipeline`` selects the round-driver mode (``"serial"`` |
+    ``"prefetch"``): see the module docstring for the execution timeline.
+    Both modes produce bit-identical trajectories.
     """
 
     def __init__(self, model: ModelAPI, policy: Policy, *,
@@ -309,6 +388,7 @@ class RoundRuntime:
                                     donate=donate, compression=compression,
                                     agg_impl=agg_impl)
         self.backend.set_tracer(self.tracer)
+        self.pipeline = exec.pipeline if exec is not None else "serial"
         self._wmask_cache: dict[bytes, PyTree] = {}
 
     # ------------------------------------------------------------------
@@ -383,6 +463,18 @@ class RoundRuntime:
         Sources may expose ``replan_view(t, budget_left, eta_tail)`` to
         re-estimate the population view (the fleet source does); without it
         the policy's static config is restricted to the remaining horizon.
+
+        Execution timeline: all host-only planning phases of a round
+        (``cohort`` / ``replan`` / key splits / ``plan`` / T_max check /
+        ``stack``) run through one sequential planner. Under
+        ``pipeline="serial"`` it is called inline each round; under
+        ``"prefetch"`` round t+1's call overlaps round t's device step on
+        a worker thread, with a serial-fallback round after every skip or
+        replan event (module docstring has the full picture). Eval results
+        stay device scalars in a pending ring and are materialized at
+        report boundaries, before every ``on_round`` call, on replan
+        events, and at the end of the run — ``History`` always holds plain
+        floats by the time ``run`` returns.
         """
         model, policy, backend = self.model, self.policy, self.backend
         if getattr(policy, "name", "") == "heterofl" and \
@@ -403,106 +495,234 @@ class RoundRuntime:
         U_pad = backend.cohort_pad(source.cohort_size)
         backend.reset_state()        # stateful backends: fresh carry buffer
         needs_ctx = bool(getattr(backend, "needs_ctx", False))
+        prefetch = self.pipeline == "prefetch"
 
         tracer = self.tracer
         hist = History(method=method or policy.name)
         elapsed = 0.0
         wall_start = obs.now()
-        for t in range(rounds):
-            tracer.set_round(t + 1)
-            wall_round0 = obs.now() if tracer.active else 0.0
-            with tracer.span("cohort"):
-                cohort = source.round_cohort(t)
+
+        # -- the sequential host planner ---------------------------------
+        # Everything here reads host state only (source RNG, replanner,
+        # schedule, the PLANNED clock — `plan.elapsed` is known before the
+        # round executes), never a device result, so the prefetcher can run
+        # it one round ahead and the trajectory stays bit-identical. The
+        # planner's clock mirrors `elapsed` exactly: every planned "round"
+        # is later executed, skips spend nothing, and a "stop" halts both.
+        # Telemetry is collected locally and re-emitted at consume time on
+        # the main thread (tracer sinks are not thread-safe).
+        plan_key = key
+        planned_elapsed = 0.0
+
+        def plan_round(t: int) -> _Prepared:
+            nonlocal plan_key, planned_elapsed
+            spans: list = []
+            t_start = t0 = obs.now()
+            cohort = source.round_cohort(t)
+            spans.append(("cohort", t0, obs.now() - t0, {}))
             if cohort is None:
                 # nobody reachable: the round never starts and spends
                 # nothing — credit its planned deadline back so the next
                 # re-solve re-allocates it instead of stranding it
                 if replanner is not None:
                     replanner.note_skip(t)
-                tracer.count("rounds_skipped", 1)
-                continue
+                return _Prepared(t=t, kind="skip", spans=spans,
+                                 t_start=t_start, t_end=obs.now())
+            rep = None
             if replanner is not None:
                 reachable = (cohort.available if cohort.available is not None
                              else source.cohort_size)
                 if replanner.should_replan(t, reachable):
                     view = None
-                    budget_left = max(T_max - elapsed, 1e-6)
+                    budget_left = max(T_max - planned_elapsed, 1e-6)
                     view_fn = getattr(source, "replan_view", None)
                     if view_fn is not None:
                         view = view_fn(t, budget_left, eta[t:rounds])
-                    with tracer.span("replan", reachable=int(reachable)):
-                        ev = replanner.replan(t, budget_left, reachable,
-                                              view)
-                    rec = ev.as_dict()
-                    hist.replans.append(rec)
-                    tracer.event("replan", **rec)
-                    tracer.count("replan_solver_steps", ev.steps)
-                    if verbose:
-                        print(obs.format_replan(hist.method, rec))
-            key, k_round, k_batch = jax.random.split(key, 3)
-            with tracer.span("plan"):
-                plan: RoundPlan = policy.round(k_round, t, view=cohort.view)
-            if elapsed + plan.elapsed > T_max * (1 + 1e-6):
-                break
-            with tracer.span("stack"):
-                xb, yb, wb, mask, U_act = self._prepare(cohort, plan,
-                                                        k_batch, s_max,
-                                                        U_pad)
-                wmasks = (None if plan.width_ratios is None else
-                          self._width_masks(params, plan.width_ratios,
-                                            U_pad))
+                    t0 = obs.now()
+                    ev = replanner.replan(t, budget_left, reachable, view)
+                    spans.append(("replan", t0, obs.now() - t0,
+                                  {"reachable": int(reachable)}))
+                    rep = (ev.as_dict(), int(ev.steps))
+            plan_key, k_round, k_batch = jax.random.split(plan_key, 3)
+            t0 = obs.now()
+            plan: RoundPlan = policy.round(k_round, t, view=cohort.view)
+            spans.append(("plan", t0, obs.now() - t0, {}))
+            if planned_elapsed + plan.elapsed > T_max * (1 + 1e-6):
+                return _Prepared(t=t, kind="stop", spans=spans, replan=rep,
+                                 t_start=t_start, t_end=obs.now())
+            t0 = obs.now()
+            xb, yb, wb, mask, U_act = self._prepare(cohort, plan, k_batch,
+                                                    s_max, U_pad)
+            spans.append(("stack", t0, obs.now() - t0, {}))
             view_cfg = (cohort.view if cohort.view is not None
                         else policy.cfg)
-            ctx = (_round_context(t, elapsed, plan, view_cfg, U_act,
-                                  regions=cohort.regions)
+            ctx = (_round_context(t, planned_elapsed, plan, view_cfg,
+                                  U_act, regions=cohort.regions)
                    if needs_ctx else None)
-            params = backend.run_round(params, xb, yb, wb, mask, plan.p,
-                                       jnp.float32(eta[t]),
-                                       bias_correct=bool(plan.bias_correct),
-                                       wmasks=wmasks, ctx=ctx)
-            elapsed += plan.elapsed
-            if tracer.active:
-                # the clock-model ledger row: planned deadline vs simulated
-                # clock vs measured wall vs the exponential model's view
-                jax.block_until_ready(params)
-                wall_now = obs.now()
-                tracer.count("batch_elements_real",
-                             int(np.minimum(np.asarray(plan.batch_sizes,
-                                                       np.float64)[:U_act],
-                                            float(s_max)).sum()))
-                tracer.count("batch_elements_padded", U_pad * s_max)
-                tracer.gauge("cohort_size", U_act)
-                tracer.event("round", **obs.round_record(
-                    t=t, plan=plan, cfg=view_cfg, L=model.L, U_act=U_act,
-                    U_pad=U_pad, s_max=s_max, sim_total=elapsed,
-                    wall_round_s=wall_now - wall_round0,
-                    wall_total_s=wall_now - wall_start,
-                    available=cohort.available,
-                    carry=getattr(backend, "last_carry", None) or None,
-                    regions=getattr(backend, "last_regions", None) or None))
-            if (t % eval_every == 0) or (t == rounds - 1):
-                with tracer.span("eval"):
-                    acc, loss = eval_fn(params)
-                hist.times.append(elapsed)
-                hist.rounds.append(t + 1)
-                hist.accuracy.append(acc)
-                hist.deadlines.append(float(plan.elapsed))
-                hist.train_loss.append(loss)
-                if cohort.available is not None:
-                    hist.available.append(int(cohort.available))
-                if tracer.active or verbose:
-                    # ONE record for the sink and the console: the verbose
-                    # line renders from exactly what gets recorded
-                    rec = {"round": t + 1, "available": cohort.available,
-                           "cohort": U_act, "sim_total": elapsed,
-                           "T_deadline": float(plan.elapsed),
-                           "acc": float(acc), "loss": float(loss)}
-                    tracer.event("eval", **rec)
+            planned_elapsed += plan.elapsed
+            return _Prepared(t=t, kind="round", spans=spans, replan=rep,
+                             t_start=t_start, t_end=obs.now(),
+                             cohort=cohort, plan=plan, xb=xb, yb=yb, wb=wb,
+                             mask=mask, U_act=U_act, view_cfg=view_cfg,
+                             ctx=ctx,
+                             h2d_bytes=obs.tree_bytes((xb, yb, wb, mask)))
+
+        pool = (concurrent.futures.ThreadPoolExecutor(
+                    max_workers=1, thread_name_prefix="prefetch")
+                if prefetch else None)
+        pending: Optional[concurrent.futures.Future] = None
+        pending_evals: list[int] = []    # History rows awaiting float()
+        warmed = False
+        dispatch_t0: Optional[float] = None
+
+        def drain_evals() -> None:
+            """Materialize deferred eval device scalars into History (the
+            conversion is the sync point; everything before it is free)."""
+            for i in pending_evals:
+                hist.accuracy[i] = float(hist.accuracy[i])
+                hist.train_loss[i] = float(hist.train_loss[i])
+            pending_evals.clear()
+
+        try:
+            for t in range(rounds):
+                tracer.set_round(t + 1)
+                wall_round0 = obs.now() if tracer.active else 0.0
+                if pending is not None:
+                    t0 = obs.now()
+                    prep: _Prepared = pending.result()
+                    pending = None
+                    if tracer.active:
+                        t_res = obs.now()
+                        tracer.count("dispatch_wait_s",
+                                     round(t_res - t0, 6))
+                        tracer.count("prefetch_rounds", 1)
+                        if dispatch_t0 is not None:
+                            # worker wall time hidden behind the device
+                            # dispatch window of the previous round
+                            lo = max(prep.t_start, dispatch_t0)
+                            hi = min(prep.t_end, t_res)
+                            if hi > lo:
+                                tracer.count("prefetch_overlap_s",
+                                             round(hi - lo, 6))
+                else:
+                    prep = plan_round(t)
+                for name, s0, dur, attrs in prep.spans:
+                    tracer.span_record(name, s0, dur, **attrs)
+                if prep.replan is not None:
+                    rec, steps = prep.replan
+                    hist.replans.append(rec)
+                    tracer.event("replan", **rec)
+                    tracer.count("replan_solver_steps", steps)
+                    drain_evals()      # replan events report live state
                     if verbose:
-                        print(obs.format_eval(hist.method, rec))
-            if on_round is not None:
-                with tracer.span("checkpoint"):
-                    on_round(t, params, hist)
+                        print(obs.format_replan(hist.method, rec))
+                if prep.kind == "skip":
+                    tracer.count("rounds_skipped", 1)
+                    continue
+                if prep.kind == "stop":
+                    break
+                plan, U_act, view_cfg = prep.plan, prep.U_act, prep.view_cfg
+                wmasks = None
+                if plan.width_ratios is not None:
+                    # HeteroFL masks read the LIVE params tree — the one
+                    # stack input the planner cannot speculate on
+                    t0 = obs.now()
+                    wmasks = self._width_masks(params, plan.width_ratios,
+                                               U_pad)
+                    tracer.span_record("stack", t0, obs.now() - t0,
+                                       part="wmasks")
+                if prefetch and prep.replan is None and t + 1 < rounds:
+                    # overlap round t+1's host phases with round t's device
+                    # step; a replan round forces the next plan inline (and
+                    # a skip `continue`s before this point)
+                    pending = pool.submit(plan_round, t + 1)
+                if prefetch and not warmed:
+                    # AOT warm-up: compile+execute the round step and the
+                    # eval step on dummies before round 0 dispatches, so
+                    # trace cost never lands inside a measured round
+                    t0 = obs.now()
+                    backend.warm_up(params, prep.xb, prep.yb, prep.wb,
+                                    prep.mask, plan.p, jnp.float32(eta[t]),
+                                    bias_correct=bool(plan.bias_correct),
+                                    wmasks=wmasks, ctx=prep.ctx)
+                    dummy = jax.tree.map(
+                        lambda a: jnp.zeros(jnp.shape(a),
+                                            jnp.result_type(a)), params)
+                    jax.block_until_ready(eval_fn(dummy))
+                    dur = obs.now() - t0
+                    tracer.span_record("warm_up", t0, dur)
+                    tracer.count("warm_up_s", round(dur, 6))
+                    warmed = True
+                available = prep.cohort.available
+                dispatch_t0 = obs.now()
+                params = backend.run_round(
+                    params, prep.xb, prep.yb, prep.wb, prep.mask, plan.p,
+                    jnp.float32(eta[t]),
+                    bias_correct=bool(plan.bias_correct),
+                    wmasks=wmasks, ctx=prep.ctx)
+                tracer.count("h2d_bytes", prep.h2d_bytes)
+                prep.release()       # free this round's double-buffer slot
+                elapsed += plan.elapsed
+                if tracer.active:
+                    # the clock-model ledger row: planned deadline vs
+                    # simulated clock vs measured wall vs the model's view
+                    jax.block_until_ready(params)
+                    wall_now = obs.now()
+                    tracer.count(
+                        "batch_elements_real",
+                        int(np.minimum(np.asarray(plan.batch_sizes,
+                                                  np.float64)[:U_act],
+                                       float(s_max)).sum()))
+                    tracer.count("batch_elements_padded", U_pad * s_max)
+                    tracer.gauge("cohort_size", U_act)
+                    tracer.event("round", **obs.round_record(
+                        t=t, plan=plan, cfg=view_cfg, L=model.L,
+                        U_act=U_act, U_pad=U_pad, s_max=s_max,
+                        sim_total=elapsed,
+                        wall_round_s=wall_now - wall_round0,
+                        wall_total_s=wall_now - wall_start,
+                        available=available,
+                        carry=getattr(backend, "last_carry", None) or None,
+                        regions=getattr(backend, "last_regions",
+                                        None) or None))
+                if (t % eval_every == 0) or (t == rounds - 1):
+                    with tracer.span("eval"):
+                        acc, loss = eval_fn(params)
+                        if tracer.active:
+                            # explicit telemetry sync: the span should
+                            # measure eval compute, not async dispatch
+                            jax.block_until_ready((acc, loss))
+                    hist.times.append(elapsed)
+                    hist.rounds.append(t + 1)
+                    hist.accuracy.append(acc)
+                    hist.deadlines.append(float(plan.elapsed))
+                    hist.train_loss.append(loss)
+                    if available is not None:
+                        hist.available.append(int(available))
+                    pending_evals.append(len(hist.accuracy) - 1)
+                    if tracer.active or verbose:
+                        # ONE record for the sink and the console, rendered
+                        # from exactly what History keeps — only this
+                        # report boundary pays the float() conversion
+                        drain_evals()
+                        rec = {"round": t + 1, "available": available,
+                               "cohort": U_act, "sim_total": elapsed,
+                               "T_deadline": float(plan.elapsed),
+                               "acc": hist.accuracy[-1],
+                               "loss": hist.train_loss[-1]}
+                        tracer.event("eval", **rec)
+                        if verbose:
+                            print(obs.format_eval(hist.method, rec))
+                if on_round is not None:
+                    drain_evals()    # hooks read materialized History
+                    with tracer.span("checkpoint"):
+                        on_round(t, params, hist)
+        finally:
+            if pool is not None:
+                if pending is not None:
+                    pending.cancel()
+                pool.shutdown(wait=True)
+        drain_evals()
         tracer.set_round(None)
         if tracer.active:
             hist.telemetry = tracer.summary()

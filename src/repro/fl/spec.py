@@ -35,7 +35,7 @@ from typing import Any, Optional
 from repro.core.compression import (MODES as COMPRESSION_MODES,
                                     CompressionConfig, make_compression)
 
-__all__ = ["BACKENDS", "AGG_IMPLS", "ExecSpec"]
+__all__ = ["BACKENDS", "AGG_IMPLS", "PIPELINES", "ExecSpec"]
 
 # dense: one vmap over the cohort; chunked: sequential software psum;
 # shard_map: a real client mesh axis; temporal: grad-accumulation scan;
@@ -46,10 +46,16 @@ BACKENDS = ("dense", "chunked", "shard_map", "temporal", "buffered",
 
 AGG_IMPLS = ("jnp", "pallas")
 
+# serial: the classic loop (plan round t, run round t, repeat);
+# prefetch: one-round-lookahead driver — round t+1's host phases run on a
+# worker thread while round t's device step is in flight (see
+# repro.fl.runtime for the execution timeline; trajectories bit-identical)
+PIPELINES = ("serial", "prefetch")
+
 # legacy-kwarg aliases `resolve` understands, in ExecSpec field order
 _FIELDS = ("backend", "chunk_size", "mesh", "local_iters", "l2", "donate",
            "compression", "agg_impl", "lam", "max_age", "buffer_cap",
-           "regions")
+           "regions", "pipeline")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,6 +101,9 @@ class ExecSpec:
     buffer_cap: int = 4
     # hierarchical backend: fallback edge-region count (see class docstring)
     regions: int = 4
+    # round-driver pipelining: "serial" or "prefetch" (one-round lookahead;
+    # bit-identical trajectories — see repro.fl.runtime's timeline docs)
+    pipeline: str = "serial"
 
     def __post_init__(self):
         # normalize the legacy compression spec forms (None | mode string |
@@ -115,6 +124,9 @@ class ExecSpec:
             raise ValueError("max_age and buffer_cap must be >= 1")
         if int(self.regions) < 1:
             raise ValueError(f"regions must be >= 1, got {self.regions}")
+        if self.pipeline not in PIPELINES:
+            raise ValueError(f"unknown pipeline {self.pipeline!r}; "
+                             f"known: {PIPELINES}")
 
     # ------------------------------------------------------------------
     @classmethod
@@ -253,11 +265,35 @@ class ExecSpec:
         g.add_argument("--buffer-cap", type=int, default=None,
                        help="buffered backend: carry ring-buffer slots "
                             "(one per recent round)")
+        g.add_argument("--pipeline", default=None, choices=list(PIPELINES),
+                       help="round-driver pipelining: prefetch overlaps "
+                            "round t+1's host planning/stacking with round "
+                            "t's device step and AOT-warms the round/eval "
+                            "steps before round 0 (trajectories stay "
+                            "bit-identical to serial)")
+        g.add_argument("--compile-cache", default=None, metavar="DIR",
+                       help="enable jax's persistent compilation cache at "
+                            "DIR (jax_compilation_cache_dir); compiled "
+                            "round/eval steps survive process restarts")
 
     @classmethod
     def from_cli(cls, args, *, base: Optional["ExecSpec"] = None,
                  strict: Optional[bool] = None) -> "ExecSpec":
-        """Resolve the spec from parsed :meth:`add_cli_args` flags."""
+        """Resolve the spec from parsed :meth:`add_cli_args` flags.
+
+        Also applies the ``--compile-cache DIR`` side flag: it configures
+        the jax process (persistent compilation cache), not the spec, so it
+        lives here rather than as an ExecSpec field.
+        """
+        cache_dir = getattr(args, "compile_cache", None)
+        if cache_dir:
+            import jax
+            os.makedirs(cache_dir, exist_ok=True)
+            jax.config.update("jax_compilation_cache_dir", cache_dir)
+            # cache everything: by default jax skips "fast to compile"
+            # computations, which is most of a CPU smoke run
+            jax.config.update("jax_persistent_cache_min_compile_time_secs",
+                              0.0)
         compression = None
         if args.compression is not None:
             compression = (args.compression if args.topk_frac is None
@@ -272,4 +308,5 @@ class ExecSpec:
                            compression=compression,
                            agg_impl=args.agg_impl,
                            lam=args.lam, max_age=args.max_age,
-                           buffer_cap=args.buffer_cap)
+                           buffer_cap=args.buffer_cap,
+                           pipeline=getattr(args, "pipeline", None))

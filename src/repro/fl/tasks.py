@@ -197,24 +197,29 @@ def _lm_eval_stats(model: ModelAPI):
 
 
 def lm_eval_metrics(model: ModelAPI, params: PyTree, test_rows,
-                    test_y=None, *, batch: int = 64) -> tuple[float, float]:
+                    test_y=None, *, batch: int = 64
+                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """(next-token accuracy, mean token CE) over held-out token rows.
 
     ``test_rows``: (n, seq+1) int32. Perplexity is ``exp`` of the returned
     loss. ``test_y`` is accepted (and ignored) so the signature matches
-    the classification :func:`repro.fl.runtime.eval_metrics`.
+    the classification :func:`repro.fl.runtime.eval_metrics`. Both metrics
+    come back as DEVICE scalars: per-batch stats accumulate on-device with
+    no host sync, so every batch dispatches asynchronously and the runtime
+    can defer the ``float()`` conversion to a report boundary.
     """
     del test_y
     stats = _lm_eval_stats(model)
     n = int(test_rows.shape[0])
     seq = int(test_rows.shape[1]) - 1
-    correct, nll = 0, 0.0
+    correct = jnp.int32(0)
+    nll = jnp.float32(0.0)
     for i in range(0, n, batch):
         c, s = stats(params, test_rows[i:i + batch])
-        correct += int(c)
-        nll += float(s)
+        correct = correct + c
+        nll = nll + s
     tokens = n * seq
-    return correct / tokens, nll / tokens
+    return correct / float(tokens), nll / float(tokens)
 
 
 # ---------------------------------------------------------------------------

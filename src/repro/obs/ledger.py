@@ -9,7 +9,12 @@ round, the three clocks that model implies and the two it cannot see:
 
 * ``T_deadline``    — the planned deadline ``T_t`` (what the solver spent),
 * ``sim_total``     — the simulated R1/R2 clock after the round,
-* ``wall_round_s``  — measured host wall time of the round (monotonic),
+* ``wall_round_s``  — measured host wall time of the round (monotonic).
+  Under the prefetch pipeline (``ExecSpec.pipeline="prefetch"``) the
+  round's host planning phases ran DURING the previous round's device
+  step, so ``wall_round_s`` covers only consume + dispatch + device work;
+  the hidden planning time lands in the ``prefetch_overlap_s`` counter
+  (:mod:`repro.obs.timeline` renders both),
 * ``pred_full_s``   — the model's expected FULL-depth completion time
   ``max_u (B_u + L * S_u / P_u)``: how long a synchronized-wait server
   would expect to wait for this cohort (the deadline's counterfactual),

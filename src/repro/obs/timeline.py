@@ -19,6 +19,13 @@ When the stream carries the backends' split payload counters
 (``aggregate_bytes_logical`` / ``aggregate_bytes_wire``) a fourth section
 shows per-round bytes on the wire versus the dense-float32 logical payload
 and the resulting compression ratio.
+
+Prefetch-pipelined runs (``ExecSpec.pipeline="prefetch"``) add a fifth
+section from the round driver's pipeline counters: per-round H2D bytes of
+the stacked batches (``h2d_bytes``), worker planning time hidden behind
+the device step (``prefetch_overlap_s``), main-thread stalls on the
+prefetch future (``dispatch_wait_s``), and the one-off AOT warm-up cost
+(``warm_up_s``).
 """
 from __future__ import annotations
 
@@ -29,7 +36,8 @@ import sys
 from repro.obs.ledger import drift_summary, ledger_rows, phase_table
 from repro.obs.trace import PHASES
 
-__all__ = ["BYTE_COUNTERS", "bytes_table", "load_events", "render", "main"]
+__all__ = ["BYTE_COUNTERS", "PIPELINE_COUNTERS", "bytes_table",
+           "counter_table", "load_events", "render", "main"]
 
 
 def load_events(path: str) -> list[dict]:
@@ -71,14 +79,21 @@ def _fmt_bytes(b: float) -> str:
 
 BYTE_COUNTERS = ("aggregate_bytes_logical", "aggregate_bytes_wire")
 
+# the prefetch round driver's counters (repro.fl.runtime): stacked-batch
+# H2D bytes, worker planning time hidden behind the device step, main-
+# thread stalls on the prefetch future, and the one-off AOT warm-up cost
+PIPELINE_COUNTERS = ("h2d_bytes", "prefetch_overlap_s", "dispatch_wait_s",
+                     "warm_up_s")
 
-def bytes_table(records: list[dict]) -> dict[int, dict[str, float]]:
-    """Per-round totals of the split aggregation payload counters:
-    ``{round: {counter_name: bytes}}`` (rounds are 1-based, as stamped by
+
+def counter_table(records: list[dict],
+                  names: tuple) -> dict[int, dict[str, float]]:
+    """Per-round totals of the named ``kind="count"`` records:
+    ``{round: {counter_name: total}}`` (rounds are 1-based, as stamped by
     the runtime; counter-less streams give an empty dict)."""
     out: dict[int, dict[str, float]] = {}
     for r in records:
-        if r.get("kind") != "count" or r.get("name") not in BYTE_COUNTERS:
+        if r.get("kind") != "count" or r.get("name") not in names:
             continue
         rnd = r.get("round")
         if rnd is None:
@@ -86,6 +101,11 @@ def bytes_table(records: list[dict]) -> dict[int, dict[str, float]]:
         row = out.setdefault(int(rnd), {})
         row[r["name"]] = row.get(r["name"], 0.0) + float(r.get("value", 0))
     return out
+
+
+def bytes_table(records: list[dict]) -> dict[int, dict[str, float]]:
+    """Per-round totals of the split aggregation payload counters."""
+    return counter_table(records, BYTE_COUNTERS)
 
 
 def render(records: list[dict], *, title: str = "") -> str:
@@ -195,6 +215,33 @@ def render(records: list[dict], *, title: str = "") -> str:
         out.append("\n-- aggregation payload (logical f32 vs bytes on the "
                    "wire) --")
         out.append(_table(["round", "logical", "wire", "ratio"], rows))
+
+    pt = counter_table(records, PIPELINE_COUNTERS)
+    if pt:
+        rows = []
+        tot = {name: 0.0 for name in PIPELINE_COUNTERS}
+        for rnd in sorted(pt):
+            row = pt[rnd]
+            for name in PIPELINE_COUNTERS:
+                tot[name] += row.get(name, 0.0)
+            rows.append([
+                str(rnd),
+                (_fmt_bytes(row["h2d_bytes"]) if "h2d_bytes" in row
+                 else "—"),
+                (_fmt_ms(row["prefetch_overlap_s"])
+                 if "prefetch_overlap_s" in row else "—"),
+                (_fmt_ms(row["dispatch_wait_s"])
+                 if "dispatch_wait_s" in row else "—"),
+                (_fmt_ms(row["warm_up_s"]) if "warm_up_s" in row else "—"),
+            ])
+        rows.append(["total", _fmt_bytes(tot["h2d_bytes"]),
+                     _fmt_ms(tot["prefetch_overlap_s"]),
+                     _fmt_ms(tot["dispatch_wait_s"]),
+                     _fmt_ms(tot["warm_up_s"])])
+        out.append("\n-- pipeline (H2D bytes, hidden planning ms, prefetch "
+                   "stall ms, warm-up ms) --")
+        out.append(_table(["round", "h2d", "overlap", "stall", "warm_up"],
+                          rows))
     if len(out) <= (1 if title else 0):
         out.append("(no span or round records found)")
     return "\n".join(out)

@@ -42,9 +42,11 @@ __all__ = ["now", "PHASES", "Sink", "MemorySink", "JsonlSink", "Span",
            "Tracer", "NullTracer", "NULL_TRACER", "make_tracer",
            "tree_bytes"]
 
-# canonical phase order of one federated round (timeline rendering order)
-PHASES = ("cohort", "replan", "plan", "stack", "local_train", "aggregate",
-          "eval", "checkpoint")
+# canonical phase order of one federated round (timeline rendering order);
+# warm_up is the pre-round-0 AOT trace/compile/execute of the round + eval
+# steps (prefetch pipeline), charged to the round that triggered it
+PHASES = ("warm_up", "cohort", "replan", "plan", "stack", "local_train",
+          "aggregate", "eval", "checkpoint")
 
 
 def now() -> float:
@@ -193,6 +195,23 @@ class Tracer:
     def span(self, name: str, **attrs) -> Span:
         return Span(self, name, attrs)
 
+    def span_record(self, name: str, t0: float, dur_s: float,
+                    **attrs) -> None:
+        """Emit a span measured elsewhere (the prefetch worker times round
+        t+1's host phases off-thread and the runtime emits them at consume
+        time, so sink writes and summary aggregation stay single-threaded).
+        Identical record shape to a :class:`Span` exit; nesting fields
+        reflect the emission point (the worker runs phases un-nested)."""
+        rec = {"kind": "span", "name": name, "round": self._round,
+               "t0": t0, "dur_s": dur_s,
+               "depth": len(self._stack),
+               "parent": self._stack[-1] if self._stack else None,
+               "seq": self._next_seq()}
+        if attrs:
+            rec.update(attrs)
+        self._note_span(rec)
+        self._emit(rec)
+
     def count(self, name: str, value: float = 1, **attrs) -> None:
         self.counters[name] = self.counters.get(name, 0) + value
         self._emit({"kind": "count", "name": name, "round": self._round,
@@ -261,6 +280,10 @@ class NullTracer:
 
     def span(self, name: str, **attrs) -> _NullSpan:
         return _NULL_SPAN
+
+    def span_record(self, name: str, t0: float, dur_s: float,
+                    **attrs) -> None:
+        pass
 
     def count(self, name: str, value: float = 1, **attrs) -> None:
         pass

@@ -22,7 +22,8 @@ from repro.configs import get_config
 from repro.core.baselines import make_policy
 from repro.core.scheduler import solve
 from repro.core.types import AnalysisConfig
-from repro.fl.backends import BACKENDS, ExecutionBackend, make_backend
+from repro.fl.backends import (BACKENDS, ExecSpec, ExecutionBackend,
+                               make_backend)
 from repro.fl.runtime import RoundRuntime, probe_s_max
 from repro.fl.tasks import lm_task
 from repro.launch.steps import make_train_step
@@ -155,17 +156,22 @@ class _DonationProbe(ExecutionBackend):
         return out
 
 
+@pytest.mark.parametrize("pipeline", ["serial", "prefetch"])
 @pytest.mark.parametrize("backend", BACKENDS)
-def test_donation_safety(setup, backend):
+def test_donation_safety(setup, backend, pipeline):
     """donate=True on every backend: the round step really consumes the
     params buffers, and nothing in the round loop (planning, eval,
-    on_round hook) reads them afterwards."""
+    on_round hook) reads them afterwards. Under the prefetch pipeline the
+    double-buffered stacked batches and the async eval readback must not
+    resurrect a donated buffer either, and the AOT warm-up's dummy round
+    donates its zero-params just like a real one."""
     _, task, acfg, schedule = setup
     policy = make_policy("adel", acfg, schedule=schedule)
     probe = _DonationProbe(make_backend(
         backend, task.model, donate=True,
         chunk_size=2 if backend == "chunked" else None))
-    runtime = RoundRuntime(task.model, policy, backend=probe)
+    runtime = RoundRuntime(task.model, policy, backend=probe,
+                           exec=ExecSpec(pipeline=pipeline))
     rounds = 4
     seen = []
     _, hist = runtime.run(task.source(), rounds=rounds, T_max=TMAX,
@@ -176,8 +182,10 @@ def test_donation_safety(setup, backend):
     assert len(hist.train_loss) == rounds
     assert seen == list(range(rounds))
     # donation is honored on this build: the step itself deleted the
-    # incoming buffers (the probe found nothing left to delete)
-    assert probe.deleted_by_donation == [True] * rounds
+    # incoming buffers (the probe found nothing left to delete); prefetch
+    # adds the warm-up round's dummy params in front
+    steps = rounds + (1 if pipeline == "prefetch" else 0)
+    assert probe.deleted_by_donation == [True] * steps
 
 
 def test_heterofl_width_masks_on_lm(setup):
